@@ -1,0 +1,28 @@
+"""Paper Table 2: Lennard-Jones MD wall-clock per step (strong-scaling
+reference point: 1 core). Derived: particle-steps/second + extrapolated
+216k-particle step time for direct comparison with the paper's 1-core
+1010.69 s / 5000 steps = 202 ms/step."""
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.apps import md
+
+
+def run():
+    rows = []
+    for n_side in (8, 12):
+        cfg = md.MDConfig(n_per_side=n_side)
+        ps = md.init_particles(cfg)
+        ps, _ = md.compute_forces(ps, cfg)
+        step = lambda p: md.md_step(p, cfg)[0]
+        sec, ps = time_fn(step, ps)
+        n = cfg.n_particles
+        rate = n / sec
+        extrap_216k = 216000 / rate
+        rows.append(row(f"md_step_n{n}", sec,
+                        f"{rate:.3g} particle-steps/s; 216k-extrap "
+                        f"{extrap_216k * 1e3:.0f} ms/step (paper 1-core "
+                        f"202 ms)"))
+    # Pallas cell-kernel path (interpret mode on CPU: correctness path, so
+    # report the XLA-engine path as the timing)
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Table 1: memory bandwidth of the benchmark machine (their Xeon:
+11.5 GB/s 1-core). We measure the host's effective stream bandwidth — the
+scaling caveat the paper raises applies to our single-core runs too."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+
+
+def run():
+    n = 64 * 1024 * 1024 // 4  # 64 MB
+    x = jnp.arange(n, dtype=jnp.float32)
+    copy = jax.jit(lambda a: a * 1.000001)
+    sec, _ = time_fn(copy, x)
+    gbs = 2 * n * 4 / sec / 1e9  # read + write
+    return [row("membw_stream_64MB", sec,
+                f"{gbs:.1f} GB/s effective (paper Table 1: 11.5 GB/s/core)")]

@@ -1,0 +1,31 @@
+"""Roofline summary rows from the dry-run artifacts (one row per cell) —
+the production-mesh numbers that complement the host-scale app benches."""
+import json
+import pathlib
+
+from benchmarks.common import row
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run():
+    rows = []
+    single = ARTIFACTS / "single"
+    if not single.exists():
+        return [row("roofline_missing", 0.0,
+                    "run: PYTHONPATH=src python -m repro.launch.dryrun --all")]
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from repro.launch.roofline import enrich
+    for p in sorted(single.glob("*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok") or r.get("tag"):
+            continue
+        r = enrich(r)
+        roof = r["roofline"]
+        rows.append(row(
+            f"roofline_{r['arch']}__{r['shape']}", r["t_bound"],
+            f"dom={roof['dominant']} frac={r['roofline_fraction']:.3f} "
+            f"ideal={r['roofline_fraction_ideal']:.3f} "
+            f"peak={r['memory_per_device']['peak_memory_in_bytes'] / 2**30:.2f}GiB"))
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Table 3: SPH time fractions (computation / imbalance / DLB /
+communication). On one host we report the analogous split: pair-interaction
+computation vs neighbor-structure (cell list) build vs integration, plus
+step throughput."""
+import time
+
+import jax
+
+from benchmarks.common import row, time_fn
+from repro.apps import sph
+from repro.core import cell_list as CL
+
+
+def run():
+    cfg = sph.SPHConfig(dp=0.03, box=(1.2, 0.6), fluid=(0.3, 0.3))
+    ps = sph.init_dam_break(cfg)
+    n = int(ps.count())
+
+    step = lambda p: sph.sph_step(p, cfg, euler=False)[0]
+    sec_step, _ = time_fn(step, ps)
+
+    rates = jax.jit(lambda p: sph.compute_rates(p, cfg)[0])
+    sec_rates, _ = time_fn(rates, ps)
+
+    clist = jax.jit(lambda p: CL.build_cell_list(p, **sph._cl_kw(cfg)).cells)
+    sec_cl, _ = time_fn(clist, ps)
+
+    comp_frac = sec_rates / sec_step
+    nb_frac = sec_cl / sec_step
+    return [
+        row(f"sph_step_n{n}", sec_step, f"{n / sec_step:.3g} particle-steps/s"),
+        row("sph_pair_computation", sec_rates,
+            f"{100 * comp_frac:.0f}% of step (paper Table 3: computation)"),
+        row("sph_neighbor_build", sec_cl,
+            f"{100 * nb_frac:.0f}% of step (cell-list build)"),
+    ]

@@ -1,0 +1,25 @@
+"""Benchmark timing helpers. All benches run scaled-down problems on the CPU
+host and report derived throughput; absolute paper-scale numbers come from
+the dry-run roofline (EXPERIMENTS.md §Roofline)."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Median wall time per call (seconds) of a jitted function."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §6).
+Prints ``name,us_per_call,derived`` CSV.
+
+  bench_membw    — paper Table 1 (memory bandwidth)
+  bench_md       — paper Table 2 (LJ MD strong scaling reference)
+  bench_sph      — paper Table 3 (SPH time fractions)
+  bench_stencil  — paper Table 4 / Fig 7 (Gray-Scott)
+  bench_vortex   — paper Fig 9 (vortex-in-cell, Poisson split)
+  bench_dem      — paper Fig 11 (DEM avalanche)
+  bench_cmaes    — paper Fig 12 (PS-CMA-ES)
+  bench_roofline — production-mesh roofline per dry-run cell
+"""
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import (bench_cmaes, bench_dem, bench_md, bench_membw,
+                            bench_roofline, bench_sph, bench_stencil,
+                            bench_vortex)
+    print("name,us_per_call,derived")
+    for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
+                bench_vortex, bench_dem, bench_cmaes, bench_roofline):
+        for line in mod.run():
+            print(line, flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""Vortex-in-cell ring (paper §4.4): self-propulsion diagnostics.
+
+    PYTHONPATH=src python examples/vortex_ring.py [--steps 40]
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.apps import vortex as V
+from repro.io import vtk
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    args = ap.parse_args()
+    cfg = V.VortexConfig(shape=(64, 32, 32), lengths=(16.0, 5.57, 5.57),
+                         dt=0.02)
+    w = V.project_divfree(V.init_ring(cfg), cfg)
+    z = [float(V.centroid_z(w, cfg))]
+    for i in range(args.steps):
+        w = V.vic_step(w, cfg)
+        if (i + 1) % 10 == 0:
+            z.append(float(V.centroid_z(w, cfg)))
+            print(f"step {i + 1:4d}: centroid z = {z[-1]:.4f} "
+                  f"(+{z[-1] - z[0]:.4f}), enstrophy "
+                  f"{float(V.enstrophy(w)):.5f}")
+    outdir = pathlib.Path("artifacts")
+    outdir.mkdir(exist_ok=True)
+    vtk.write_grid(outdir / "vortex_ring.vtk",
+                   np.linalg.norm(np.asarray(w), axis=-1), name="vort_mag")
+    print(f"ring advanced {z[-1] - z[0]:.4f} (paper Fig 8: self-propelling "
+          f"ring); wrote artifacts/vortex_ring.vtk")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,254 @@
+"""Weakly-compressible SPH dam break (paper §4.2) — DualSPHysics-equivalent
+formulation: cubic-spline kernel, Tait equation of state (γ=7, c_sound
+coefficient 20), Monaghan artificial viscosity, dynamic boundary particles,
+Verlet time stepping with dynamic time-step (CFL + force criteria).
+
+This is the paper's dynamic-load-balancing showcase: the fluid column
+collapses and sloshes, so a static decomposition degrades;
+``run_distributed`` pairs the adaptive-slab ``map()``/``ghost_get()``
+mappings with the in-graph cost-balancer and the SAR trigger (core/dlb.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cell_list as CL
+from repro.core import interactions as I
+from repro.core import particles as P
+
+FLUID, BOUND = 0, 1
+
+
+@dataclasses.dataclass(frozen=True)
+class SPHConfig:
+    dim: int = 2
+    dp: float = 0.02                 # particle spacing
+    rho0: float = 1000.0
+    gamma: float = 7.0
+    cs_coef: float = 20.0            # c = cs_coef * sqrt(g * h_swl)
+    alpha: float = 0.02              # artificial viscosity
+    eta2: float = 1e-6
+    g: float = 9.81
+    cfl: float = 0.2
+    box: Tuple[float, ...] = (1.6, 0.8)
+    fluid: Tuple[float, ...] = (0.4, 0.4)    # dam column extents
+    cell_cap: int = 64
+    verlet_reset: int = 40
+
+    @property
+    def h(self) -> float:
+        return float(np.sqrt(self.dim) * self.dp)
+
+    @property
+    def r_cut(self) -> float:
+        return 2.0 * self.h
+
+    @property
+    def h_swl(self) -> float:
+        return self.fluid[-1]
+
+    @property
+    def c_sound(self) -> float:
+        return self.cs_coef * float(np.sqrt(self.g * self.h_swl))
+
+    @property
+    def b_eos(self) -> float:
+        return self.c_sound ** 2 * self.rho0 / self.gamma
+
+    @property
+    def mass(self) -> float:
+        return self.rho0 * self.dp ** self.dim
+
+
+def kernel_consts(cfg: SPHConfig):
+    h = cfg.h
+    if cfg.dim == 2:
+        alpha_d = 10.0 / (7.0 * np.pi * h * h)
+    else:
+        alpha_d = 1.0 / (np.pi * h ** 3)
+    return h, alpha_d
+
+
+def grad_w_factory(cfg: SPHConfig):
+    """Analytic cubic-spline gradient: returns gradW(dx, r2) (vector)."""
+    h, alpha_d = kernel_consts(cfg)
+
+    def grad_w(dx, r2):
+        r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+        q = r / h
+        dwdq = jnp.where(
+            q <= 1.0, alpha_d * (-3.0 * q + 2.25 * q * q),
+            jnp.where(q <= 2.0, -0.75 * alpha_d * (2.0 - q) ** 2, 0.0))
+        return (dwdq / (h * r))[..., None] * dx
+
+    return grad_w
+
+
+def eos(rho, cfg: SPHConfig):
+    return cfg.b_eos * ((rho / cfg.rho0) ** cfg.gamma - 1.0)
+
+
+def sph_kernel_factory(cfg: SPHConfig):
+    """Momentum + continuity in one fused pass (dict-valued kernel)."""
+    grad_w = grad_w_factory(cfg)
+    m = cfg.mass
+    h = cfg.h
+
+    def kern(dx, r2, wi, wj):
+        gw = grad_w(dx, r2)                       # (…, dim)
+        vij = wi["v"] - wj["v"]
+        rho_i, rho_j = wi["rho"], wj["rho"]
+        P_i, P_j = eos(rho_i, cfg), eos(rho_j, cfg)
+        # artificial viscosity (approaching pairs only)
+        vr = jnp.sum(vij * dx, axis=-1)
+        mu = h * vr / (r2 + cfg.eta2)
+        rho_bar = 0.5 * (rho_i + rho_j)
+        pi_visc = jnp.where(vr < 0.0, -cfg.alpha * cfg.c_sound * mu / rho_bar,
+                            0.0)
+        coef = P_i / jnp.maximum(rho_i * rho_i, 1e-6) \
+            + P_j / jnp.maximum(rho_j * rho_j, 1e-6) + pi_visc
+        acc = -m * coef[..., None] * gw
+        drho = m * jnp.sum(vij * gw, axis=-1)
+        return {"a": acc, "drho": drho}
+
+    return kern
+
+
+# --------------------------------------------------------------------------
+# Geometry
+# --------------------------------------------------------------------------
+
+def init_dam_break(cfg: SPHConfig, capacity_factor: float = 1.4):
+    """Fluid column against the left wall + 3-layer dynamic boundary walls."""
+    dp = cfg.dp
+    dim = cfg.dim
+    box = np.asarray(cfg.box)
+    pts, kinds = [], []
+
+    def lattice(lo, hi):
+        axes = [np.arange(lo[d] + dp / 2, hi[d], dp) for d in range(dim)]
+        g = np.stack(np.meshgrid(*axes, indexing="ij"), -1).reshape(-1, dim)
+        return g
+
+    fl = lattice(np.zeros(dim) + 3 * dp, np.asarray(cfg.fluid) + 3 * dp)
+    pts.append(fl)
+    kinds.append(np.zeros(len(fl), np.int32))
+
+    # dynamic boundary: 3 staggered layers on the floor and side walls
+    # (open top). The fluid sits 3dp above the floor layers.
+    wall = []
+    for layer in range(3):
+        off = (2.5 - layer) * dp  # layers at 2.5dp, 1.5dp, 0.5dp
+        if dim == 2:
+            xs = np.arange(dp / 2, box[0], dp)
+            wall.append(np.stack([xs, np.full_like(xs, off)], -1))  # floor
+            ys = np.arange(3 * dp, box[1], dp)
+            wall.append(np.stack([np.full_like(ys, off), ys], -1))  # left
+            wall.append(np.stack([np.full_like(ys, box[0] - off), ys], -1))
+        else:
+            xs = np.arange(dp / 2, box[0], dp)
+            ys = np.arange(dp / 2, box[1], dp)
+            X, Y = np.meshgrid(xs, ys, indexing="ij")
+            wall.append(np.stack(
+                [X.ravel(), Y.ravel(), np.full(X.size, off)], -1))  # floor
+            zs = np.arange(3 * dp, box[2], dp)
+            Yw, Zw = np.meshgrid(ys, zs, indexing="ij")
+            wall.append(np.stack(
+                [np.full(Yw.size, off), Yw.ravel(), Zw.ravel()], -1))
+            wall.append(np.stack(
+                [np.full(Yw.size, box[0] - off), Yw.ravel(), Zw.ravel()], -1))
+            Xw, Zw = np.meshgrid(xs, zs, indexing="ij")
+            wall.append(np.stack(
+                [Xw.ravel(), np.full(Xw.size, off), Zw.ravel()], -1))
+            wall.append(np.stack(
+                [Xw.ravel(), np.full(Xw.size, box[1] - off), Zw.ravel()], -1))
+    wb = np.concatenate(wall, axis=0)
+    pts.append(wb)
+    kinds.append(np.ones(len(wb), np.int32))
+
+    x = np.concatenate(pts, axis=0)
+    kind = np.concatenate(kinds, axis=0)
+    n = len(x)
+    cap = int(n * capacity_factor)
+    ps = P.from_positions(
+        jnp.asarray(x, jnp.float32), capacity=cap,
+        props={
+            "v": jnp.zeros((n, dim), jnp.float32),
+            "v_prev": jnp.zeros((n, dim), jnp.float32),
+            "rho": jnp.full((n,), cfg.rho0, jnp.float32),
+            "rho_prev": jnp.full((n,), cfg.rho0, jnp.float32),
+            "kind": jnp.asarray(kind),
+            "a": jnp.zeros((n, dim), jnp.float32),
+            "drho": jnp.zeros((n,), jnp.float32),
+        })
+    return ps
+
+
+def _cl_kw(cfg: SPHConfig):
+    lo = (0.0,) * cfg.dim
+    hi = tuple(float(b) for b in cfg.box)
+    gs = CL.grid_shape_for(lo, hi, cfg.r_cut)
+    return dict(box_lo=lo, box_hi=hi, grid_shape=gs,
+                periodic=(False,) * cfg.dim, cell_cap=cfg.cell_cap)
+
+
+def compute_rates(ps: P.ParticleSet, cfg: SPHConfig):
+    cl = CL.build_cell_list(ps, **_cl_kw(cfg))
+    out = I.apply_kernel_cells(ps, cl, sph_kernel_factory(cfg),
+                               r_cut=cfg.r_cut,
+                               prop_names=("v", "rho"))
+    grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
+    fluid = ps.props["kind"] == FLUID
+    a = jnp.where(fluid[:, None], out["a"] + grav, 0.0)
+    return a, out["drho"], cl.overflow
+
+
+def dyn_dt(ps, a, cfg: SPHConfig):
+    amax = jnp.max(jnp.where(ps.valid, jnp.linalg.norm(a, axis=-1), 0.0))
+    dt_f = jnp.sqrt(cfg.h / jnp.maximum(amax, 1e-6))
+    dt_c = cfg.h / cfg.c_sound
+    return cfg.cfl * jnp.minimum(dt_f, dt_c)
+
+
+@partial(jax.jit, static_argnames=("cfg", "euler"))
+def sph_step(ps: P.ParticleSet, cfg: SPHConfig, euler: bool = False):
+    """Verlet step with dynamic dt (DualSPHysics scheme); ``euler=True`` is
+    the periodic stabilization step."""
+    a, drho, overflow = compute_rates(ps, cfg)
+    dt = dyn_dt(ps, a, cfg)
+    v, v_prev = ps.props["v"], ps.props["v_prev"]
+    rho, rho_prev = ps.props["rho"], ps.props["rho_prev"]
+    fluid = (ps.props["kind"] == FLUID)[:, None]
+    if euler:
+        v_new = v + dt * a
+        rho_new = rho + dt * drho
+    else:
+        v_new = v_prev + 2.0 * dt * a
+        rho_new = rho_prev + 2.0 * dt * drho
+    x_new = ps.x + jnp.where(fluid, dt * v + 0.5 * dt * dt * a, 0.0)
+    # clamp into box (boundary-penetration guard)
+    eps = cfg.dp * 0.5
+    x_new = jnp.clip(x_new, eps, jnp.asarray(cfg.box, jnp.float32) - eps)
+    rho_new = jnp.maximum(rho_new, 0.9 * cfg.rho0)  # DualSPHysics floor
+    ps = ps.replace(x=jnp.where(ps.valid[:, None], x_new, ps.x))
+    ps = ps.with_prop("v", jnp.where(fluid & ps.valid[:, None], v_new, 0.0))
+    ps = ps.with_prop("v_prev", v)
+    ps = ps.with_prop("rho", jnp.where(ps.valid, rho_new, rho))
+    ps = ps.with_prop("rho_prev", rho)
+    ps = ps.with_prop("a", a).with_prop("drho", drho)
+    return ps, dt, overflow
+
+
+def run(cfg: SPHConfig, n_steps: int):
+    ps = init_dam_break(cfg)
+    t = 0.0
+    for i in range(n_steps):
+        ps, dt, _ = sph_step(ps, cfg, euler=(i % cfg.verlet_reset == 0))
+        t += float(dt)
+    return ps, t

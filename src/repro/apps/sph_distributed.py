@@ -1,0 +1,186 @@
+"""Distributed SPH with dynamic load balancing — the paper's Table 3
+showcase: the dam-break fluid sloshes across the domain, so a static
+decomposition degrades; slab bounds follow the fluid via the in-graph
+cost balancer, triggered by the SAR heuristic.
+
+Step =  rates over local+ghost (ghosts carry v, rho — the property-subset
+ghost_get) → integrate (local) → map() → [SAR? → balanced_bounds → map()].
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.apps import sph
+from repro.core import cell_list as CL
+from repro.core import dlb
+from repro.core import interactions as I
+from repro.core import mappings as M
+from repro.core import particles as PS
+
+
+def _padded_cl_kw(cfg: sph.SPHConfig):
+    lo = (-cfg.r_cut,) + (0.0,) * (cfg.dim - 1)
+    hi = (cfg.box[0] + cfg.r_cut,) + tuple(cfg.box[1:])
+    gs = CL.grid_shape_for(lo, hi, cfg.r_cut)
+    return dict(box_lo=lo, box_hi=hi, grid_shape=gs,
+                periodic=(False,) * cfg.dim, cell_cap=cfg.cell_cap)
+
+
+def make_distributed_step(mesh: Mesh, cfg: sph.SPHConfig,
+                          example: PS.ParticleSet, axis_name="shards",
+                          bucket_cap=2048, ghost_cap=2048):
+    spec = M.ps_specs(example, axis_name)
+    kern = sph.sph_kernel_factory(cfg)
+    cl_kw = _padded_cl_kw(cfg)
+    ghost_props = ("v", "rho", "kind")
+
+    def local_step(ps: PS.ParticleSet, bounds, euler):
+        # ghosts carry only the properties the kernel reads (paper §3.4)
+        ghosts, ovf_g = M.ghost_get_local(
+            ps, bounds, cfg.r_cut, axis_name, ghost_cap, periodic=False,
+            box_len=float(cfg.box[0]), prop_names=ghost_props)
+        gp = ghosts.as_particles()
+        combo = PS.ParticleSet(
+            x=jnp.concatenate([ps.x, gp.x]),
+            props={k: jnp.concatenate([ps.props[k], gp.props[k]])
+                   for k in ghost_props},
+            valid=jnp.concatenate([ps.valid, gp.valid]))
+        cl = CL.build_cell_list(combo, **cl_kw)
+        out = I.apply_kernel_cells(combo, cl, kern, r_cut=cfg.r_cut,
+                                   prop_names=("v", "rho"))
+        n = ps.capacity
+        grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
+        fluid = ps.props["kind"] == sph.FLUID
+        a = jnp.where(fluid[:, None], out["a"][:n] + grav, 0.0)
+        drho = out["drho"][:n]
+        # global dynamic dt (pmax over shards)
+        amax = jnp.max(jnp.where(ps.valid,
+                                 jnp.linalg.norm(a, axis=-1), 0.0))
+        amax = jax.lax.pmax(amax, axis_name)
+        dt = cfg.cfl * jnp.minimum(jnp.sqrt(cfg.h / jnp.maximum(amax, 1e-6)),
+                                   cfg.h / cfg.c_sound)
+        # integrate (same scheme as the serial app)
+        v, v_prev = ps.props["v"], ps.props["v_prev"]
+        rho, rho_prev = ps.props["rho"], ps.props["rho_prev"]
+        fl = fluid[:, None]
+        v_new = jnp.where(euler, v + dt * a, v_prev + 2 * dt * a)
+        rho_new = jnp.where(euler, rho + dt * drho, rho_prev + 2 * dt * drho)
+        x_new = ps.x + jnp.where(fl, dt * v + 0.5 * dt * dt * a, 0.0)
+        eps = cfg.dp * 0.5
+        x_new = jnp.clip(x_new, eps,
+                         jnp.asarray(cfg.box, jnp.float32) - eps)
+        rho_new = jnp.maximum(rho_new, 0.9 * cfg.rho0)
+        vm = ps.valid[:, None]
+        ps = ps.replace(x=jnp.where(vm, x_new, ps.x))
+        ps = ps.with_prop("v", jnp.where(fl & vm, v_new, 0.0))
+        ps = ps.with_prop("v_prev", v)
+        ps = ps.with_prop("rho", jnp.where(ps.valid, rho_new, rho))
+        ps = ps.with_prop("rho_prev", rho)
+        # migrate
+        ps, ovf_m = M.map_particles_local(ps, bounds, axis_name, bucket_cap)
+        overflow = jnp.maximum(jnp.maximum(ovf_g, ovf_m),
+                               jax.lax.pmax(cl.overflow, axis_name))
+        # per-shard load (for SAR / imbalance telemetry)
+        load = jax.lax.all_gather(jnp.sum(ps.valid), axis_name)
+        return ps, dt, overflow, load
+
+    stepped = jax.shard_map(
+        local_step, mesh=mesh, in_specs=(spec, P(), P()),
+        out_specs=(spec, P(), P(), P()), check_vma=False)
+    return jax.jit(stepped)
+
+
+def make_rebalance(mesh: Mesh, cfg: sph.SPHConfig, example: PS.ParticleSet,
+                   ndev: int, axis_name="shards", bucket_cap=2048):
+    """Cost-balanced slab bounds + map() under the new decomposition —
+    the DLB 'repartition + migrate' pair (paper §3.5)."""
+    spec = M.ps_specs(example, axis_name)
+
+    def local(ps, bounds):
+        hist = dlb.histogram_cost(ps.x[:, 0],
+                                  jnp.where(ps.valid, 1.0, 0.0),
+                                  0.0, float(cfg.box[0]), 256)
+        hist = jax.lax.psum(hist, axis_name)
+        new_bounds = dlb.bounds_from_histogram(hist, ndev, 0.0,
+                                               float(cfg.box[0]))
+        ps, ovf = M.map_particles_local(ps, new_bounds, axis_name,
+                                        bucket_cap)
+        return ps, new_bounds, ovf
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, P()),
+                       out_specs=(spec, P(), P()), check_vma=False)
+    return jax.jit(fn)
+
+
+def run_distributed(cfg: sph.SPHConfig, n_steps: int, mesh, ndev: int,
+                    cap_factor: float = 3.0, axis_name="shards",
+                    use_sar: bool = True, imb_threshold: float = 0.3,
+                    min_rebalance_gap: int = 10):
+    """Driver: returns (ps, t, n_rebalances, imbalance trace).
+
+    Rebalance trigger = SAR (degrading balance) OR imbalance threshold
+    (paper §3.5: 'automatically determined using SAR or specified by the
+    user program' — SAR alone cannot fire on a *constant* imbalance, since
+    the amortized-cost curve never rises)."""
+    import time as _time
+    ps0 = sph.init_dam_break(cfg, capacity_factor=1.05)
+    n = int(ps0.count())
+    cap_per_dev = int(n / ndev * cap_factor)
+    # initial decomposition: uniform slabs; global map by host scatter
+    xs = np.asarray(ps0.x)[np.asarray(ps0.valid)]
+    props = {k: np.asarray(v)[np.asarray(ps0.valid)]
+             for k, v in ps0.props.items()}
+    bounds = dlb.uniform_bounds(ndev, 0.0, float(cfg.box[0]))
+    owner = np.clip(np.searchsorted(np.asarray(bounds), xs[:, 0], "right")
+                    - 1, 0, ndev - 1)
+    cap = ndev * cap_per_dev
+    X = np.full((cap, cfg.dim), PS.ParticleSet.FILL, np.float32)
+    PR = {k: np.zeros((cap,) + v.shape[1:], v.dtype) for k, v in props.items()}
+    V = np.zeros(cap, bool)
+    for d in range(ndev):
+        rows = np.nonzero(owner == d)[0]
+        assert len(rows) <= cap_per_dev
+        b = d * cap_per_dev
+        X[b:b + len(rows)] = xs[rows]
+        for k in PR:
+            PR[k][b:b + len(rows)] = props[k][rows]
+        V[b:b + len(rows)] = True
+    ps = PS.ParticleSet(x=jnp.asarray(X),
+                        props={k: jnp.asarray(v) for k, v in PR.items()},
+                        valid=jnp.asarray(V))
+    sh = NamedSharding(mesh, P(axis_name))
+    ps = jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
+
+    step = make_distributed_step(mesh, cfg, ps, axis_name)
+    rebalance = make_rebalance(mesh, cfg, ps, ndev, axis_name)
+    sar = dlb.SARController(rebalance_cost=0.02)
+    t = 0.0
+    n_reb = 0
+    last_reb = -10**9
+    imb_trace = []
+    for i in range(n_steps):
+        t0 = _time.perf_counter()
+        ps, dt, ovf, load = step(ps, bounds, jnp.asarray(
+            i % cfg.verlet_reset == 0))
+        assert int(ovf) == 0, f"overflow at step {i}"
+        t += float(dt)
+        wall = _time.perf_counter() - t0
+        load = np.asarray(load, np.float64)
+        imb = float(load.max() / max(load.mean(), 1.0) - 1.0)
+        imb_trace.append(imb)
+        # SAR: imbalance-cost proxy = step wall time × imbalance fraction
+        fire_sar = use_sar and sar.observe(wall * (1 + imb), wall)
+        fire_thr = (imb > imb_threshold
+                    and i - last_reb >= min_rebalance_gap)
+        if fire_sar or fire_thr:
+            ps, bounds, ovf = rebalance(ps, bounds)
+            assert int(ovf) == 0
+            n_reb += 1
+            last_reb = i
+            sar.reset()
+    return ps, t, n_reb, imb_trace

@@ -1,0 +1,17 @@
+"""repro.core — OpenFPM's abstractions in JAX.
+
+Data abstractions:  ParticleSet (particles.py), distributed grids (grid.py).
+Decomposition:      domain.py, decomposition.py, graph_partition.py, hilbert.py.
+Mappings:           mappings.py (map / ghost_get / ghost_put).
+Acceleration:       cell_list.py (cell + Verlet lists), interactions.py.
+Hybrid methods:     interp.py (M'4 particle-mesh interpolation).
+Load balancing:     dlb.py (cost models, in-graph slab balancer, SAR trigger).
+"""
+from . import cell_list, decomposition, dlb, domain, graph_partition, grid
+from . import hilbert, interactions, interp, mappings, particles
+
+from .domain import Box, BoundaryConditions, Domain, Ghost, make_domain, PERIODIC, NON_PERIODIC
+from .particles import ParticleSet, empty, from_positions, init_grid
+from .decomposition import Decomposition, decompose, rebalance
+from .cell_list import CellList, VerletList, build_cell_list, build_verlet, grid_shape_for
+from .mappings import GhostLayer, ghost_get_local, ghost_put_local, map_particles_local

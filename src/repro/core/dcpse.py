@@ -1,0 +1,130 @@
+"""DC-PSE: Discretization-Corrected Particle Strength Exchange operators.
+
+The paper lists DC-PSE (Schrader, Reboux & Sbalzarini, JCP 2010 — their ref
+[37]) as planned future work (§5): consistent discretization of arbitrary
+differential operators on *arbitrary* (scattered, adaptive) particle
+distributions. We implement it here as a beyond-paper extension, on top of
+the same cell-list/Verlet substrate as the interaction engine.
+
+For a derivative multi-index α, DC-PSE builds per-particle kernel weights
+w_ij such that Σ_j w_ij (f_j - f_i) reproduces D^α f at x_i to order r, by
+solving a small moment system per particle:
+
+    A_i c_i = b,   A_i[m, n] = Σ_j  z_ij^{β_m} z_ij^{β_n} W(z_ij)
+    (z_ij = (x_j - x_i)/ε, β over monomials with |β| ≤ |α| + r - 1,
+     b_m = (-1)^{|α|} D^α(z^{β_m})|_0 — i.e. α!·δ_{β_m,α})
+
+and w_ij = Σ_m c_m z_ij^{β_m} W(z_ij) / ε^{|α|}. Vectorized: one vmapped
+(n_moments × n_moments) solve per particle — trivially batched on the VPU.
+
+Validated on polynomial fields (exact up to the approximation order) and
+against analytic derivatives of smooth fields (tests/test_dcpse.py).
+"""
+from __future__ import annotations
+
+import itertools
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cell_list import CellList, VerletList
+from repro.core.particles import ParticleSet
+
+
+def multi_indices(dim: int, max_order: int) -> np.ndarray:
+    """All multi-indices β with 1 <= |β| <= max_order (constant term is
+    excluded: DC-PSE operators annihilate constants by construction)."""
+    out = [b for b in itertools.product(range(max_order + 1), repeat=dim)
+           if 1 <= sum(b) <= max_order]
+    out.sort(key=lambda b: (sum(b), b))
+    return np.asarray(out, np.int32)
+
+
+def _factorial(n: int) -> int:
+    return int(np.prod(range(1, n + 1))) if n > 1 else 1
+
+
+@partial(jax.jit, static_argnames=("alpha", "order"))
+def dcpse_apply(ps: ParticleSet, vl: VerletList, f: jax.Array, *,
+                alpha: Tuple[int, ...], order: int = 2,
+                epsilon: float | None = None, rc_over_eps: float = 3.0):
+    """Apply D^alpha to the particle field ``f`` (cap,) at every particle.
+
+    alpha: derivative multi-index, e.g. (1, 0) = ∂/∂x, (2, 0)+(0, 2) via two
+    calls = Laplacian in 2D. order: desired approximation order r.
+    epsilon: kernel scale (defaults to r_cut / rc_over_eps estimated from
+    the Verlet list's build radius via mean neighbor distance).
+    """
+    dim = ps.dim
+    cap = ps.capacity
+    k_max = vl.k_max
+    a_order = int(sum(alpha))
+    betas = multi_indices(dim, a_order + order - 1)
+    n_m = len(betas)
+    betas_j = jnp.asarray(betas, jnp.float32)          # (n_m, dim)
+
+    xm = ps.masked_x()
+    nbr = vl.nbr
+    ok = nbr < cap
+    xj = xm[jnp.minimum(nbr, cap - 1)]                  # (cap, k_max, dim)
+    dx = xj - xm[:, None, :]                            # (cap, k_max, dim)
+
+    if epsilon is None:
+        # per-particle scale: mean neighbor distance (adaptive resolution)
+        dist = jnp.sqrt(jnp.sum(dx * dx, -1))
+        eps = (jnp.sum(jnp.where(ok, dist, 0.0), -1)
+               / jnp.maximum(jnp.sum(ok, -1), 1))
+        eps = jnp.maximum(eps, 1e-12)[:, None]
+    else:
+        eps = jnp.full((cap, 1), epsilon, jnp.float32)
+
+    z = dx / eps[..., None]                             # (cap, k_max, dim)
+    w_gauss = jnp.exp(-jnp.sum(z * z, -1))              # (cap, k_max)
+    w_gauss = jnp.where(ok, w_gauss, 0.0)
+
+    # monomials z^beta: (cap, k_max, n_m)
+    zb = jnp.prod(z[:, :, None, :] ** betas_j[None, None, :, :], axis=-1)
+
+    # moment system A (cap, n_m, n_m); rhs b (n_m,): with the (f_j - f_i)
+    # form the consistency condition is Σ_j w z^β W = α!·δ_{β,α} (the
+    # (-1)^{|α|} of classic PSE belongs to its mirrored-kernel form).
+    A = jnp.einsum("pkm,pkn,pk->pmn", zb, zb, w_gauss)
+    b = jnp.zeros((n_m,), jnp.float32)
+    match = np.all(betas == np.asarray(alpha, np.int32), axis=1)
+    coef = float(np.prod([_factorial(a) for a in alpha]))
+    b = b.at[np.nonzero(match)[0]].set(coef)
+
+    # regularized solve (scattered neighborhoods can be near-degenerate)
+    A = A + 1e-8 * jnp.eye(n_m)[None]
+    c = jnp.linalg.solve(A, jnp.broadcast_to(b, (cap, n_m))[..., None])[..., 0]
+
+    w = jnp.einsum("pm,pkm,pk->pk", c, zb, w_gauss)     # (cap, k_max)
+    fj = f[jnp.minimum(nbr, cap - 1)]
+    df = jnp.where(ok, fj - f[:, None], 0.0)
+    out = jnp.sum(w * df, axis=-1) / eps[:, 0] ** a_order
+    return jnp.where(ps.valid, out, 0.0)
+
+
+def laplacian(ps: ParticleSet, vl: VerletList, f: jax.Array, *,
+              order: int = 2, epsilon: float | None = None) -> jax.Array:
+    dim = ps.dim
+    out = jnp.zeros_like(f)
+    for d in range(dim):
+        alpha = tuple(2 if i == d else 0 for i in range(dim))
+        out = out + dcpse_apply(ps, vl, f, alpha=alpha, order=order,
+                                epsilon=epsilon)
+    return out
+
+
+def gradient(ps: ParticleSet, vl: VerletList, f: jax.Array, *,
+             order: int = 2, epsilon: float | None = None) -> jax.Array:
+    dim = ps.dim
+    comps = []
+    for d in range(dim):
+        alpha = tuple(1 if i == d else 0 for i in range(dim))
+        comps.append(dcpse_apply(ps, vl, f, alpha=alpha, order=order,
+                                 epsilon=epsilon))
+    return jnp.stack(comps, axis=-1)

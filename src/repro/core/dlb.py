@@ -1,0 +1,131 @@
+"""Dynamic load balancing (paper §3.5).
+
+Two cooperating layers, mirroring the paper:
+
+  * **Cost model + repartitioning** — host-side: per-sub-sub-domain compute
+    costs (e.g. particle counts or measured wall-clock) feed
+    ``decomposition.rebalance`` (graph repartition with migration-cost soft
+    constraint). For the device data plane's adaptive-slab decomposition, we
+    additionally provide an *in-graph* balancer: ``balanced_bounds`` computes
+    cost-equalizing slab boundaries from a particle histogram entirely inside
+    jit — re-decomposition without recompilation, the TPU-native upgrade of
+    the paper's scheme.
+
+  * **SAR trigger (Stop-At-Rise, Moon & Saltz)** — decides *when* to
+    rebalance: rebalance when the time-averaged cost of continuing with the
+    current (degrading) decomposition starts to rise above the amortized cost
+    of re-decomposing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# In-graph adaptive-slab balancer
+# --------------------------------------------------------------------------
+
+def balanced_bounds(x_axis: jax.Array, valid: jax.Array, ndev: int,
+                    box_lo: float, box_hi: float, *, nbins: int = 256,
+                    weights: Optional[jax.Array] = None) -> jax.Array:
+    """Cost-equalizing slab boundaries (ndev+1,) from a weighted histogram of
+    particle slab-coordinates. Pure jnp — callable inside jit/shard_map (after
+    a psum of the histogram on the distributed path)."""
+    w = jnp.where(valid, 1.0 if weights is None else weights, 0.0)
+    hist = histogram_cost(x_axis, w, box_lo, box_hi, nbins)
+    return bounds_from_histogram(hist, ndev, box_lo, box_hi)
+
+
+def histogram_cost(x_axis: jax.Array, w: jax.Array, box_lo: float,
+                   box_hi: float, nbins: int) -> jax.Array:
+    idx = jnp.clip(((x_axis - box_lo) / (box_hi - box_lo) * nbins)
+                   .astype(jnp.int32), 0, nbins - 1)
+    return jnp.zeros(nbins, jnp.float32).at[idx].add(w.astype(jnp.float32))
+
+
+def bounds_from_histogram(hist: jax.Array, ndev: int, box_lo: float,
+                          box_hi: float) -> jax.Array:
+    """Invert the cumulative cost to equal-cost quantile boundaries, with
+    linear interpolation within bins (avoids degenerate empty slabs)."""
+    nbins = hist.shape[0]
+    # tiny uniform floor keeps the cumulative strictly increasing (empty
+    # regions get geometrically proportional slabs instead of zero width)
+    hist = hist + jnp.maximum(jnp.sum(hist), 1.0) * (1e-6 / nbins)
+    cum = jnp.concatenate([jnp.zeros(1, hist.dtype), jnp.cumsum(hist)])
+    total = cum[-1]
+    targets = total * jnp.arange(1, ndev) / ndev
+    hi_idx = jnp.clip(jnp.searchsorted(cum, targets, side="left"), 1, nbins)
+    c0 = cum[hi_idx - 1]
+    c1 = cum[hi_idx]
+    frac = (targets - c0) / jnp.maximum(c1 - c0, 1e-30)
+    pos_bins = (hi_idx - 1).astype(hist.dtype) + frac
+    h = (box_hi - box_lo) / nbins
+    inner = box_lo + pos_bins * h
+    return jnp.concatenate([jnp.asarray([box_lo], hist.dtype), inner,
+                            jnp.asarray([box_hi], hist.dtype)]).astype(jnp.float32)
+
+
+def uniform_bounds(ndev: int, box_lo: float, box_hi: float) -> jax.Array:
+    return jnp.linspace(box_lo, box_hi, ndev + 1, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# SAR heuristic (Stop-At-Rise) — when to rebalance
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SARController:
+    """Stop-At-Rise trigger (paper §3.5, ref [56]).
+
+    After each step, feed the observed per-step imbalance cost
+    ``I = t_max - t_mean`` (seconds). Let C be the measured cost of one
+    re-decomposition. SAR rebalances when the running average
+
+        W(n) = (C + sum_{i<=n} I_i) / n
+
+    stops decreasing — i.e. the amortized cost of having rebalanced n steps
+    ago has hit its minimum.
+    """
+
+    rebalance_cost: float = 0.05
+    _sum_imb: float = 0.0
+    _n: int = 0
+    _w_prev: float = float("inf")
+
+    def observe(self, t_max: float, t_mean: float) -> bool:
+        self._sum_imb += max(t_max - t_mean, 0.0)
+        self._n += 1
+        w = (self.rebalance_cost + self._sum_imb) / self._n
+        rise = w > self._w_prev
+        self._w_prev = w
+        if rise:
+            self.reset()
+            return True
+        return False
+
+    def reset(self) -> None:
+        self._sum_imb = 0.0
+        self._n = 0
+        self._w_prev = float("inf")
+
+    def update_rebalance_cost(self, measured: float, ema: float = 0.5) -> None:
+        self.rebalance_cost = ema * measured + (1 - ema) * self.rebalance_cost
+
+
+# --------------------------------------------------------------------------
+# Host-side cost measurement for the graph repartitioner
+# --------------------------------------------------------------------------
+
+def ssd_costs_from_positions(dec, x: np.ndarray, valid: np.ndarray,
+                             per_particle_cost: float = 1.0) -> np.ndarray:
+    """Per-sub-sub-domain compute cost from particle counts (host-side)."""
+    x = np.asarray(x)[np.asarray(valid)]
+    cells = dec.cell_of_position(x)
+    counts = np.bincount(cells, minlength=dec.n_ssd).astype(np.float64)
+    # a cell with no particles still costs a little (cell-list traversal)
+    return per_particle_cost * counts + 0.01

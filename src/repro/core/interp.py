@@ -1,0 +1,109 @@
+"""Moment-conserving particle-mesh / mesh-particle interpolation (paper §2,
+§4.4) with the M'4 kernel used by the vortex-in-cell application.
+
+M'4 (Monaghan): W(s) =
+    1 - 5/2 s^2 + 3/2 s^3          0 <= s < 1
+    1/2 (2 - s)^2 (1 - s)          1 <= s < 2
+    0                              s >= 2
+
+Support is 4 nodes per axis. P2M is a scatter-add over the 4^dim stencil
+(unrolled at trace time); M2P is the corresponding gather. Grids are
+node-centered: node i sits at ``lo + i*h`` with spacing h = L/n on periodic
+axes (node n would alias node 0) and h = L/(n-1) otherwise.
+
+These pure-jnp implementations are also the oracles for the
+``kernels/m4_interp`` Pallas kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def m4_prime(s: jax.Array) -> jax.Array:
+    s = jnp.abs(s)
+    w_inner = 1.0 - 2.5 * s**2 + 1.5 * s**3
+    w_outer = 0.5 * (2.0 - s) ** 2 * (1.0 - s)
+    return jnp.where(s < 1.0, w_inner, jnp.where(s < 2.0, w_outer, 0.0))
+
+
+def _stencil_offsets(dim: int) -> np.ndarray:
+    rng = [(-1, 0, 1, 2)] * dim
+    return np.stack(np.meshgrid(*rng, indexing="ij"), axis=-1).reshape(-1, dim)
+
+
+def _node_spacing(shape, box_lo, box_hi, periodic):
+    lo = np.asarray(box_lo, np.float64)
+    hi = np.asarray(box_hi, np.float64)
+    n = np.asarray(shape, np.float64)
+    per = np.asarray(periodic, bool)
+    h = np.where(per, (hi - lo) / n, (hi - lo) / np.maximum(n - 1, 1))
+    return lo, h
+
+
+def _base_and_frac(x, shape, box_lo, box_hi, periodic):
+    lo, h = _node_spacing(shape, box_lo, box_hi, periodic)
+    s = (x - jnp.asarray(lo, x.dtype)) / jnp.asarray(h, x.dtype)
+    base = jnp.floor(s).astype(jnp.int32)
+    frac = s - base.astype(x.dtype)
+    return base, frac
+
+
+def _wrap_index(idx, shape, periodic):
+    out = []
+    for d, n in enumerate(shape):
+        i = idx[..., d]
+        if periodic[d]:
+            i = jnp.mod(i, n)
+        else:
+            i = jnp.clip(i, 0, n - 1)
+        out.append(i)
+    return tuple(out)
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
+def p2m(x: jax.Array, value: jax.Array, valid: jax.Array, *,
+        shape: Tuple[int, ...], box_lo, box_hi, periodic) -> jax.Array:
+    """Particle→mesh: scatter ``value`` (N,) or (N, C) onto the grid with M'4
+    weights. Returns array of ``shape`` (+ trailing C)."""
+    dim = len(shape)
+    base, frac = _base_and_frac(x, shape, box_lo, box_hi, periodic)
+    vec = value.ndim == 2
+    out_shape = shape + ((value.shape[1],) if vec else ())
+    out = jnp.zeros(out_shape, value.dtype)
+    vm = jnp.where(valid, 1.0, 0.0).astype(value.dtype)
+    for off in _stencil_offsets(dim):
+        idx = base + jnp.asarray(off, jnp.int32)
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        w = (w * vm).astype(value.dtype)
+        contrib = value * (w[:, None] if vec else w)
+        out = out.at[_wrap_index(idx, shape, periodic)].add(contrib)
+    return out
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
+def m2p(field: jax.Array, x: jax.Array, valid: jax.Array, *,
+        shape: Tuple[int, ...], box_lo, box_hi, periodic) -> jax.Array:
+    """Mesh→particle: gather the field at particle positions with M'4
+    weights. ``field`` has shape ``shape`` (+ trailing C)."""
+    dim = len(shape)
+    base, frac = _base_and_frac(x, shape, box_lo, box_hi, periodic)
+    vec = field.ndim == dim + 1
+    out = jnp.zeros(x.shape[:1] + ((field.shape[-1],) if vec else ()),
+                    field.dtype)
+    for off in _stencil_offsets(dim):
+        idx = base + jnp.asarray(off, jnp.int32)
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        v = field[_wrap_index(idx, shape, periodic)]
+        w = w.astype(field.dtype)
+        out = out + v * (w[:, None] if vec else w)
+    vm = valid.reshape(valid.shape + (1,) * (out.ndim - 1))
+    return jnp.where(vm, out, 0)

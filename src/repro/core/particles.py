@@ -1,0 +1,185 @@
+"""ParticleSet — the transparently distributed particle data structure.
+
+OpenFPM's ``vector_dist<dim, T, aggregate<...>>`` (paper §3.1, Fig. 2) holds
+positions plus an aggregate of arbitrarily typed properties. The JAX/TPU
+rendering:
+
+  * arbitrary properties  →  a *pytree* ``props`` dict (any nesting, any
+    dtype). jit specializes on the pytree structure exactly where C++ TMP
+    specialized on template parameters (DESIGN.md §2).
+  * ragged per-processor storage  →  **fixed-capacity slot arrays** with a
+    validity mask. XLA needs static shapes; capacity is provisioned with
+    headroom and overflow is detected (it triggers re-provisioning at the
+    next control-plane step, like OpenFPM re-decomposition).
+  * SoA memory layout (``memory_traits_lin``)  →  the natural dict-of-arrays
+    layout here; XLA owns physical layout.
+
+A ParticleSet is a pytree, so it flows through jit / shard_map / scan
+unchanged. All operations are functional.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ParticleSet:
+    """Fixed-capacity particle set.
+
+    Attributes:
+      x:     (cap, dim) positions. Invalid slots hold ``FILL`` (a large
+             sentinel coordinate outside any domain) so they never enter any
+             cell/neighbor structure.
+      props: pytree of arrays with leading dim cap.
+      valid: (cap,) bool slot-occupancy mask.
+    """
+
+    x: jax.Array
+    props: Dict[str, Any]
+    valid: jax.Array
+
+    FILL = 1.0e30
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.x.shape[1]
+
+    def count(self) -> jax.Array:
+        return jnp.sum(self.valid)
+
+    # -- functional updates --------------------------------------------------
+    def replace(self, **kw) -> "ParticleSet":
+        return dataclasses.replace(self, **kw)
+
+    def with_prop(self, name: str, value: jax.Array) -> "ParticleSet":
+        props = dict(self.props)
+        props[name] = value
+        return self.replace(props=props)
+
+    def masked_x(self) -> jax.Array:
+        """Positions with invalid slots pushed to the FILL sentinel."""
+        return jnp.where(self.valid[:, None], self.x,
+                         jnp.full_like(self.x, self.FILL))
+
+    def compact(self) -> "ParticleSet":
+        """Stable-sort valid slots to the front (cache-friendly iteration —
+        the paper's re-ordering iterators, §3.6)."""
+        order = jnp.argsort(~self.valid, stable=True)
+        return self.gather(order)
+
+    def gather(self, idx: jax.Array) -> "ParticleSet":
+        return ParticleSet(
+            x=self.x[idx],
+            props=jax.tree.map(lambda a: a[idx], self.props),
+            valid=self.valid[idx],
+        )
+
+    def where(self, keep: jax.Array) -> "ParticleSet":
+        """Invalidate slots where ``keep`` is False (particle removal)."""
+        return self.replace(valid=self.valid & keep)
+
+    def add(self, other: "ParticleSet") -> "ParticleSet":
+        """Insert ``other``'s valid particles into this set's free slots.
+
+        Deterministic: free slots are filled in index order. If there are
+        more incoming particles than free slots the surplus is dropped and
+        reflected in the overflow count returned by :func:`add_count`.
+        """
+        ps, _ = self.add_count(other)
+        return ps
+
+    def add_count(self, other: "ParticleSet"):
+        free = ~self.valid
+        # rank of each free slot among free slots
+        free_rank = jnp.cumsum(free) - 1
+        inc_rank = jnp.cumsum(other.valid) - 1
+        n_free = jnp.sum(free)
+        n_inc = jnp.sum(other.valid)
+        # destination slot for each incoming particle: the k-th incoming
+        # valid particle goes to the k-th free slot.
+        free_slots = jnp.nonzero(free, size=self.capacity, fill_value=self.capacity)[0]
+        dest = jnp.where(other.valid & (inc_rank < n_free),
+                         free_slots[jnp.clip(inc_rank, 0, self.capacity - 1)],
+                         self.capacity)  # out-of-range = dropped
+        def scat(dst_arr, src_arr):
+            return dst_arr.at[dest].set(src_arr, mode="drop")
+        new_x = scat(self.x, other.x)
+        new_props = jax.tree.map(scat, self.props, other.props)
+        new_valid = self.valid.at[dest].set(True, mode="drop")
+        overflow = jnp.maximum(n_inc - n_free, 0)
+        return ParticleSet(x=new_x, props=new_props, valid=new_valid), overflow
+
+
+def zeros_like_props(prop_specs: Mapping[str, Any], cap: int) -> Dict[str, Any]:
+    def mk(spec):
+        shape, dtype = spec
+        return jnp.zeros((cap,) + tuple(shape), dtype)
+    return {k: mk(v) for k, v in prop_specs.items()}
+
+
+def empty(capacity: int, dim: int, prop_specs: Mapping[str, Any],
+          dtype=jnp.float32) -> ParticleSet:
+    """An all-invalid particle set. ``prop_specs`` maps name -> (shape, dtype)
+    for per-particle property trailing shapes."""
+    return ParticleSet(
+        x=jnp.full((capacity, dim), ParticleSet.FILL, dtype),
+        props=zeros_like_props(prop_specs, capacity),
+        valid=jnp.zeros((capacity,), bool),
+    )
+
+
+def from_positions(x: jax.Array, capacity: int | None = None,
+                   prop_specs: Mapping[str, Any] | None = None,
+                   props: Dict[str, Any] | None = None) -> ParticleSet:
+    """Build a ParticleSet from dense positions (n, dim), padding to capacity."""
+    n, dim = x.shape
+    cap = capacity or n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < n {n}")
+    pad = cap - n
+    xx = jnp.concatenate(
+        [jnp.asarray(x), jnp.full((pad, dim), ParticleSet.FILL, x.dtype)], axis=0)
+    valid = jnp.concatenate([jnp.ones(n, bool), jnp.zeros(pad, bool)])
+    p: Dict[str, Any] = {}
+    if props is not None:
+        for k, v in props.items():
+            v = jnp.asarray(v)
+            p[k] = jnp.concatenate(
+                [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)], axis=0)
+    if prop_specs is not None:
+        for k, spec in prop_specs.items():
+            if k not in p:
+                shape, dtype = spec
+                p[k] = jnp.zeros((cap,) + tuple(shape), dtype)
+    return ParticleSet(x=xx, props=p, valid=valid)
+
+
+def init_grid(domain_low, domain_high, sz, capacity: int | None = None,
+              prop_specs: Mapping[str, Any] | None = None,
+              dtype=jnp.float32, jitter: float = 0.0, key=None) -> ParticleSet:
+    """OpenFPM's ``Init_grid`` (Listing 4.1 line 37): particles on a regular
+    Cartesian lattice inside the box."""
+    sz = tuple(int(s) for s in sz)
+    dim = len(sz)
+    lo = np.asarray(domain_low, np.float64)
+    hi = np.asarray(domain_high, np.float64)
+    axes = [lo[d] + (np.arange(sz[d]) + 0.5) * (hi[d] - lo[d]) / sz[d]
+            for d in range(dim)]
+    pts = np.stack(np.meshgrid(*axes, indexing="ij"), axis=-1).reshape(-1, dim)
+    x = jnp.asarray(pts, dtype)
+    if jitter > 0.0:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        x = x + jitter * jax.random.uniform(key, x.shape, dtype, -1.0, 1.0)
+    return from_positions(x, capacity=capacity, prop_specs=prop_specs)

@@ -1,0 +1,110 @@
+"""Flash attention Pallas TPU kernel (GQA, causal) — the LM-stack hot spot.
+
+Tiling: grid (B, H, nQ, nK) with the KV dimension innermost — TPU grids
+execute the last dimension sequentially per core, so the f32 accumulator,
+row-max and row-sum live in VMEM scratch across the KV sweep (the online-
+softmax recurrence). Q/K/V blocks stream HBM→VMEM per BlockSpec; the S×S
+score matrix never exists. GQA is expressed in the K/V index_map
+(kv_head = q_head // rep) — no repeated KV materialization.
+
+Block sizes default to (128, 128): MXU-aligned (multiples of 128 on both
+matmul dims) and small enough that q/k/v blocks + scratch fit VMEM
+(128·hd·4B each + (128·128)·4B scores ≈ 0.4 MB for hd=128).
+
+Causal skipping: query block i only needs kv blocks j ≤ i; fully masked
+blocks are skipped via ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, scale: float, block_q: int, block_k: int,
+            n_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    run = (qi * block_q + block_q - 1 >= ki * block_k) if causal else True
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(p.astype(v.dtype), v,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, hd); k, v: (B, K, Sk, hd); H = K·rep. Returns like q."""
+    B, H, Sq, hd = q.shape
+    _, K, Sk, _ = k.shape
+    rep = H // K
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    n_q = Sq // block_q
+    n_k = Sk // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    grid = (B, H, n_q, n_k)
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, i, j: (b, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda b, h, i, j: (b, h // rep, j, 0))
+    o_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, i, j: (b, h, i, 0))
+
+    kern = functools.partial(_kernel, causal=causal, scale=scale,
+                             block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Jitted wrapper selecting the flash-attention execution path.
+
+On TPU the Pallas kernel runs compiled; everywhere else (CPU CI, the
+dry-run) ``interpret=True`` executes the same kernel body in Python, and the
+model stack's blocked-scan attention (models/layers.py) is the XLA fallback.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(q, k, v, *, causal: bool = True, block_q: int = 128,
+        block_k: int = 128):
+    """Layout adapter: (B, S, H, hd) <-> kernel-native (B, H, S, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    on_tpu = jax.devices()[0].platform == "tpu"
+    o = flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                        block_k=block_k, interpret=not on_tpu)
+    return o.transpose(0, 2, 1, 3)

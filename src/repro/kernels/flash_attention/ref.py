@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, Sq, hd); k, v: (B, K, Sk, hd). Exact softmax attention."""
+    B, H, Sq, hd = q.shape
+    _, K, Sk, _ = k.shape
+    rep = H // K
+    kr = jnp.repeat(k, rep, axis=1)
+    vr = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,17 @@
+"""Oracle for the LJ cell-tile kernel: same dense masked math in pure jnp."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lj_cell_forces_ref(cell_x, nbr_x, cell_mask, nbr_mask, *, sigma,
+                       epsilon, r_cut):
+    dx = cell_x[:, :, None, :] - nbr_x[:, None, :, :]
+    r2 = jnp.sum(dx * dx, axis=-1)
+    ok = (cell_mask[:, :, None] & nbr_mask[:, None, :]
+          & (r2 < r_cut * r_cut) & (r2 > 1e-12))
+    r2s = jnp.maximum(r2, 1e-12)
+    inv3 = (sigma * sigma / r2s) ** 3
+    mag = 24.0 * epsilon * (2.0 * inv3 * inv3 - inv3) / r2s
+    mag = jnp.where(ok, mag, 0.0)
+    return jnp.einsum("cij,cijd->cid", mag, dx)

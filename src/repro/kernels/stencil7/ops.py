@@ -1,0 +1,15 @@
+"""Jitted wrapper: Pallas Gray-Scott step on TPU, interpret elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.stencil7.stencil7 import gray_scott_step
+
+
+def step(u, v, cfg):
+    """Gray-Scott step from an apps.gray_scott.GSConfig."""
+    inv_h2 = (cfg.shape[0] / cfg.L) ** 2
+    on_tpu = jax.devices()[0].platform == "tpu"
+    return gray_scott_step(u, v, Du=cfg.Du, Dv=cfg.Dv, F=cfg.F, k=cfg.k,
+                           dt=cfg.dt, inv_h2=inv_h2,
+                           interpret=not on_tpu)

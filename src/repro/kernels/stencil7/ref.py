@@ -1,0 +1,17 @@
+"""Oracle: the app's own jnp Gray-Scott step (single source of truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gray_scott_step_ref(u, v, *, Du, Dv, F, k, dt, inv_h2):
+    def lap(f):
+        out = -2.0 * f.ndim * f
+        for d in range(f.ndim):
+            out = out + jnp.roll(f, 1, axis=d) + jnp.roll(f, -1, axis=d)
+        return out * inv_h2
+
+    uvv = u * v * v
+    un = u + dt * (Du * lap(u) - uvv + F * (1.0 - u))
+    vn = v + dt * (Dv * lap(v) + uvv - (F + k) * v)
+    return un, vn

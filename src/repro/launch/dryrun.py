@@ -1,0 +1,455 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell we build ShapeDtypeStruct stand-ins for params / optimizer
+state / caches / batch, jit the step with explicit in/out shardings, lower,
+compile, and record:
+
+  * memory_analysis()  — per-device bytes (proves the cell fits a 16 GB v5e)
+  * cost_analysis()    — HLO FLOPs and bytes for the roofline terms
+  * collective bytes   — parsed from the optimized HLO text, per collective
+                         kind, using a per-chip ring-cost model
+
+Results are written to artifacts/dryrun/<mesh>/<arch>__<shape>.json —
+resumable: existing cells are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single --all
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --arch gemma-2b --shape train_4k
+"""
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import (ModelConfig, SHAPES, ShapeConfig, input_specs,
+                                shape_applicable)
+from repro.models import transformer as T
+from repro.sharding import specs as SP
+from repro.training import optimizer as O
+from repro.training import serve as SV
+from repro.training import train as TR
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (≈ per-direction usable)
+HBM_BYTES = 16 * 2**30     # v5e HBM capacity
+
+
+# ---------------------------------------------------------------------------
+# Sharding construction
+# ---------------------------------------------------------------------------
+
+def effective_rules(cfg: ModelConfig, mesh, shape: ShapeConfig) -> Dict:
+    """Per-(arch, shape, mesh) rule table (DESIGN.md §4 divisibility)."""
+    rules = dict(SP.DEFAULT_RULES)
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.n_heads % tp:
+        rules["heads"] = None
+    if cfg.n_kv_heads % tp:
+        rules["kv_heads"] = None
+    if cfg.kind in ("ssm", "hybrid"):
+        if cfg.ssm_nheads % tp:
+            rules["ssm_heads"] = None
+        if cfg.d_inner % tp:
+            rules["mlp"] = None
+    if shape.mode == "decode":
+        if cfg.n_kv_heads % tp == 0 and cfg.n_kv_heads >= tp:
+            rules["kv_seq"] = None          # shard cache on kv heads
+        else:
+            rules["kv_seq"] = "model"       # flash-decode style seq sharding
+            rules["kv_heads"] = None
+    if shape.name == "long_500k":
+        rules["batch"] = None               # global_batch=1: unshardable
+        rules["kv_seq"] = ("data", "model")
+        rules["kv_heads"] = None
+    return rules
+
+
+def _fsdp_extend(spec: P, shape, logical, mesh, rules, axis="data"):
+    """ZeRO/FSDP refinement: shard the largest None-spec'd dim (except the
+    scan 'stack' dim) over the data axis if divisible."""
+    if axis not in mesh.axis_names:
+        return spec
+    size = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    # mesh axes already used by this spec
+    used = set()
+    for e in spec:
+        if e is None:
+            continue
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if axis in used:
+        return spec
+    best, best_dim = 0, -1
+    for d, (e, n) in enumerate(zip(spec, shape)):
+        if e is not None:
+            continue
+        if logical is not None and d < len(logical) and logical[d] == "stack":
+            continue
+        if n % size == 0 and n // size > 0 and n > best:
+            best, best_dim = n, d
+    if best_dim < 0:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    parts[best_dim] = axis
+    return P(*parts)
+
+
+def param_shardings(cfg, mesh, rules, shapes_tree, *, fsdp: bool):
+    logical_tree = T.params_logical(cfg)
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def one(lg, sds):
+        spec = SP.spec_for(lg, rules, mesh)
+        spec = SP.legalize_spec(spec, sds.shape, mesh)
+        if fsdp:
+            spec = _fsdp_extend(spec, sds.shape, lg, mesh, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, logical_tree, shapes_tree, is_leaf=is_lg)
+
+
+def cache_shardings(cfg, mesh, rules, shapes_tree):
+    logical_tree = T.caches_logical(cfg)
+    is_lg = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda lg, sds: NamedSharding(mesh, SP.legalize_spec(
+            SP.spec_for(lg, rules, mesh), sds.shape, mesh)),
+        logical_tree, shapes_tree, is_leaf=is_lg)
+
+
+# ---------------------------------------------------------------------------
+# Collective-bytes parser (per-chip ring-cost model)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(tok_dtype: str, dims: str) -> int:
+    bs = _DTYPE_BYTES.get(tok_dtype)
+    if bs is None:
+        return 0
+    if not dims:
+        return bs
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bs
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-chip communicated bytes per collective kind.
+
+    Cost model (ring algorithms, bytes that cross links per chip):
+      all-reduce(X)        ≈ 2·X   (reduce-scatter + all-gather phases)
+      all-gather(out=X)    ≈ X     (each chip receives X·(n-1)/n)
+      reduce-scatter(in=X) ≈ X
+      all-to-all(X)        ≈ X
+      collective-permute(X)≈ X
+    where X = result bytes of the op on one chip's shard as printed in the
+    sharded (SPMD-partitioned) HLO.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " = " not in s:
+            continue
+        lhs, rhs = s.split(" = ", 1)
+        opm = None
+        for kind in _COLLECTIVES:
+            # match `<shape> kindcall(` e.g. "bf16[8,128]{1,0} all-gather("
+            if re.search(rf"\b{kind}(-start|-done)?\(", rhs):
+                opm = kind
+                break
+        if opm is None:
+            continue
+        if f"{opm}-done(" in rhs:
+            continue  # -done pairs with -start; counted at start
+        # result shapes appear at the head of rhs before the op name
+        head = rhs.split(opm)[0]
+        nbytes = sum(_shape_bytes(m.group(1), m.group(2))
+                     for m in _SHAPE_RE.finditer(head))
+        factor = 2.0 if opm == "all-reduce" else 1.0
+        out[opm] += factor * nbytes
+        counts[opm] += 1
+    out["_counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh, *, banded: bool = False,
+               rules_override: Dict | None = None,
+               cfg_overrides: Dict | None = None):
+    import dataclasses
+    cfg = registry.get_config(arch)
+    if banded:
+        cfg = dataclasses.replace(cfg, attn_banded=True)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    rules = effective_rules(cfg, mesh, shape)
+    if rules_override:
+        rules.update(rules_override)
+    ctx = SP.ShardingContext.create(mesh, rules)
+
+    p_shapes = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    # FSDP weight sharding saves memory but costs an all-gather of every
+    # weight per step — for decode (one token!) that gather dominates the
+    # step (§Perf C1). Replicate weights across 'data' for decode whenever
+    # the TP-sharded copy fits comfortably.
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    pbytes = sum(int(np.prod(s.shape)) * s.dtype.itemsize
+                 for s in jax.tree.leaves(p_shapes))
+    fsdp = not (shape.mode == "decode" and pbytes / tp <= 4 * 2 ** 30)
+    if rules_override and "_fsdp" in rules_override:
+        fsdp = rules_override.pop("_fsdp")
+    p_shard = param_shardings(cfg, mesh, rules, p_shapes, fsdp=fsdp)
+    batch = input_specs(cfg, shape)
+    b_shard = {k: NamedSharding(mesh, SP.spec_for(
+        ("batch",) + (None,) * (len(v.shape) - 1), rules, mesh))
+        for k, v in batch.items()}
+
+    if shape.mode == "train":
+        opt = O.OptConfig(opt_dtype=cfg.opt_dtype)
+        o_shapes = jax.eval_shape(lambda: O.init_opt_state(p_shapes_concrete(p_shapes), opt))
+        o_shard = {
+            "m": jax.tree.map(lambda s: s, p_shard),
+            "v": jax.tree.map(lambda s: s, p_shard),
+            "step": NamedSharding(mesh, P()),
+        }
+        step = TR.make_train_step(cfg, opt, ctx)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        args = (p_shapes, o_shapes, batch)
+    elif shape.mode == "prefill":
+        step = SV.make_prefill_step(cfg, s_max=shape.seq_len, ctx=ctx)
+        c_shapes = jax.eval_shape(
+            lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len))
+        c_shard = cache_shardings(cfg, mesh, rules, c_shapes)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard),
+                         out_shardings=(None, c_shard))
+        args = (p_shapes, batch)
+    else:  # decode
+        step = SV.make_decode_step(cfg, ctx=ctx)
+        c_shapes = jax.eval_shape(
+            lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len))
+        c_shard = cache_shardings(cfg, mesh, rules, c_shapes)
+        jitted = jax.jit(step, in_shardings=(p_shard, c_shard, b_shard),
+                         out_shardings=(None, c_shard),
+                         donate_argnums=(1,))
+        args = (p_shapes, c_shapes, batch)
+    return cfg, shape, jitted, args
+
+
+def p_shapes_concrete(tree):
+    """eval_shape helper: feed ShapeDtypeStructs through functions expecting
+    arrays (init_opt_state only reads shape/dtype)."""
+    return tree
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
+             banded=False, tag="", rules_override=None,
+             cfg_overrides=None) -> Dict[str, Any]:
+    mesh_dir = ARTIFACTS / mesh_kind
+    mesh_dir.mkdir(parents=True, exist_ok=True)
+    out_path = mesh_dir / f"{arch}__{shape_name}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "chips": n_chips, "tag": tag}
+    try:
+        cfg, shape, jitted, args = build_cell(arch, shape_name, mesh,
+                                              banded=banded,
+                                              rules_override=rules_override,
+                                              cfg_overrides=cfg_overrides)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (XLA's cost_analysis counts while bodies
+        # once — see launch/hlo_analysis.py)
+        from repro.launch import hlo_analysis as HA
+        ha = HA.analyze(hlo)
+        coll = dict(ha["collectives"])
+        flops = float(ha["flops"])
+        bytes_acc = float(ha["bytes"])
+        xla_flops = float(cost.get("flops", 0.0))
+        xla_bytes = float(cost.get("bytes accessed", 0.0))
+        # memory_analysis fields (per device)
+        mem_rec = {}
+        for f in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes"):
+            mem_rec[f] = int(getattr(mem, f, 0) or 0)
+
+        # decode processes ONE token per sequence per step; train/prefill
+        # process the full token grid. fwd-only = 2·N·D, train = 6·N·D.
+        tokens_processed = (shape.global_batch if shape.mode == "decode"
+                            else shape.tokens)
+        per_tok = 6 if shape.mode == "train" else 2
+        model_flops = per_tok * T.active_params(cfg) * tokens_processed
+
+        coll_total = sum(v for k, v in coll.items() if not k.startswith("_"))
+        rec.update({
+            "ok": True,
+            "seconds_lower": round(t_lower, 2),
+            "seconds_compile": round(t_compile, 2),
+            "hlo_flops_total": flops,
+            "hlo_bytes_total": bytes_acc,
+            "xla_cost_flops_unscaled": xla_flops,
+            "xla_cost_bytes_unscaled": xla_bytes,
+            "collective_bytes_per_chip": coll,
+            "collective_bytes_per_chip_total": coll_total,
+            "memory_per_device": mem_rec,
+            "model_flops": model_flops,
+            "tokens": shape.tokens,
+            "params_total": int(sum(np.prod(s.shape) for s in
+                                    jax.tree.leaves(jax.eval_shape(
+                                        lambda: T.init_params(
+                                            registry.get_config(arch),
+                                            jax.random.PRNGKey(0)))))),
+            "params_active": T.active_params(registry.get_config(arch)),
+        })
+        # analytic lower bound on memory traffic (ideal fusion): weights are
+        # read 3× (fwd, remat, bwd) + optimizer update (read m,v,p,g; write
+        # p,m,v), activations cross HBM once per layer boundary. The HLO
+        # number above reflects the CPU backend's fusion granularity (flash
+        # attention runs as scans with HBM-resident accumulators — the
+        # Pallas kernel removes that traffic on TPU).
+        pbytes = float(mem_rec["argument_size_in_bytes"])
+        act_bytes = (shape.tokens / n_chips) * cfg.d_model * 2 * cfg.n_layers
+        if shape.mode == "train":
+            ideal = 3 * pbytes + 4 * pbytes + 2 * act_bytes
+        else:
+            ideal = pbytes + 2 * act_bytes
+        rec["ideal_bytes_per_chip"] = ideal
+
+        # roofline terms (seconds); flops/bytes are per-chip (one partition's
+        # program), trip-count-scaled.
+        rec["roofline"] = {
+            "t_compute": flops / PEAK_FLOPS,
+            "t_memory": bytes_acc / HBM_BW,
+            "t_memory_ideal": ideal / HBM_BW,
+            "t_collective": coll_total / ICI_BW,
+        }
+        dom = max(("t_compute", "t_memory", "t_collective"),
+                  key=rec["roofline"].get)
+        rec["roofline"]["dominant"] = dom
+        rec["roofline"]["model_vs_hlo_flops"] = (
+            model_flops / max(flops * n_chips, 1.0))
+    except Exception as e:  # record failures — they are bugs to fix
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    rec["wall_seconds"] = round(time.time() - t0, 2)
+    out_path.write_text(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def optimized_variant(arch: str, shape_name: str, mesh):
+    """The beyond-paper optimized configuration (§Perf winners): larger
+    attention blocks, exact dispatch capacity, and sequence-parallel
+    attention wherever the head count does not divide the TP degree."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    cfg_overrides = {"attn_block_q": 1024, "attn_block_k": 4096}
+    if cfg.n_experts:
+        cfg_overrides["capacity_factor"] = 1.0
+    rules_override = {}
+    if cfg.n_heads % tp and shape.mode != "decode" and cfg.kind != "ssm":
+        cfg_overrides["attn_q_parallel"] = True
+        rules_override["attn_seq"] = "model"
+    return cfg_overrides, rules_override
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--banded", action="store_true",
+                    help="causal-exact banded attention schedule (perf opt)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf winning variants to every cell")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = registry.cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            cfg_ov, rules_ov = (None, None)
+            if args.optimized:
+                mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+                cfg_ov, rules_ov = optimized_variant(arch, shape, mesh)
+            r = run_cell(arch, shape, mesh_kind, force=args.force,
+                         banded=args.banded, tag=args.tag,
+                         cfg_overrides=cfg_ov, rules_override=rules_ov)
+            status = "OK " if r.get("ok") else "FAIL"
+            roof = r.get("roofline", {})
+            print(f"[{status}] {mesh_kind:6s} {arch:26s} {shape:12s} "
+                  f"compile={r.get('seconds_compile', 0):7.1f}s "
+                  f"peak={r.get('memory_per_device', {}).get('peak_memory_in_bytes', 0)/2**30:6.2f}GiB "
+                  f"dom={roof.get('dominant', '-')}",
+                  flush=True)
+            if not r.get("ok"):
+                print("       ", r.get("error"), flush=True)
+            results.append(r)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

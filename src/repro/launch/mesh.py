@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod:  (16, 16)    axes ("data", "model")   — 256 v5e chips
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
+
+Functions, not module constants: importing this module never touches jax
+device state (device count is locked at first backend init — the dry-run
+sets XLA_FLAGS before importing anything).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            f"dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count=512 before any jax import")
+    import numpy as np
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(dev_array, axes)
+
+
+def make_local_mesh(shape=None, axes=("data", "model")):
+    """Mesh over whatever devices exist (tests, examples)."""
+    import numpy as np
+    devices = jax.devices()
+    if shape is None:
+        shape = (1, len(devices))
+        axes = ("data", "model")
+    n = int(np.prod(shape))
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)

@@ -1,0 +1,379 @@
+"""Transformer building blocks: norms, RoPE, blocked (flash-style) attention,
+gated MLPs, embeddings.
+
+Attention is implemented *blockwise with online softmax* (scan over KV blocks
+inside a scan over Q blocks) so the S×S score matrix never materializes —
+this is the pure-JAX twin of the ``kernels/flash_attention`` Pallas kernel
+and what the dry-run lowers. ``banded=True`` switches to the unrolled
+causal-exact schedule (each Q block only visits KV blocks it can see) — a
+§Perf hillclimb option that removes the ~2× causal FLOP waste of the scanned
+schedule at the price of an HLO linear in the number of Q blocks.
+
+All functions take an optional ``cons(x, logical_axes)`` callback used to
+inject sharding constraints (sharding/specs.py); pass None for local runs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Cons = Optional[Callable]
+
+
+def _cons(cons: Cons, x, logical):
+    return cons(x, logical) if cons is not None else x
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    return jnp.asarray(inv, dtype)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blocked attention with online softmax
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _pad_axis_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_positions=None,
+                      kv_len=None, block_q: int = 512, block_k: int = 1024,
+                      banded: bool = False, q_parallel: bool = False,
+                      cons: Cons = None):
+    """Flash-style attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H = K * rep (GQA).
+    q_positions: (B, Sq) global positions of queries (for causal masking with
+    a KV cache); defaults to arange(Sq).
+    kv_len: (B,) valid KV length (decode against a partially filled cache).
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    rep = H // K
+    scale = 1.0 / math.sqrt(hd)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
+
+    if banded and causal and Sq > block_q:
+        return _banded_attention(q, k, v, scale=scale, q_positions=q_positions,
+                                 kv_len=kv_len, block=block_q, cons=cons)
+
+    if Sq <= 8:
+        # decode fast path (§Perf C2): one dense masked pass over the whole
+        # cache. A kv-block scan would dynamic-slice the (possibly
+        # seq-sharded) cache per step, forcing GSPMD to replicate it; the
+        # single contraction keeps Sk sharded with one small all-reduce for
+        # the softmax statistics. Score memory is only B·H·Sq·Sk floats.
+        # keep k/v in storage dtype; accumulate in f32 via the MXU's
+        # preferred_element_type — no f32 copy of the cache (§Perf C3)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk",
+                       q.reshape(B, Sq, K, rep, hd), k,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = jnp.arange(Sk, dtype=jnp.int32)
+        mask = jnp.ones((B, 1, 1, Sq, Sk), bool)
+        if causal:
+            mask &= (kpos[None, None, None, None, :]
+                     <= q_positions[:, None, None, :, None])
+        if kv_len is not None:
+            mask &= (kpos[None, :] <
+                     jnp.asarray(kv_len, jnp.int32)[:, None])[:, None, None,
+                                                              None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd)
+        return _cons(cons, o.astype(q.dtype), ("batch", "seq", "heads", None))
+
+    # clamp block sizes (decode has Sq == 1 — no padding waste)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+
+    if q_parallel and Sq > block_q:
+        return _qparallel_attention(
+            q, k, v, scale=scale, causal=causal, q_positions=q_positions,
+            kv_len=kv_len, block_q=block_q, block_k=block_k, cons=cons)
+    # pad to block multiples
+    qp, Sq0 = _pad_axis_to(q, 1, block_q)
+    kp, Sk0 = _pad_axis_to(k, 1, block_k)
+    vp, _ = _pad_axis_to(v, 1, block_k)
+    pp, _ = _pad_axis_to(q_positions, 1, block_q)
+    nq = qp.shape[1] // block_q
+    nk = kp.shape[1] // block_k
+
+    qg = qp.reshape(B, nq, block_q, K, rep, hd)
+    kg = kp.reshape(B, nk, block_k, K, hd)
+    vg = vp.reshape(B, nk, block_k, K, hd)
+    pg = pp.reshape(B, nq, block_q)
+    kpos = jnp.arange(nk * block_k, dtype=jnp.int32).reshape(nk, block_k)
+    kvalid = kpos < (Sk0 if kv_len is None
+                     else jnp.asarray(kv_len, jnp.int32)[:, None, None])
+
+    def q_block(args):
+        qb, pb = args  # (B, block_q, K, rep, hd), (B, block_q)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kb, vb, kpos_b, kval_b = inputs
+            s = jnp.einsum("bqgrd,bkgd->bgrqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            mask = jnp.ones((B, 1, 1, block_q, block_k), bool)
+            if causal:
+                mask &= (kpos_b[None, None, None, None, :]
+                         <= pb[:, None, None, :, None])
+            kv = (kval_b if kv_len is not None else
+                  jnp.broadcast_to(kval_b, (B, block_k)))
+            mask &= kv[:, None, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bgrqk,bkgd->bgrqd", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, rep, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, rep, block_q), jnp.float32)
+        a0 = jnp.zeros((B, K, rep, block_q, hd), jnp.float32)
+        xs = (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), kpos,
+              jnp.moveaxis(kvalid, 1, 0) if kv_len is not None else kvalid)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, K, rep, block_q, hd) -> (B, block_q, H, hd)
+        return jnp.moveaxis(out, 3, 1).reshape(B, block_q, H, hd)
+
+    if nq == 1:
+        o = q_block((qg[:, 0], pg[:, 0]))[:, None]
+    else:
+        o = jax.lax.map(q_block, (jnp.moveaxis(qg, 1, 0),
+                                  jnp.moveaxis(pg, 1, 0)))
+        o = jnp.moveaxis(o, 0, 1)
+    o = o.reshape(B, nq * block_q, H, hd)[:, :Sq0]
+    return _cons(cons, o.astype(q.dtype), ("batch", "seq", "heads", None))
+
+
+def _qparallel_attention(q, k, v, *, scale, causal, q_positions, kv_len,
+                         block_q, block_k, cons):
+    """Sequence-parallel schedule (§Perf B1): ALL query blocks advance the
+    online-softmax KV sweep together — the q-block axis is a *spatial* dim
+    that can be sharded over an otherwise-idle mesh axis ('attn_seq'
+    logical axis), instead of a sequential scan. This is the right schedule
+    when head count does not divide the tensor-parallel degree (gemma 8H,
+    llama3.2 24H vs 16-way TP) — attention work shards by sequence instead
+    of replicating 16×. K/V stay full-length (all-gathered), the memory
+    price the trade accepts."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    rep = H // K
+    qp, Sq0 = _pad_axis_to(q, 1, block_q)
+    kp, Sk0 = _pad_axis_to(k, 1, block_k)
+    vp, _ = _pad_axis_to(v, 1, block_k)
+    pp, _ = _pad_axis_to(q_positions, 1, block_q)
+    nq = qp.shape[1] // block_q
+    nk = kp.shape[1] // block_k
+    qg = qp.reshape(B, nq, block_q, K, rep, hd)
+    pg = pp.reshape(B, nq, block_q)
+    if cons is not None:
+        qg = cons(qg, ("batch", "attn_seq", None, "kv_heads", None, None))
+    kg = kp.reshape(B, nk, block_k, K, hd)
+    vg = vp.reshape(B, nk, block_k, K, hd)
+    kpos = jnp.arange(nk * block_k, dtype=jnp.int32).reshape(nk, block_k)
+    kvalid = kpos < (Sk0 if kv_len is None
+                     else jnp.asarray(kv_len, jnp.int32)[:, None, None])
+
+    def kv_step(carry, inputs):
+        m, l, acc = carry                         # (B, nq, K, rep, bq[,hd])
+        kb, vb, kpos_b, kval_b = inputs
+        s = jnp.einsum("bnqgrd,bkgd->bngrqk", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        mask = jnp.ones((B, 1, 1, 1, block_q, block_k), bool)
+        if causal:
+            mask = mask & (kpos_b[None, None, None, None, None, :]
+                           <= pg[:, :, None, None, :, None])
+        kvv = (kval_b if kv_len is not None
+               else jnp.broadcast_to(kval_b, (B, block_k)))
+        mask = mask & kvv[:, None, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bngrqk,bkgd->bngrqd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, K, rep, block_q), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, K, rep, block_q), jnp.float32)
+    a0 = jnp.zeros((B, nq, K, rep, block_q, hd), jnp.float32)
+    if cons is not None:
+        lg5 = ("batch", "attn_seq", "kv_heads", None, None)
+        m0 = cons(m0, lg5)
+        l0 = cons(l0, lg5)
+        a0 = cons(a0, lg5 + (None,))
+    xs = (jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0), kpos,
+          jnp.moveaxis(kvalid, 1, 0) if kv_len is not None else kvalid)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # (B, nq, K, rep, bq, hd) -> (B, Sq, H, hd)
+    out = jnp.moveaxis(out, 4, 2).reshape(B, nq * block_q, H, hd)[:, :Sq0]
+    return _cons(cons, out.astype(q.dtype), ("batch", "attn_seq", "heads",
+                                             None))
+
+
+def _banded_attention(q, k, v, *, scale, q_positions, kv_len, block, cons):
+    """Causal-exact unrolled schedule: Q block i attends KV[: (i+1)*block].
+    Requires Sq == Sk (self-attention prefill/training) and block_q==block_k.
+    FLOPs = exact causal + diagonal half-block; HLO size grows with nq."""
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    rep = H // K
+    qp, Sq0 = _pad_axis_to(q, 1, block)
+    pp, _ = _pad_axis_to(q_positions, 1, block)
+    nq = qp.shape[1] // block
+    outs = []
+    for i in range(nq):
+        qb = qp[:, i * block:(i + 1) * block].reshape(B, block, K, rep, hd)
+        pb = pp[:, i * block:(i + 1) * block]
+        hi = min((i + 1) * block, Sk)
+        kb = k[:, :hi]
+        vb = v[:, :hi]
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        kpos = jnp.arange(hi, dtype=jnp.int32)
+        mask = kpos[None, None, None, None, :] <= pb[:, None, None, :, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        o = jnp.einsum("bgrqk,bkgd->bgrqd", p, vb.astype(jnp.float32))
+        o = o / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+        outs.append(jnp.moveaxis(o, 3, 1).reshape(B, block, H, hd))
+    out = jnp.concatenate(outs, axis=1)[:, :Sq0]
+    return _cons(cons, out.astype(q.dtype), ("batch", "seq", "heads", None))
+
+
+# --------------------------------------------------------------------------
+# Attention layer (projections + rope + blocked attention)
+# --------------------------------------------------------------------------
+
+def attention_layer(params, x, *, cfg, positions, cache=None, cache_len=None,
+                    kv_override=None, kv_static=None, causal=True,
+                    cons: Cons = None):
+    """Full attention layer.
+
+    params: {wq (D,H,hd), wk (D,K,hd), wv, wo (H,hd,D)}.
+    cache: optional dict {k: (B, S_max, K, hd), v: ...} — decode mode writes
+    the new kv at ``positions`` and attends over ``cache_len`` entries.
+    kv_override: encoder output for cross-attention (enc-dec / VLM) — k, v
+    are projected from it and positions/rope are skipped.
+    kv_static: precomputed (k, v) pair — cross-attention decode reads the
+    cached projections instead of recomputing them per step.
+    Returns (out (B,S,D), new_cache).
+    """
+    B, S, D = x.shape
+    ct = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(ct))
+    q = _cons(cons, q, ("batch", "seq", "heads", None))
+    if kv_static is not None:
+        k, v = (kv_static[0].astype(ct), kv_static[1].astype(ct))
+    else:
+        kv_src = x if kv_override is None else kv_override.astype(ct)
+        k = jnp.einsum("bsd,dhk->bshk", kv_src, params["wk"].astype(ct))
+        v = jnp.einsum("bsd,dhk->bshk", kv_src, params["wv"].astype(ct))
+        k = _cons(cons, k, ("batch", "seq", "kv_heads", None))
+        v = _cons(cons, v, ("batch", "seq", "kv_heads", None))
+
+    if kv_override is None and kv_static is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    kv_len = None
+    if cache is not None:
+        # write new kv into the cache at the query positions
+        idx = positions[:, :, None, None]
+        bidx = jnp.arange(B)[:, None, None, None]
+        hidx = jnp.arange(k.shape[2])[None, None, :, None]
+        didx = jnp.arange(k.shape[3])[None, None, None, :]
+        ck = cache["k"].at[bidx, idx, hidx, didx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[bidx, idx, hidx, didx].set(v.astype(cache["v"].dtype))
+        ck = _cons(cons, ck, ("batch", "kv_seq", "kv_heads", None))
+        cv = _cons(cons, cv, ("batch", "kv_seq", "kv_heads", None))
+        cache = {"k": ck, "v": cv}
+        k, v = ck.astype(ct), cv.astype(ct)
+        kv_len = cache_len
+
+    o = blocked_attention(q, k, v, causal=causal and kv_override is None,
+                          q_positions=positions, kv_len=kv_len,
+                          block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+                          banded=cfg.attn_banded,
+                          q_parallel=cfg.attn_q_parallel, cons=cons)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(ct))
+    return _cons(cons, out, ("batch", "seq", "embed")), cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_layer(params, x, *, act: str, cons: Cons = None):
+    ct = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(ct))
+    h = _cons(cons, h, ("batch", "seq", "mlp"))
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"].astype(ct))
+        g = _cons(cons, g, ("batch", "seq", "mlp"))
+        gate = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = gate * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":  # squared ReLU (nemotron/minitron)
+        r = jax.nn.relu(h)
+        h = r * r
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(ct))
+    return _cons(cons, out, ("batch", "seq", "embed"))

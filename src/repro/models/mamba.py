@@ -1,0 +1,254 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked-scan formulation.
+
+Implements the Mamba2 block (arXiv:2405.21060): gated SSM with scalar
+per-head decay, depthwise causal conv on (x, B, C), and the chunked SSD
+algorithm — quadratic attention-like form within chunks, linear recurrence
+across chunks (lax.scan carrying the (nh, hd, N) state). Decode is the O(1)
+single-step recurrence with a conv ring cache.
+
+The cross-chunk state handoff is the intra-device analogue of OpenFPM's
+``ghost_get``: when the sequence is sharded across devices
+(``seq_shard=True``), the chunk-boundary state crosses the device boundary
+via ``ppermute`` — a literal ghost-layer exchange (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_sizes(cfg):
+    d_inner = cfg.d_inner
+    nh = cfg.ssm_nheads
+    return d_inner, nh, cfg.ssm_state, cfg.ssm_groups
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv along seq. x: (B, S, C); w: (C, K); cache:
+    (B, K-1, C) previous inputs for decode. Returns (y, new_cache)."""
+    Bsz, S, C = x.shape
+    K = w.shape[1]
+    if cache is None:
+        ctx = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    new_cache = ctx[:, -(K - 1):] if K > 1 else None
+    # gather K shifted views and combine — cheap for K=4
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + ctx[:, i:i + S] * w[:, i].astype(x.dtype)
+    y = y + b.astype(x.dtype)
+    return jax.nn.silu(y), new_cache
+
+
+def mamba_prefill(params, x, *, cfg, cons=None, state_in=None,
+                  conv_ctx=None):
+    """Full-sequence (train/prefill) pass. x: (B, S, D). ``conv_ctx`` holds
+    the previous K-1 pre-activation conv inputs ({"x","B","C"}) when the
+    sequence is a continuation (sequence-parallel ghost layer). Returns
+    (y (B,S,D), final_state (B,nh,hd,N), conv_cache)."""
+    B, S0, D = x.shape
+    ct = x.dtype
+    d_inner, nh, N, G = ssm_sizes(cfg)
+    hd = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S0)
+    pad = (-S0) % Q
+    if pad:
+        # pad to a chunk multiple; padded steps get dt=0 (identity update)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+
+    z = x @ params["w_z"].astype(ct)
+    xs = x @ params["w_x"].astype(ct)
+    Bm = x @ params["w_B"].astype(ct)          # (B, S, G*N)
+    Cm = x @ params["w_C"].astype(ct)
+    dt = x @ params["w_dt"].astype(ct)          # (B, S, nh)
+    if cons is not None:
+        z = cons(z, ("batch", "seq", "mlp"))
+        xs = cons(xs, ("batch", "seq", "mlp"))
+        dt = cons(dt, ("batch", "seq", "ssm_heads"))
+
+    cx = None if conv_ctx is None else conv_ctx["x"]
+    cB = None if conv_ctx is None else conv_ctx["B"]
+    cC = None if conv_ctx is None else conv_ctx["C"]
+    xs, _ = _causal_conv(xs, params["conv_x"], params["conv_bx"], cx)
+    Bm, _ = _causal_conv(Bm, params["conv_B"], params["conv_bB"], cB)
+    Cm, _ = _causal_conv(Cm, params["conv_C"], params["conv_bC"], cC)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    if pad:
+        valid = (jnp.arange(S) < S0).astype(jnp.float32)
+        dt = dt * valid[None, :, None]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (nh,)
+    la = A[None, None, :] * dt                                     # log decay
+
+    nc = S // Q
+    xh = xs.reshape(B, nc, Q, nh, hd).astype(jnp.float32)
+    Bh = Bm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    Ch = Cm.reshape(B, nc, Q, G, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, nh)
+    lac = la.reshape(B, nc, Q, nh)
+    # heads per group
+    hpg = nh // G
+    Bh = jnp.repeat(Bh, hpg, axis=3)   # (B, nc, Q, nh, N)
+    Ch = jnp.repeat(Ch, hpg, axis=3)
+
+    h0 = (jnp.zeros((B, nh, hd, N), jnp.float32) if state_in is None
+          else state_in.astype(jnp.float32))
+
+    def chunk_step(h, inp):
+        xq, Bq, Cq, dq, lq = inp       # (B,Q,nh,hd), (B,Q,nh,N), ..., (B,Q,nh)
+        cum = jnp.cumsum(lq, axis=1)   # (B,Q,nh) inclusive
+        # intra-chunk quadratic term; mask in LOG space (exp of a masked
+        # positive exponent would be inf and poison gradients through where)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Cq, Bq)
+        dlog = cum[:, :, None, :] - cum[:, None, :, :]             # (B,Q,K,h)
+        dlog = jnp.moveaxis(dlog, 3, 1)                            # (B,h,Q,K)
+        iq = jnp.arange(Q)
+        causal = (iq[:, None] >= iq[None, :])[None, None]
+        decay = jnp.exp(jnp.where(causal, dlog, -jnp.inf))
+        w_mat = scores * decay
+        w_mat = w_mat * jnp.moveaxis(dq, 2, 1)[:, :, None, :]      # dt_j
+        y_intra = jnp.einsum("bhqk,bkhd->bqhd", w_mat, xq)
+        # contribution of carried state
+        st_decay = jnp.exp(cum)                                    # (B,Q,nh)
+        y_inter = jnp.einsum("bqhn,bhdn->bqhd", Cq * st_decay[..., None], h)
+        # chunk state update
+        last = cum[:, -1:, :]                                      # (B,1,nh)
+        w_state = jnp.exp(last - cum) * dq                         # (B,Q,nh)
+        new_h = (h * jnp.exp(last)[:, 0, :, None, None]
+                 + jnp.einsum("bqhd,bqhn->bhdn", xq * w_state[..., None], Bq))
+        return new_h, y_intra + y_inter
+
+    xs_c = tuple(jnp.moveaxis(a, 1, 0) for a in (xh, Bh, Ch, dtc, lac))
+    h_final, ys = jax.lax.scan(chunk_step, h0, xs_c)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, nh, hd)
+    y = y + xh.reshape(B, S, nh, hd) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(ct)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + params["norm"].astype(jnp.float32))).astype(ct)
+    out = y @ params["w_out"].astype(ct)
+    if pad:
+        out = out[:, :S0]
+    if cons is not None:
+        out = cons(out, ("batch", "seq", "embed"))
+    return out, h_final, None
+
+
+def mamba_decode(params, x, cache, *, cfg, cons=None):
+    """Single-token step. x: (B, 1, D); cache: {"h": (B,nh,hd,N),
+    "conv_x"/"conv_B"/"conv_C": (B, K-1, C)}. Returns (y, new_cache)."""
+    B, S, D = x.shape
+    assert S == 1
+    ct = x.dtype
+    d_inner, nh, N, G = ssm_sizes(cfg)
+    hd = cfg.ssm_head_dim
+
+    z = x @ params["w_z"].astype(ct)
+    xs = x @ params["w_x"].astype(ct)
+    Bm = x @ params["w_B"].astype(ct)
+    Cm = x @ params["w_C"].astype(ct)
+    dt = x @ params["w_dt"].astype(ct)
+
+    xs, cx = _causal_conv(xs, params["conv_x"], params["conv_bx"], cache["conv_x"])
+    Bm, cB = _causal_conv(Bm, params["conv_B"], params["conv_bB"], cache["conv_B"])
+    Cm, cC = _causal_conv(Cm, params["conv_C"], params["conv_bC"], cache["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]  # (B,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(A[None] * dt)                                            # (B,nh)
+
+    hpg = nh // G
+    xq = xs.reshape(B, nh, hd).astype(jnp.float32)
+    Bq = jnp.repeat(Bm.reshape(B, G, N), hpg, axis=1)                    # (B,nh,N)
+    Cq = jnp.repeat(Cm.reshape(B, G, N), hpg, axis=1)
+
+    h = cache["h"].astype(jnp.float32)
+    h = (h * a[:, :, None, None]
+         + jnp.einsum("bhd,bhn->bhdn", xq * dt[..., None], Bq))
+    y = jnp.einsum("bhdn,bhn->bhd", h, Cq)
+    y = y + xq * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(ct)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + params["norm"].astype(jnp.float32))).astype(ct)
+    out = y @ params["w_out"].astype(ct)
+    new_cache = {"h": h.astype(cache["h"].dtype), "conv_x": cx, "conv_B": cB,
+                 "conv_C": cC}
+    return out, new_cache
+
+
+def mamba_prefill_seq_sharded(params, x, *, cfg, axis_name: str, cons=None):
+    """Sequence-parallel prefill (inside shard_map): each device holds a
+    contiguous sequence shard; the SSD chunk state crosses shard boundaries
+    via an *exclusive-prefix ghost exchange* along ``axis_name``.
+
+    Because the recurrence is linear with multiplicative decay, each shard's
+    final state and total decay compose associatively:
+        (h_out, decay_total):  h_out = h_in * decay_total + h_local
+    We run the local chunked pass with h_in = 0, then combine shard
+    summaries with a ppermute ring sweep (O(ndev) tiny messages — the ghost
+    layer here is the (nh, hd, N) state, not raw tokens), and finally apply
+    the incoming prefix state with a cheap correction pass.
+    """
+    B, S, D = x.shape
+    ndev = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    ct = x.dtype
+    nxt = [(i, (i + 1) % ndev) for i in range(ndev)]
+
+    # Conv ghost layer: the depthwise causal conv (K taps) needs the last
+    # K-1 pre-activation projections of the left neighbor — a literal
+    # 3-row ghost_get.
+    Kc = cfg.ssm_conv
+    tail = lambda w: (x @ params[w].astype(ct))[:, -(Kc - 1):]
+    ghost = {"x": tail("w_x"), "B": tail("w_B"), "C": tail("w_C")}
+    ghost = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, nxt), ghost)
+    ghost = jax.tree.map(lambda a: jnp.where(me == 0, 0.0, a), ghost)
+
+    # Pass 1: local scan from zero state; record per-shard decay and state.
+    y_local, h_local, _ = mamba_prefill(params, x, cfg=cfg, cons=cons,
+                                        conv_ctx=ghost)
+
+    # Per-shard total log-decay (needs dt; recompute cheaply)
+    ct = x.dtype
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(ct)).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    total_la = jnp.sum(A[None, None] * dt, axis=1)            # (B, nh)
+
+    # Segment summaries compose associatively:
+    #   apply (h, la) to h_in:  h_out = h_in * e^la + h
+    #   (h1,la1) then (h2,la2) = (h1 * e^la2 + h2, la1 + la2)
+    # Exclusive prefix via a sequential ring: at sweep step k, device d
+    # receives the summary of device d-k and folds it in FRONT of its
+    # current prefix. ndev-1 tiny (B,nh,hd,N) messages — the ghost layer is
+    # the state, not tokens.
+    shifted_h, shifted_la = h_local, total_la
+    prefix_h = jnp.zeros_like(h_local)
+    prefix_la = jnp.zeros_like(total_la)
+    for k in range(1, ndev):
+        shifted_h = jax.lax.ppermute(shifted_h, axis_name, nxt)
+        shifted_la = jax.lax.ppermute(shifted_la, axis_name, nxt)
+        use = (me >= k)
+        inc_h = jnp.where(use, shifted_h, 0.0)
+        inc_la = jnp.where(use, shifted_la, 0.0)
+        prefix_h = inc_h * jnp.exp(prefix_la)[:, :, None, None] + prefix_h
+        prefix_la = inc_la + prefix_la
+    # Correction pass: re-run locally with the incoming prefix state. (A
+    # cheaper y_inter-only correction is possible; the full re-run keeps the
+    # code path single — acceptable for a feature demo, noted in DESIGN.md.)
+    y, h_final, _ = mamba_prefill(params, x, cfg=cfg, cons=cons,
+                                  state_in=prefix_h, conv_ctx=ghost)
+    return y, h_final

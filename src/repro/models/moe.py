@@ -1,0 +1,207 @@
+"""Mixture-of-Experts with OpenFPM-style token migration.
+
+The paper's ``map()`` mapping (particles → owning processor) is exactly MoE
+token dispatch (tokens → expert-owning device). We implement expert
+parallelism as a shard_map bucketed ``all_to_all`` over the ``model`` mesh
+axis — fixed-capacity per-destination buckets, identical in structure to
+``core/mappings.map_particles_local`` — followed by a reverse all_to_all
+that plays the role of ``ghost_put(sum)`` (gate-weighted combine).
+
+Two execution paths:
+  * ``moe_map``    — the shard_map EP path above (production).
+  * ``moe_dense``  — per-expert full pass, dropless oracle (tests; O(E)
+                     FLOPs, only for small configs).
+
+Capacity semantics follow Switch/DeepSpeed: per-destination buckets sized
+``tokens·top_k/tp · capacity_factor``; over-capacity tokens are dropped
+(residual connection carries them through unchanged), and drop counts are
+returned for the load-balance telemetry (the DLB cost-model analogue).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def router_probs(x2d, w_router, *, top_k: int, n_real: Optional[int] = None):
+    """x2d: (T, D) -> (gates (T,k), experts (T,k), probs (T,E)).
+    ``n_real`` masks padding experts (n_real..E) out of the softmax — they
+    exist only for even expert-parallel sharding and never receive tokens."""
+    logits = x2d.astype(jnp.float32) @ w_router.astype(jnp.float32)
+    E = logits.shape[-1]
+    if n_real is not None and n_real < E:
+        pad_mask = jnp.arange(E) >= n_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts.astype(jnp.int32), probs
+
+
+def load_balance_loss(probs, experts, n_experts: int):
+    """Switch aux loss: E * sum_e f_e * P_e (over real experts only)."""
+    occupancy = jnp.zeros(probs.shape[-1], jnp.float32).at[
+        experts.reshape(-1)].add(1.0)
+    f = occupancy / jnp.maximum(experts.size, 1)
+    P = probs.mean(axis=0)
+    return n_experts * jnp.sum(f[:n_experts] * P[:n_experts])
+
+
+def expert_ffn(w, h, act: str):
+    """h: (E, C, D); w: {wi (E,D,F), wg, wo (E,F,D)} -> (E, C, D)."""
+    ct = h.dtype
+    up = jnp.einsum("ecd,edf->ecf", h, w["wi"].astype(ct))
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", h, w["wg"].astype(ct))
+        up = (jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)) * up
+    else:
+        up = jax.nn.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", up, w["wo"].astype(ct))
+
+
+# --------------------------------------------------------------------------
+# shard_map EP path — the paper's map() applied to tokens
+# --------------------------------------------------------------------------
+
+def _pack_by(dest, payload, n_buckets, cap):
+    """Dense (n_buckets, cap) packing by destination (see mappings.bucket_pack;
+    repeated here in matrix form for (T, D) payloads)."""
+    T = dest.shape[0]
+    dest = jnp.minimum(dest, n_buckets)
+    order = jnp.argsort(dest, stable=True).astype(jnp.int32)
+    sd = dest[order]
+    start = jnp.searchsorted(sd, sd, side="left")
+    rank = jnp.arange(T, dtype=jnp.int32) - start.astype(jnp.int32)
+    row = jnp.where((sd < n_buckets) & (rank < cap), sd, n_buckets)
+    col = jnp.minimum(rank, cap - 1)
+
+    def scat(a):
+        buf = jnp.zeros((n_buckets + 1, cap) + a.shape[1:], a.dtype)
+        return buf.at[row, col].set(a[order], mode="drop")[:n_buckets]
+
+    packed = jax.tree.map(scat, payload)
+    slot_src = jnp.full((n_buckets + 1, cap), T, jnp.int32).at[row, col].set(
+        order, mode="drop")[:n_buckets]
+    dropped = jnp.sum((sd < n_buckets) & (rank >= cap))
+    return packed, slot_src, dropped
+
+
+def moe_map_local(x2d, w, *, cfg, axis_name: str, cons=None):
+    """EP MoE, called inside shard_map. x2d: (T_local, D) local tokens
+    (replicated along the model axis is NOT assumed — each model-rank holds
+    the same tokens; we route each token's k assignments from the rank that
+    owns it by round-robin striping to avoid duplicate sends).
+
+    Strategy: the model axis ranks all hold identical x2d (activations are
+    replicated over 'model' outside attention/mlp shards). Each rank takes
+    the strided slice of assignments it is responsible for (assignment index
+    ≡ rank mod tp), so collectively every (token, k) pair is dispatched
+    exactly once.
+    """
+    tp = jax.lax.axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    T, D = x2d.shape
+    E = cfg.n_experts_eff
+    E_local = E // tp
+    k = cfg.top_k
+
+    gates, experts, probs = router_probs(x2d, w["router"], top_k=k,
+                                         n_real=cfg.n_experts)
+    aux = load_balance_loss(probs, experts, cfg.n_experts)
+
+    # flatten (token, k) assignments; STRIPE across model ranks *before*
+    # gathering activations: rank r owns assignments ≡ r (mod tp), so each
+    # rank gathers only T·k/tp rows and per-destination buckets are sized
+    # T·k/tp² — not striping here costs 16× all-to-all volume (§Perf A1).
+    n_total = T * k
+    n_mine = -(-n_total // tp)
+    pad = n_mine * tp - n_total
+
+    def take_col(a, fill):
+        a = jnp.concatenate([a.reshape(-1),
+                             jnp.full((pad,), fill, a.dtype)]) if pad else \
+            a.reshape(-1)
+        return jnp.take(a.reshape(n_mine, tp), me, axis=1)
+
+    a_exp = take_col(experts, E)            # E = padded sentinel
+    a_gate = take_col(gates, 0.0)
+    a_tok = take_col(jnp.repeat(jnp.arange(T, dtype=jnp.int32), k), 0)
+    dest_dev = jnp.where(a_exp < E, a_exp // E_local, tp)  # tp = discard
+
+    # GROUPED single-stage packing (§Perf A3): pack by the joint key
+    # (dest_rank, local_expert) so the received buffer is *already* expert-
+    # grouped — the receive-side re-pack (one scatter + its backward
+    # transpose per layer) disappears. Capacity is per (src, dst, expert)
+    # sub-bucket: n_mine/(tp·E_local)·cf.
+    cap_se = max(int(math.ceil(n_mine / (tp * max(E_local, 1))
+                               * cfg.capacity_factor)), 8)
+    local_e = jnp.where(a_exp < E, a_exp % E_local, E_local)
+    joint = jnp.where(a_exp < E, dest_dev * E_local + local_e, tp * E_local)
+    payload = {"x": x2d[a_tok], "gate": a_gate.astype(x2d.dtype),
+               "tok": a_tok}
+    packed, _, dropped = _pack_by(joint, payload, tp * E_local, cap_se)
+    # (tp*E_local, cap_se, ...) -> all_to_all over the rank dim
+    shaped = jax.tree.map(
+        lambda a: a.reshape((tp, E_local * cap_se) + a.shape[2:]), packed)
+    recv = jax.tree.map(
+        lambda a: jax.lax.all_to_all(a, axis_name, split_axis=0,
+                                     concat_axis=0, tiled=False), shaped)
+    # recv["x"]: (tp, E_local*cap_se, D); regroup (free reshape/transpose)
+    # to (E_local, tp*cap_se, D) expert tiles
+    def regroup(a):
+        a = a.reshape((tp, E_local, cap_se) + a.shape[2:])
+        a = jnp.swapaxes(a, 0, 1)
+        return a.reshape((E_local, tp * cap_se) + a.shape[3:])
+    rx = regroup(recv["x"])
+    rgate = regroup(recv["gate"])
+    rtok = regroup(recv["tok"])
+
+    h = expert_ffn({"wi": w["wi"], "wg": w.get("wg"), "wo": w["wo"]},
+                   rx, cfg.act)                      # (E_local, tp*cap_se, D)
+    h = h * rgate[..., None]
+
+    # reverse: regroup back to (tp, E_local*cap_se, D) and all_to_all home
+    def ungroup(a):
+        a = a.reshape((E_local, tp, cap_se) + a.shape[2:])
+        a = jnp.swapaxes(a, 0, 1)
+        return a.reshape((tp, E_local * cap_se) + a.shape[3:])
+    home = jax.lax.all_to_all(ungroup(h), axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    home_tok = jax.lax.all_to_all(ungroup(rtok), axis_name, split_axis=0,
+                                  concat_axis=0, tiled=False)
+    home_val = jax.lax.all_to_all(ungroup(rgate != 0), axis_name,
+                                  split_axis=0, concat_axis=0, tiled=False)
+
+    # ghost_put(sum): scatter-add contributions into token rows, then psum
+    # across the model axis (each rank dispatched a disjoint stripe).
+    out = jnp.zeros((T + 1, D), x2d.dtype).at[
+        jnp.where(home_val, home_tok, T).reshape(-1)].add(
+            jnp.where(home_val.reshape(-1)[:, None], home.reshape(-1, D), 0)
+    )[:T]
+    out = jax.lax.psum(out, axis_name)
+    n_dropped = jax.lax.psum(dropped, axis_name)
+    return out, aux, n_dropped
+
+
+def moe_dense(x2d, w, *, cfg):
+    """Dropless dense oracle: every expert runs on every token (tests only)."""
+    E = cfg.n_experts
+    k = cfg.top_k
+    gates, experts, probs = router_probs(x2d, w["router"], top_k=k,
+                                         n_real=E)
+    aux = load_balance_loss(probs, experts, E)
+    T, D = x2d.shape
+    out = jnp.zeros_like(x2d)
+    for e in range(E):
+        h = expert_ffn(
+            {"wi": w["wi"][e:e + 1], "wg": None if w.get("wg") is None
+             else w["wg"][e:e + 1], "wo": w["wo"][e:e + 1]},
+            x2d[None], cfg.act)[0]
+        gate_e = jnp.sum(jnp.where(experts == e, gates, 0.0), axis=-1)
+        out = out + h * gate_e[:, None].astype(h.dtype)
+    return out, aux, jnp.zeros((), jnp.int32)

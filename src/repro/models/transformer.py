@@ -1,0 +1,614 @@
+"""Model assembly for the 10 assigned architectures.
+
+One parameterized decoder/enc-dec builder covering six families:
+  dense   — pre-norm GQA transformer (starcoder2, llama3.2, minitron, gemma)
+  moe     — dense attention + (shared + routed top-k) MoE FFN (qwen2/qwen3)
+  ssm     — pure Mamba2 SSD stack (mamba2-780m)
+  hybrid  — jamba: period-8 blocks [M Md M A(MoE) M Md M Md], MoE every 2nd
+  encdec  — whisper backbone: encoder (non-causal) + decoder w/ cross-attn
+  vlm     — llama-vision backbone: cross-attn image layer every 5th layer
+
+Layers are *scanned*: parameters are stacked (n_groups, ...) and the layer
+stack is a single ``lax.scan`` over groups, so HLO size (and compile time)
+is O(1) in depth — the compile-time scalability requirement for 100-layer
+models on 512-device meshes (DESIGN.md §5). ``jax.checkpoint`` wraps the
+group body when cfg.remat.
+
+Everything is pure functions over pytrees; sharding enters only through the
+``cons`` callback (ShardingContext.cons) — the OpenFPM principle that the
+decomposition is a parameter of the data structure, not of the algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+
+
+# ==========================================================================
+# Parameter construction
+# ==========================================================================
+
+def _init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def _attn_params(key, cfg, dt, cross=False):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    so = 1.0 / math.sqrt(H * hd)
+    return {
+        "wq": _init(ks[0], (D, H, hd), s, dt),
+        "wk": _init(ks[1], (D, K, hd), s, dt),
+        "wv": _init(ks[2], (D, K, hd), s, dt),
+        "wo": _init(ks[3], (H, hd, D), so, dt),
+    }
+
+
+def _attn_logical():
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+def _mlp_params(key, cfg, dt, d_ff=None):
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(D)
+    so = 1.0 / math.sqrt(F)
+    p = {"wi": _init(ks[0], (D, F), s, dt), "wo": _init(ks[1], (F, D), so, dt)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = _init(ks[2], (D, F), s, dt)
+    return p
+
+
+def _mlp_logical(cfg):
+    p = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = ("embed", "mlp")
+    return p
+
+
+def _moe_params(key, cfg, dt):
+    D, E, Fe = cfg.d_model, cfg.n_experts_eff, cfg.d_expert
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    so = 1.0 / math.sqrt(Fe)
+    p = {
+        "router": _init(ks[0], (D, cfg.n_experts_eff), s, jnp.float32),
+        "wi": _init(ks[1], (E, D, Fe), s, dt),
+        "wg": _init(ks[2], (E, D, Fe), s, dt),
+        "wo": _init(ks[3], (E, Fe, D), so, dt),
+    }
+    return p
+
+
+def _moe_logical():
+    return {
+        "router": ("embed", "experts"),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+
+
+def _mamba_params(key, cfg, dt):
+    D = cfg.d_model
+    di, nh, N, G = M.ssm_sizes(cfg)
+    Kc = cfg.ssm_conv
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(D)
+    so = 1.0 / math.sqrt(di)
+    return {
+        "w_z": _init(ks[0], (D, di), s, dt),
+        "w_x": _init(ks[1], (D, di), s, dt),
+        "w_B": _init(ks[2], (D, G * N), s, dt),
+        "w_C": _init(ks[3], (D, G * N), s, dt),
+        "w_dt": _init(ks[4], (D, nh), s, dt),
+        "conv_x": _init(ks[5], (di, Kc), 0.5 / math.sqrt(Kc), dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_B": _init(ks[6], (G * N, Kc), 0.5 / math.sqrt(Kc), dt),
+        "conv_bB": jnp.zeros((G * N,), dt),
+        "conv_C": _init(ks[7], (G * N, Kc), 0.5 / math.sqrt(Kc), dt),
+        "conv_bC": jnp.zeros((G * N,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "w_out": _init(ks[8], (di, D), so, dt),
+    }
+
+
+def _mamba_logical():
+    return {
+        "w_z": ("embed", "mlp"), "w_x": ("embed", "mlp"),
+        "w_B": ("embed", None), "w_C": ("embed", None),
+        "w_dt": ("embed", "ssm_heads"),
+        "conv_x": ("mlp", None), "conv_bx": ("mlp",),
+        "conv_B": (None, None), "conv_bB": (None,),
+        "conv_C": (None, None), "conv_bC": (None,),
+        "A_log": ("ssm_heads",), "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",), "norm": ("mlp",),
+        "w_out": ("mlp", "embed"),
+    }
+
+
+def _norm(cfg):
+    return jnp.zeros((cfg.d_model,), jnp.float32)
+
+
+BLOCK_BUILDERS = {}
+
+
+def _block_params(kind: str, key, cfg, dt):
+    ks = jax.random.split(key, 4)
+    if kind == "attn":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[1], cfg, dt)}
+    if kind == "attn_moe_shared":
+        shared_ff = cfg.n_shared_experts * cfg.d_expert
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "moe": _moe_params(ks[1], cfg, dt),
+                "shared": _mlp_params(ks[2], cfg, dt, d_ff=shared_ff)}
+    if kind == "attn_moe":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "moe": _moe_params(ks[1], cfg, dt)}
+    if kind == "mamba":
+        return {"ln1": _norm(cfg), "mamba": _mamba_params(ks[0], cfg, dt)}
+    if kind == "mamba_dense":
+        return {"ln1": _norm(cfg), "mamba": _mamba_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[1], cfg, dt)}
+    if kind == "mamba_moe":
+        return {"ln1": _norm(cfg), "mamba": _mamba_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "moe": _moe_params(ks[1], cfg, dt)}
+    if kind == "self":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[1], cfg, dt)}
+    if kind == "cross":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt, cross=True),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[1], cfg, dt)}
+    if kind == "enc":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[1], cfg, dt)}
+    if kind == "dec":
+        return {"ln1": _norm(cfg), "attn": _attn_params(ks[0], cfg, dt),
+                "lnx": _norm(cfg), "xattn": _attn_params(ks[1], cfg, dt, cross=True),
+                "ln2": _norm(cfg), "mlp": _mlp_params(ks[2], cfg, dt)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _block_logical(kind: str, cfg):
+    al = _attn_logical()
+    ml = _mlp_logical(cfg)
+    n = ("embed",)
+    if kind == "attn":
+        return {"ln1": n, "attn": al, "ln2": n, "mlp": ml}
+    if kind == "attn_moe_shared":
+        return {"ln1": n, "attn": al, "ln2": n, "moe": _moe_logical(),
+                "shared": ml}
+    if kind == "attn_moe":
+        return {"ln1": n, "attn": al, "ln2": n, "moe": _moe_logical()}
+    if kind == "mamba":
+        return {"ln1": n, "mamba": _mamba_logical()}
+    if kind == "mamba_dense":
+        return {"ln1": n, "mamba": _mamba_logical(), "ln2": n, "mlp": ml}
+    if kind == "mamba_moe":
+        return {"ln1": n, "mamba": _mamba_logical(), "ln2": n,
+                "moe": _moe_logical()}
+    if kind in ("self", "cross", "enc"):
+        return {"ln1": n, "attn": al, "ln2": n, "mlp": ml}
+    if kind == "dec":
+        return {"ln1": n, "attn": al, "lnx": n, "xattn": al, "ln2": n,
+                "mlp": ml}
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    pattern = cfg.block_pattern()
+    n_groups = cfg.n_groups()
+
+    def stack_blocks(key, kinds):
+        def one_group(k):
+            ks = jax.random.split(k, len(kinds))
+            return {f"b{i}": _block_params(kind, ks[i], cfg, dt)
+                    for i, kind in enumerate(kinds)}
+        gkeys = jax.random.split(key, n_groups)
+        groups = [one_group(k) for k in gkeys]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+
+    params = {
+        "embed": _init(keys[0], (cfg.vocab, cfg.d_model), 1.0, dt),
+        "unembed": _init(keys[1], (cfg.d_model, cfg.vocab),
+                         1.0 / math.sqrt(cfg.d_model), dt),
+        "final_norm": _norm(cfg),
+        "blocks": stack_blocks(keys[2], ["dec"] * len(pattern)
+                               if cfg.kind == "encdec" else list(pattern)),
+    }
+    if cfg.kind == "encdec":
+        enc_pattern = ["enc"]
+        assert cfg.n_enc_layers > 0
+        def enc_stack(key):
+            gkeys = jax.random.split(key, cfg.n_enc_layers)
+            groups = [{f"b0": _block_params("enc", k, cfg, dt)} for k in gkeys]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *groups)
+        params["enc_blocks"] = enc_stack(keys[3])
+        params["enc_norm"] = _norm(cfg)
+    if cfg.kind == "vlm":
+        params["img_proj"] = _init(keys[4], (cfg.vision_dim, cfg.d_model),
+                                   1.0 / math.sqrt(cfg.vision_dim), dt)
+    return params
+
+
+def params_logical(cfg: ModelConfig) -> Dict[str, Any]:
+    pattern = cfg.block_pattern()
+
+    def lg(kinds):
+        body = {f"b{i}": _block_logical(kind, cfg)
+                for i, kind in enumerate(kinds)}
+        # prepend the stacked-groups axis
+        return jax.tree.map(
+            lambda t: ("stack",) + t, body,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    out = {
+        "embed": ("vocab", "embed"),
+        "unembed": ("embed", "vocab"),
+        "final_norm": ("embed",),
+        "blocks": lg(["dec"] * len(pattern) if cfg.kind == "encdec"
+                     else list(pattern)),
+    }
+    if cfg.kind == "encdec":
+        out["enc_blocks"] = lg(["enc"])
+        out["enc_norm"] = ("embed",)
+    if cfg.kind == "vlm":
+        out["img_proj"] = (None, "embed")
+    return out
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active-per-token non-embedding params (MoE: routed experts count
+    top_k of n_experts)."""
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+    emb = cfg.vocab * cfg.d_model * 2
+    inactive = 0
+    if cfg.n_experts:
+        per_expert = cfg.d_model * cfg.d_expert * 3
+        n_moe_layers = 0
+        for kind in cfg.block_pattern():
+            if "moe" in kind:
+                n_moe_layers += 1
+        n_moe_layers *= cfg.n_groups()
+        inactive = n_moe_layers * (cfg.n_experts_eff - cfg.top_k) * per_expert
+    return total - emb - inactive
+
+
+# ==========================================================================
+# Forward pass
+# ==========================================================================
+
+def _apply_moe(p_moe, x, cfg, ctx):
+    """Route the MoE FFN. Uses the shard_map map() path on a real mesh with
+    a model axis whose size divides n_experts_eff; dense oracle otherwise."""
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+    use_map = False
+    if ctx is not None and "model" in ctx.mesh.axis_names:
+        tp = ctx.mesh.shape["model"]
+        use_map = tp > 1 and cfg.n_experts_eff % tp == 0
+    if use_map:
+        mesh = ctx.mesh
+        rules = ctx.rules_dict
+        from repro.sharding.specs import spec_for
+        from jax.sharding import PartitionSpec as P
+        tok_spec = spec_for(("batch", "embed"), rules, mesh)
+        w_specs = {
+            "router": P(),
+            "wi": spec_for(("experts", "embed", "expert_mlp"), rules, mesh),
+            "wg": spec_for(("experts", "embed", "expert_mlp"), rules, mesh),
+            "wo": spec_for(("experts", "expert_mlp", "embed"), rules, mesh),
+        }
+
+        def inner(x2d_l, w_l):
+            out, aux, dropped = MOE.moe_map_local(
+                x2d_l, w_l, cfg=cfg, axis_name="model", cons=None)
+            return out, jax.lax.pmean(aux, "model"), dropped
+
+        out, aux, dropped = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(tok_spec, w_specs),
+            out_specs=(tok_spec, P(), P()),
+            check_vma=False)(x2d, {k: p_moe[k] for k in w_specs})
+    else:
+        out, aux, dropped = MOE.moe_dense(x2d, p_moe, cfg=cfg)
+    return out.reshape(B, S, D), aux, dropped
+
+
+def apply_block(kind: str, p, x, *, cfg, ctx, positions, cache=None,
+                cache_len=None, enc_out=None, img_tokens=None):
+    """One block. Returns (x, new_cache, aux_loss)."""
+    cons = ctx.cons if ctx is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+
+    if kind in ("attn", "attn_moe", "attn_moe_shared", "self", "enc", "dec"):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        causal = kind != "enc"
+        a, c_attn = L.attention_layer(
+            p["attn"], h, cfg=cfg, positions=positions,
+            cache=None if cache is None else cache.get("attn"),
+            cache_len=cache_len, causal=causal, cons=cons)
+        x = x + a
+        if cache is not None:
+            new_cache = dict(new_cache or {})
+            new_cache["attn"] = c_attn
+        if kind == "dec":
+            h = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            if cache is not None and enc_out is None:
+                # decode: cached cross-projections (computed at prefill)
+                a, _ = L.attention_layer(
+                    p["xattn"], h, cfg=cfg, positions=positions,
+                    causal=False, cons=cons,
+                    kv_static=(cache["cross_k"], cache["cross_v"]))
+            else:
+                a, _ = L.attention_layer(
+                    p["xattn"], h, cfg=cfg, positions=positions,
+                    kv_override=enc_out, causal=False, cons=cons)
+                if cache is not None:
+                    ct = h.dtype
+                    new_cache = dict(new_cache or {})
+                    new_cache["cross_k"] = jnp.einsum(
+                        "bsd,dhk->bshk", enc_out.astype(ct),
+                        p["xattn"]["wk"].astype(ct)).astype(
+                            cache["cross_k"].dtype)
+                    new_cache["cross_v"] = jnp.einsum(
+                        "bsd,dhk->bshk", enc_out.astype(ct),
+                        p["xattn"]["wv"].astype(ct)).astype(
+                            cache["cross_v"].dtype)
+            x = x + a
+    elif kind == "cross":
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cache is not None and img_tokens is None:
+            # decode: cached image-token projections from prefill
+            a, _ = L.attention_layer(
+                p["attn"], h, cfg=cfg, positions=positions, causal=False,
+                cons=cons, kv_static=(cache["cross_k"], cache["cross_v"]))
+        else:
+            a, _ = L.attention_layer(p["attn"], h, cfg=cfg,
+                                     positions=positions,
+                                     kv_override=img_tokens, causal=False,
+                                     cons=cons)
+            if cache is not None:
+                ct = h.dtype
+                new_cache = dict(new_cache or {})
+                new_cache["cross_k"] = jnp.einsum(
+                    "bsd,dhk->bshk", img_tokens.astype(ct),
+                    p["attn"]["wk"].astype(ct)).astype(cache["cross_k"].dtype)
+                new_cache["cross_v"] = jnp.einsum(
+                    "bsd,dhk->bshk", img_tokens.astype(ct),
+                    p["attn"]["wv"].astype(ct)).astype(cache["cross_v"].dtype)
+        x = x + a
+    elif kind in ("mamba", "mamba_dense", "mamba_moe"):
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+        if cache is not None and cache.get("ssm") is not None and x.shape[1] == 1:
+            a, new_ssm = M.mamba_decode(p["mamba"], h, cache["ssm"], cfg=cfg,
+                                        cons=cons)
+            new_cache = dict(new_cache or {})
+            new_cache["ssm"] = new_ssm
+        else:
+            a, h_final, _ = M.mamba_prefill(p["mamba"], h, cfg=cfg, cons=cons)
+            if cache is not None:
+                new_cache = dict(new_cache or {})
+                ssm = dict(cache["ssm"])
+                ssm["h"] = h_final.astype(ssm["h"].dtype)
+                # conv ring caches: last K-1 pre-activation inputs
+                ct = h.dtype
+                Kc = cfg.ssm_conv
+                ssm["conv_x"] = (h @ p["mamba"]["w_x"].astype(ct))[:, -(Kc - 1):]
+                ssm["conv_B"] = (h @ p["mamba"]["w_B"].astype(ct))[:, -(Kc - 1):]
+                ssm["conv_C"] = (h @ p["mamba"]["w_C"].astype(ct))[:, -(Kc - 1):]
+                new_cache["ssm"] = ssm
+        x = x + a
+
+    # FFN part
+    if kind in ("attn", "self", "cross", "enc", "dec", "mamba_dense"):
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp_layer(p["mlp"], h, act=cfg.act, cons=cons)
+    elif kind in ("attn_moe", "mamba_moe"):
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        o, aux, _ = _apply_moe(p["moe"], h, cfg, ctx)
+        x = x + o
+    elif kind == "attn_moe_shared":
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        o, aux, _ = _apply_moe(p["moe"], h, cfg, ctx)
+        x = x + o + L.mlp_layer(p["shared"], h, act=cfg.act, cons=cons)
+    return x, new_cache, aux
+
+
+def _scan_blocks(params_blocks, x, *, cfg, ctx, positions, caches=None,
+                 cache_len=None, enc_out=None, img_tokens=None,
+                 pattern=None):
+    pattern = pattern or (["dec"] * len(cfg.block_pattern())
+                          if cfg.kind == "encdec" else list(cfg.block_pattern()))
+    cons = ctx.cons if ctx is not None else None
+
+    def body(carry, inp):
+        x, aux = carry
+        gp, gcache = inp
+        new_gcache = {} if gcache is not None else None
+        for i, kind in enumerate(pattern):
+            c = None if gcache is None else gcache.get(f"b{i}")
+            x, nc, a = apply_block(kind, gp[f"b{i}"], x, cfg=cfg, ctx=ctx,
+                                   positions=positions, cache=c,
+                                   cache_len=cache_len, enc_out=enc_out,
+                                   img_tokens=img_tokens)
+            if new_gcache is not None:
+                new_gcache[f"b{i}"] = nc
+            aux = aux + a
+        if cons is not None:
+            x = cons(x, ("batch", "seq", "embed"))
+        return (x, aux), new_gcache
+
+    if cfg.remat and cfg.remat_policy != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), (params_blocks, caches))
+    return x, aux, new_caches
+
+
+def embed_tokens(params, tokens, cfg, ctx):
+    cons = ctx.cons if ctx is not None else None
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cons is not None:
+        x = cons(x, ("batch", "seq", "embed"))
+    return x
+
+
+def encode(params, enc_embed, cfg, ctx):
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, D)."""
+    x = enc_embed.astype(jnp.dtype(cfg.compute_dtype))
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                           x.shape[:2])
+    x, _, _ = _scan_blocks(params["enc_blocks"], x, cfg=cfg, ctx=ctx,
+                           positions=pos, pattern=["enc"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def project_images(params, img_embed, cfg, ctx):
+    ct = jnp.dtype(cfg.compute_dtype)
+    return img_embed.astype(ct) @ params["img_proj"].astype(ct)
+
+
+def forward(params, batch, cfg: ModelConfig, ctx=None, caches=None,
+            cache_len=None):
+    """Unified forward. batch: dict from configs.base.input_specs.
+    Returns (logits, aux, new_caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if "position" in batch:
+        positions = batch["position"][:, None] + jnp.arange(S, dtype=jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    enc_out = None
+    img_tokens = None
+    if cfg.kind == "encdec" and not (S == 1 and caches is not None):
+        # train/prefill run the encoder; decode uses cached cross k/v
+        enc_out = encode(params, batch["enc_embed"], cfg, ctx)
+    if cfg.kind == "vlm" and not (S == 1 and caches is not None):
+        img_tokens = project_images(params, batch["img_embed"], cfg, ctx)
+
+    x = embed_tokens(params, tokens, cfg, ctx)
+    blk_caches = None if caches is None else caches["blocks"]
+    x, aux, new_blk_caches = _scan_blocks(
+        params["blocks"], x, cfg=cfg, ctx=ctx, positions=positions,
+        caches=blk_caches, cache_len=cache_len, enc_out=enc_out,
+        img_tokens=img_tokens)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"blocks": new_blk_caches}
+    return x, aux, new_caches
+
+
+def logits_from_hidden(params, x, cfg, ctx=None):
+    cons = ctx.cons if ctx is not None else None
+    logits = x @ params["unembed"].astype(x.dtype)
+    if cons is not None:
+        logits = cons(logits, ("batch", "seq", "vocab"))
+    return logits
+
+
+# ==========================================================================
+# KV / SSM cache construction
+# ==========================================================================
+
+def init_caches(cfg: ModelConfig, B: int, s_max: int, ctx=None):
+    """Zeroed cache pytree matching the scanned block structure."""
+    n_groups = cfg.n_groups()
+    pattern = (["dec"] * len(cfg.block_pattern()) if cfg.kind == "encdec"
+               else list(cfg.block_pattern()))
+    K, hd = cfg.n_kv_heads, cfg.hd
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def one(kind):
+        c = {}
+        if kind in ("attn", "attn_moe", "attn_moe_shared", "self", "dec"):
+            c["attn"] = {
+                "k": jnp.zeros((n_groups, B, s_max, K, hd), cdt),
+                "v": jnp.zeros((n_groups, B, s_max, K, hd), cdt),
+            }
+        if kind == "dec" and cfg.kind == "encdec":
+            c["cross_k"] = jnp.zeros((n_groups, B, cfg.enc_seq, K, hd), cdt)
+            c["cross_v"] = jnp.zeros((n_groups, B, cfg.enc_seq, K, hd), cdt)
+        if kind == "cross":
+            c["cross_k"] = jnp.zeros((n_groups, B, cfg.n_img_tokens, K, hd), cdt)
+            c["cross_v"] = jnp.zeros((n_groups, B, cfg.n_img_tokens, K, hd), cdt)
+        if kind in ("mamba", "mamba_dense", "mamba_moe"):
+            di, nh, N, G = M.ssm_sizes(cfg)
+            Kc = cfg.ssm_conv
+            c["ssm"] = {
+                "h": jnp.zeros((n_groups, B, nh, cfg.ssm_head_dim, N), jnp.float32),
+                "conv_x": jnp.zeros((n_groups, B, Kc - 1, di), cdt),
+                "conv_B": jnp.zeros((n_groups, B, Kc - 1, G * N), cdt),
+                "conv_C": jnp.zeros((n_groups, B, Kc - 1, G * N), cdt),
+            }
+        return c
+
+    blocks = {f"b{i}": one(kind) for i, kind in enumerate(pattern)}
+    return {"blocks": blocks}
+
+
+def caches_logical(cfg: ModelConfig):
+    pattern = (["dec"] * len(cfg.block_pattern()) if cfg.kind == "encdec"
+               else list(cfg.block_pattern()))
+
+    def one(kind):
+        c = {}
+        if kind in ("attn", "attn_moe", "attn_moe_shared", "self", "dec"):
+            c["attn"] = {
+                "k": ("stack", "batch", "kv_seq", "kv_heads", None),
+                "v": ("stack", "batch", "kv_seq", "kv_heads", None),
+            }
+        if kind == "dec" and cfg.kind == "encdec":
+            c["cross_k"] = ("stack", "batch", None, "kv_heads", None)
+            c["cross_v"] = ("stack", "batch", None, "kv_heads", None)
+        if kind == "cross":
+            c["cross_k"] = ("stack", "batch", None, "kv_heads", None)
+            c["cross_v"] = ("stack", "batch", None, "kv_heads", None)
+        if kind in ("mamba", "mamba_dense", "mamba_moe"):
+            c["ssm"] = {
+                "h": ("stack", "batch", "ssm_heads", None, None),
+                "conv_x": ("stack", "batch", None, "mlp"),
+                "conv_B": ("stack", "batch", None, None),
+                "conv_C": ("stack", "batch", None, None),
+            }
+        return c
+
+    blocks = {f"b{i}": one(kind) for i, kind in enumerate(pattern)}
+    return {"blocks": blocks}

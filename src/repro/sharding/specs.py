@@ -1,0 +1,148 @@
+"""Logical-axis sharding rules → NamedSharding.
+
+Every parameter/activation carries a tuple of *logical* axis names; a rule
+table maps logical names to mesh axis names (or None = replicated). This is
+the standard production pattern (MaxText/T5X): models are written once
+against logical axes, and parallelism layouts are swapped by editing the rule
+table — the LM-stack analogue of OpenFPM's decomposition-as-parameter design
+(paper §3.3: the decomposition is a template parameter of the data structure,
+not of the algorithm).
+
+Default layout:
+  batch   → ("pod", "data")   pure data parallelism across pods and the
+                              intra-pod data axis
+  heads/mlp/experts/vocab → "model"  tensor/expert parallelism intra-pod
+  embed   → None              activations replicated along d_model
+  kv_seq  → "data"            long-context KV/sequence sharding (decode)
+  fsdp    → "data"            parameters/optimizer-state sharded over the
+                              data axis (ZeRO); gathered on use by GSPMD
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Any]  # logical axis -> mesh axis | tuple | None
+
+# Rule sets. "fsdp" applies to *weights* stored sharded over the data axis
+# (ZeRO-3-style); GSPMD all-gathers them where used. For the baseline we keep
+# weights TP-sharded only and optimizer state fsdp-sharded (ZeRO-1).
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "kv_seq": "data",      # sharded KV cache for decode shapes
+    "conv": None,
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "fsdp": "data",
+    "stack": None,          # scan-stacked layer dim — never sharded
+}
+
+
+def mesh_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def _filter(axis, mesh: Mesh):
+    """Drop mesh axes the current mesh does not have (e.g. 'pod' on the
+    single-pod mesh)."""
+    names = set(mesh.axis_names)
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in names)
+        return kept if kept else None
+    return axis if axis in names else None
+
+
+def spec_for(logical: Tuple[Optional[str], ...], rules: Rules, mesh: Mesh) -> P:
+    parts = []
+    used = set()
+    for ax in logical:
+        m = _filter(rules.get(ax) if ax else None, mesh)
+        # a mesh axis may appear at most once in a PartitionSpec
+        if m is not None:
+            flat = (m,) if isinstance(m, str) else tuple(m)
+            if any(f in used for f in flat):
+                m = None
+            else:
+                used.update(flat)
+        parts.append(m)
+    return P(*parts)
+
+
+def sharding_for(logical, rules: Rules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(tuple(logical), rules, mesh))
+
+
+def legalize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they do not divide evenly — jit *argument*
+    shardings require divisibility (constraints inside the graph do not).
+    E.g. mamba2's vocab 50280 cannot take the 16-way model axis."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    for d, e in enumerate(spec):
+        if e is None or d >= len(shape):
+            parts.append(e)
+            continue
+        axes = (e,) if isinstance(e, str) else tuple(e)
+        prod = 1
+        for a in axes:
+            prod *= sizes.get(a, 1)
+        parts.append(e if shape[d] % prod == 0 else None)
+    return P(*parts)
+
+
+def tree_shardings(logical_tree, rules: Rules, mesh: Mesh):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda lg: sharding_for(lg, rules, mesh),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x: jax.Array, logical: Tuple[Optional[str], ...], rules: Rules,
+              mesh: Mesh) -> jax.Array:
+    """with_sharding_constraint against logical axes (no-op off-mesh)."""
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, sharding_for(logical, rules, mesh))
+    except ValueError:
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingContext:
+    """Bundles mesh + rules so model code reads cleanly."""
+
+    mesh: Mesh
+    rules: Tuple[Tuple[str, Any], ...]  # hashable form
+
+    @staticmethod
+    def create(mesh: Mesh, rules: Rules | None = None) -> "ShardingContext":
+        r = dict(DEFAULT_RULES)
+        if rules:
+            r.update(rules)
+        return ShardingContext(mesh=mesh, rules=tuple(sorted(r.items())))
+
+    @property
+    def rules_dict(self) -> Rules:
+        return dict(self.rules)
+
+    def cons(self, x, logical):
+        return constrain(x, logical, self.rules_dict, self.mesh)
+
+    def sharding(self, logical):
+        return sharding_for(logical, self.rules_dict, self.mesh)

@@ -1,0 +1,95 @@
+"""AdamW with memory-adaptive state dtype and ZeRO-sharded states.
+
+No external optimizer dependency: the optimizer is part of the substrate
+(system-prompt scope rule). Features needed at 1000-node scale:
+
+  * ZeRO-1: m/v live sharded over the ``data`` axis (sharding/specs.py adds
+    the 'fsdp' rule on the first divisible dimension); GSPMD then
+    reduce-scatters gradients into the update and all-gathers fresh params.
+  * state compression: ``opt_dtype=bfloat16`` halves optimizer memory for
+    ≥100B models (jamba-398B would not fit fp32 Adam on a 256×16 GB pod —
+    DESIGN.md §4 divisibility notes).
+  * global-norm clipping, decoupled weight decay, linear-warmup cosine decay.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    opt_dtype: str = "float32"
+
+
+def schedule(opt: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - opt.warmup_steps)
+                    / jnp.maximum(opt.total_steps - opt.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return opt.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(params, opt: OptConfig):
+    dt = jnp.dtype(opt.opt_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw_update(params, grads, state, opt: OptConfig):
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+    b1, b2 = opt.b1, opt.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + opt.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, lr

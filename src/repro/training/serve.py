@@ -1,0 +1,81 @@
+"""Serving steps: prefill (build KV/SSM caches for a batch of prompts) and
+decode (one token for every sequence in the batch against the cache).
+
+These are the functions the dry-run lowers for the ``prefill_32k``,
+``decode_32k`` and ``long_500k`` cells.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg: ModelConfig, s_max: int, ctx=None,
+                      with_cache: bool = True):
+    """prefill(params, batch) -> (last_logits, caches). ``batch["tokens"]``
+    is (B, S); caches are zero-initialized inside (their sharding is pinned
+    via constraints from caches_logical)."""
+
+    def prefill(params, batch):
+        B, S = batch["tokens"].shape
+        caches = T.init_caches(cfg, B, s_max) if with_cache else None
+        if ctx is not None and caches is not None:
+            lg = T.caches_logical(cfg)
+            caches = jax.tree.map(
+                lambda c, l: ctx.cons(c, l), caches, lg,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        hidden, aux, caches = T.forward(params, batch, cfg, ctx, caches=caches)
+        last = hidden[:, -1:]
+        logits = T.logits_from_hidden(params, last, cfg, ctx)
+        return logits, caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx=None):
+    """decode(params, caches, batch) -> (logits, new_caches).
+    batch: {"tokens": (B, 1), "position": (B,)} — the new token ids and
+    their positions; attends over cache[0..position]."""
+
+    def decode(params, caches, batch):
+        cache_len = batch["position"] + 1
+        hidden, aux, caches = T.forward(
+            params, batch, cfg, ctx, caches=caches, cache_len=cache_len)
+        logits = T.logits_from_hidden(params, hidden, cfg, ctx)
+        return logits, caches
+
+    return decode
+
+
+def greedy_generate(cfg, params, prompt, n_steps: int, s_max: int, ctx=None):
+    """Reference autoregressive loop (tests / examples): prefill then greedy
+    decode n_steps tokens."""
+    prefill = make_prefill_step(cfg, s_max, ctx)
+    decode = make_decode_step(cfg, ctx)
+    batch = {"tokens": prompt}
+    if cfg.kind == "encdec":
+        B = prompt.shape[0]
+        batch["enc_embed"] = jnp.zeros((B, cfg.enc_seq, cfg.d_model),
+                                       jnp.dtype(cfg.compute_dtype))
+    if cfg.kind == "vlm":
+        B = prompt.shape[0]
+        batch["img_embed"] = jnp.zeros((B, cfg.n_img_tokens, cfg.vision_dim),
+                                       jnp.dtype(cfg.compute_dtype))
+    logits, caches = prefill(params, batch)
+    B, S = prompt.shape
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    out = [tok]
+    pos = jnp.full((B,), S, jnp.int32)
+    for _ in range(n_steps - 1):
+        db = {"tokens": tok[:, None], "position": pos}
+        logits, caches = decode(params, caches, db)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

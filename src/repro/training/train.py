@@ -1,0 +1,131 @@
+"""Training step factory: chunked cross-entropy, remat, microbatch
+accumulation, ZeRO-sharded AdamW — the end-to-end train_step the dry-run
+lowers for every (arch × train shape) cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.training import optimizer as O
+
+
+def chunked_cross_entropy(hidden, targets, unembed, *, chunk: int, ctx=None,
+                          compute_dtype=jnp.bfloat16):
+    """Token-mean CE computed in sequence chunks so (B, S, V) logits never
+    materialize (V up to 256k)."""
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nch = S // chunk
+    h = hidden.reshape(B, nch, chunk, D)
+    t = targets.reshape(B, nch, chunk)
+
+    def step(carry, inp):
+        loss_sum, correct = carry
+        hc, tc = inp  # (B, chunk, D), (B, chunk)
+        logits = (hc @ unembed.astype(hc.dtype)).astype(jnp.float32)
+        if ctx is not None:
+            logits = ctx.cons(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum(lse - gold)
+        correct = correct + jnp.sum(jnp.argmax(logits, -1) == tc)
+        return (loss_sum, correct), None
+
+    (loss_sum, correct), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (jnp.moveaxis(h, 1, 0), jnp.moveaxis(t, 1, 0)))
+    n_tok = B * S
+    return loss_sum / n_tok, correct / n_tok
+
+
+def make_loss_fn(cfg: ModelConfig, ctx=None):
+    def loss_fn(params, batch):
+        hidden, aux, _ = T.forward(params, batch, cfg, ctx)
+        loss, acc = chunked_cross_entropy(
+            hidden, batch["targets"], params["unembed"],
+            chunk=cfg.loss_chunk, ctx=ctx)
+        total = loss + cfg.router_aux_coef * aux
+        return total, {"ce": loss, "aux": aux, "acc": acc}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: O.OptConfig, ctx=None,
+                    microbatch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``microbatch`` > 0 splits the batch into that many
+    accumulation steps (scan) — activation-memory relief at equal math."""
+    loss_fn = make_loss_fn(cfg, ctx)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatch <= 1:
+            return grad_fn(params, batch)
+
+        B = batch["tokens"].shape[0]
+        assert B % microbatch == 0
+        mb = B // microbatch
+        split = jax.tree.map(
+            lambda a: a.reshape((microbatch, mb) + a.shape[1:]), batch)
+
+        def acc_step(carry, mbatch):
+            gsum, lsum, msum = carry
+            (l, m), g = grad_fn(params, mbatch)
+            gsum = jax.tree.map(jnp.add, gsum, g)
+            return (gsum, lsum + l, jax.tree.map(jnp.add, msum, m)), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        zeros_m = {"ce": 0.0, "aux": 0.0, "acc": 0.0}
+        (gsum, lsum, msum), _ = jax.lax.scan(
+            acc_step, (zeros_g, jnp.zeros(()), zeros_m), split)
+        inv = 1.0 / microbatch
+        return ((lsum * inv, jax.tree.map(lambda x: x * inv, msum)),
+                jax.tree.map(lambda g: g * inv, gsum))
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = compute_grads(params, batch)
+        grads, gnorm = O.clip_by_global_norm(grads, opt.clip_norm)
+        params, opt_state, lr = O.adamw_update(params, grads, opt_state, opt)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# Sharding helpers for the jitted step
+# --------------------------------------------------------------------------
+
+def opt_logical(params_logical, mesh, rules):
+    """Optimizer-state logical axes: same as params, with the 'fsdp' rule
+    applied by replacing the first None-sharded, divisible dim. Returned as
+    a params-shaped pytree of logical tuples; 'step' handled separately."""
+    from repro.sharding import specs as SP
+
+    def zero1(logical):
+        # keep as-is; spec_for handles mesh filtering. fsdp refinement is
+        # applied at sharding level in launch/dryrun.py where shapes are
+        # known.
+        return logical
+
+    return jax.tree.map(
+        zero1, params_logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def batch_shardings(shape_mode: str, mesh, rules):
+    from repro.sharding import specs as SP
+    b = lambda *lg: SP.sharding_for(lg, rules, mesh)
+    if shape_mode == "train":
+        return {"tokens": b("batch", None), "targets": b("batch", None)}
+    if shape_mode == "prefill":
+        return {"tokens": b("batch", None)}
+    return {"tokens": b("batch", None), "position": b("batch")}

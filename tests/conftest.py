@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: device count stays 1 here (the dry-run alone uses
+512 forced host devices — see src/repro/launch/dryrun.py)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,219 @@
+"""Unit + property tests for the core substrate (decomposition, particles,
+cell lists, interactions, interpolation, DLB)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cell_list as CL, decomposition as D, dlb,
+                        domain as DOM, graph_partition as GP, hilbert,
+                        interactions as I, interp as IP, particles as P)
+
+
+# --------------------------------------------------------------------------
+# Decomposition (paper §3.2)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(nparts=st.integers(2, 9), dim=st.integers(1, 3),
+       method=st.sampled_from(["graph", "hilbert"]))
+def test_decomposition_invariants(nparts, dim, method):
+    dom = DOM.make_domain([0.0] * dim, [1.0] * dim,
+                          bc=["periodic"] * dim, ghost=0.05)
+    dec = D.decompose(dom, nparts, ssd_per_part=8, method=method)
+    # every sub-sub-domain assigned to a valid processor
+    assert dec.assignment.min() >= 0 and dec.assignment.max() < nparts
+    # sub-domains exactly tile the grid (no gap, no overlap)
+    cover = np.zeros(dec.grid_shape, int)
+    for sd in dec.subdomains:
+        sl = tuple(slice(l, h) for l, h in zip(sd.lo, sd.hi))
+        cover[sl] += 1
+        # owner consistency
+        assert (dec.assignment.reshape(dec.grid_shape)[sl] == sd.owner).all()
+    assert (cover == 1).all()
+    # balanced within tolerance for uniform weights
+    assert dec.imbalance() < 0.5
+
+
+def test_rebalance_moves_work_toward_loaded_region():
+    dom = DOM.make_domain([0, 0], [1, 1], bc=["periodic"] * 2)
+    dec = D.decompose(dom, 4, ssd_per_part=16)
+    # all cost concentrated in one corner
+    w = np.full(dec.n_ssd, 0.01)
+    w[:dec.n_ssd // 8] = 10.0
+    before = GP.imbalance(
+        GP.Graph(dec.graph.indptr, dec.graph.indices, w, dec.graph.ewgt),
+        dec.assignment, 4)
+    # many steps since the last rebalance: migration cost fully discounted
+    dec2 = D.rebalance(dec, w, steps_since_rebalance=100)
+    assert dec2.imbalance() < 0.2, (before, dec2.imbalance())
+    # migration-cost soft constraint: right after a rebalance (1 step), the
+    # decomposition barely moves (paper §3.5)
+    dec3 = D.rebalance(dec, w, steps_since_rebalance=1)
+    moved = (dec3.assignment != dec.assignment).mean()
+    moved_free = (dec2.assignment != dec.assignment).mean()
+    assert moved <= moved_free + 1e-9
+
+
+def test_hilbert_curve_bijective():
+    for dim, bits in [(2, 4), (3, 3)]:
+        n = 1 << bits
+        coords = np.stack(np.meshgrid(*[np.arange(n)] * dim,
+                                      indexing="ij"), -1).reshape(-1, dim)
+        idx = hilbert.hilbert_index(coords, bits)
+        assert len(np.unique(idx)) == len(coords)
+        # locality: successive curve points are grid neighbors
+        order = np.argsort(idx)
+        d = np.abs(np.diff(coords[order], axis=0)).sum(axis=1)
+        assert (d == 1).all()
+
+
+# --------------------------------------------------------------------------
+# ParticleSet (paper §3.1/3.3)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 40), cap=st.integers(40, 80), seed=st.integers(0, 5))
+def test_particles_add_conserves(n, cap, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n, 2))
+    ps = P.from_positions(x, capacity=cap,
+                          props={"id": jnp.arange(n, dtype=jnp.int32)})
+    extra = P.from_positions(x[: n // 2] + 0.5, capacity=cap,
+                             props={"id": 100 + jnp.arange(n // 2,
+                                                           dtype=jnp.int32)})
+    merged, overflow = ps.add_count(extra)
+    expect = min(cap, n + n // 2)
+    assert int(merged.count()) == expect
+    assert int(overflow) == n + n // 2 - expect
+    # compaction preserves the multiset of ids
+    ids0 = sorted(np.asarray(merged.props["id"])[np.asarray(merged.valid)])
+    comp = merged.compact()
+    ids1 = sorted(np.asarray(comp.props["id"])[np.asarray(comp.valid)])
+    assert ids0 == ids1
+    assert np.asarray(comp.valid)[: int(comp.count())].all()
+
+
+def test_particles_where_removes():
+    ps = P.from_positions(jnp.zeros((10, 3)), capacity=16)
+    ps2 = ps.where(jnp.arange(16) % 2 == 0)
+    assert int(ps2.count()) == 5
+
+
+# --------------------------------------------------------------------------
+# Cell/Verlet lists (paper §2) — vs brute force
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 60), seed=st.integers(0, 10),
+       periodic=st.booleans())
+def test_verlet_list_matches_bruteforce(n, seed, periodic):
+    key = jax.random.PRNGKey(seed)
+    r_cut = 0.3
+    x = jax.random.uniform(key, (n, 2))
+    ps = P.from_positions(x, capacity=n + 5)
+    gs = CL.grid_shape_for((0, 0), (1, 1), r_cut)
+    cl = CL.build_cell_list(ps, box_lo=(0.0, 0.0), box_hi=(1.0, 1.0),
+                            grid_shape=gs, periodic=(periodic,) * 2,
+                            cell_cap=n + 5)
+    vl = CL.build_verlet(ps, cl, r_cut, k_max=n + 5)
+    xn = np.asarray(x)
+    for i in range(n):
+        d = xn[i] - xn
+        if periodic:
+            d = d - np.round(d)
+        r2 = (d ** 2).sum(axis=1)
+        brute = set(np.nonzero((r2 < r_cut ** 2))[0].tolist()) - {i}
+        mine = set(np.asarray(vl.nbr[i]).tolist()) - {n + 5}
+        mine = {m for m in mine if m < n}
+        assert mine == brute, (i, mine, brute)
+
+
+def test_cell_list_overflow_detected():
+    x = jnp.zeros((20, 2)) + 0.05  # all in one cell
+    ps = P.from_positions(x, capacity=20)
+    cl = CL.build_cell_list(ps, box_lo=(0., 0.), box_hi=(1., 1.),
+                            grid_shape=(4, 4), periodic=(True, True),
+                            cell_cap=8)
+    assert int(cl.overflow) == 12
+
+
+# --------------------------------------------------------------------------
+# Interaction engine: all three paths agree (additivity/order-independence)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 50), seed=st.integers(0, 5))
+def test_interaction_paths_agree(n, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.uniform(key, (n, 2))
+    ps = P.from_positions(x, capacity=n + 7)
+    r_cut = 0.25
+    gs = CL.grid_shape_for((0, 0), (1, 1), r_cut)
+    cl = CL.build_cell_list(ps, box_lo=(0., 0.), box_hi=(1., 1.),
+                            grid_shape=gs, periodic=(True, True),
+                            cell_cap=n + 7)
+    kern = lambda dx, r2, wi, wj: dx * jnp.exp(-8 * r2)[..., None]
+    f_cells = I.apply_kernel_cells(ps, cl, kern, r_cut=r_cut)
+    vl = CL.build_verlet(ps, cl, r_cut, k_max=n + 7)
+    f_verlet = I.apply_kernel_verlet(ps, vl, cl, kern)
+    vlh = CL.build_verlet(ps, cl, r_cut, k_max=n + 7, half=True)
+    f_sym = I.apply_kernel_verlet_sym(ps, vlh, cl, kern, antisymmetric=True)
+    np.testing.assert_allclose(np.asarray(f_verlet), np.asarray(f_cells),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f_sym), np.asarray(f_cells),
+                               atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# M'4 interpolation (paper §4.4): moment conservation
+# --------------------------------------------------------------------------
+
+def test_p2m_conserves_total():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.uniform(key, (200, 2))
+    val = jax.random.normal(key, (200,))
+    valid = jnp.ones(200, bool)
+    f = IP.p2m(x, val, valid, shape=(32, 32), box_lo=(0., 0.),
+               box_hi=(1., 1.), periodic=(True, True))
+    np.testing.assert_allclose(float(f.sum()), float(val.sum()), rtol=1e-5)
+
+
+def test_m2p_reproduces_linear_field():
+    """M'4 has second-order moment conservation: linear fields are exact."""
+    shape = (32, 32)
+    xs = (jnp.arange(32) / 32.0)
+    field = xs[:, None] * jnp.ones((1, 32)) * 2.0 + 0.3
+    key = jax.random.PRNGKey(2)
+    x = 0.25 + 0.5 * jax.random.uniform(key, (100, 2))
+    valid = jnp.ones(100, bool)
+    got = IP.m2p(field, x, valid, shape=shape, box_lo=(0., 0.),
+                 box_hi=(1., 1.), periodic=(True, True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(2.0 * x[:, 0] + 0.3),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# DLB (paper §3.5)
+# --------------------------------------------------------------------------
+
+def test_balanced_bounds_equalize_cost():
+    key = jax.random.PRNGKey(3)
+    # clustered particles
+    x = jnp.concatenate([0.1 * jax.random.uniform(key, (800,)),
+                         0.9 + 0.1 * jax.random.uniform(key, (200,))])
+    valid = jnp.ones(1000, bool)
+    bounds = dlb.balanced_bounds(x, valid, 4, 0.0, 1.0)
+    counts = np.histogram(np.asarray(x), np.asarray(bounds))[0]
+    assert counts.max() <= 1.5 * counts.mean(), counts
+
+
+def test_sar_triggers_on_growing_imbalance():
+    sar = dlb.SARController(rebalance_cost=0.5)
+    fired = []
+    for step in range(60):
+        imb = 0.001 * step  # steadily degrading balance
+        fired.append(sar.observe(1.0 + imb, 1.0))
+    assert any(fired), "SAR must eventually trigger"
+    assert not fired[0], "SAR must not trigger immediately"

@@ -1,0 +1,64 @@
+"""DC-PSE operators (beyond-paper extension of the paper's §5 roadmap):
+consistency on scattered particles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cell_list as CL, dcpse, particles as P
+
+
+def _scattered(n=400, seed=0, jitter=True):
+    key = jax.random.PRNGKey(seed)
+    side = int(np.sqrt(n))
+    ps = P.init_grid((0.0, 0.0), (1.0, 1.0), (side, side), capacity=side * side,
+                     jitter=0.3 / side if jitter else 0.0, key=key)
+    r_cut = 3.5 / side
+    gs = CL.grid_shape_for((0, 0), (1, 1), r_cut)
+    cl = CL.build_cell_list(ps, box_lo=(0., 0.), box_hi=(1., 1.),
+                            grid_shape=gs, periodic=(False, False),
+                            cell_cap=64)
+    vl = CL.build_verlet(ps, cl, r_cut, k_max=48)
+    assert int(vl.overflow) == 0
+    return ps, vl
+
+
+def _interior(ps, margin=0.15):
+    x = np.asarray(ps.x)
+    return (np.asarray(ps.valid) & (x[:, 0] > margin) & (x[:, 0] < 1 - margin)
+            & (x[:, 1] > margin) & (x[:, 1] < 1 - margin))
+
+
+def test_gradient_exact_on_linear_field():
+    ps, vl = _scattered()
+    f = 3.0 * ps.x[:, 0] - 2.0 * ps.x[:, 1] + 0.7
+    g = dcpse.gradient(ps, vl, f)
+    sel = _interior(ps)
+    gx = np.asarray(g)[sel]
+    np.testing.assert_allclose(gx[:, 0], 3.0, atol=2e-2)
+    np.testing.assert_allclose(gx[:, 1], -2.0, atol=2e-2)
+
+
+def test_laplacian_on_quadratic_field():
+    ps, vl = _scattered()
+    f = ps.x[:, 0] ** 2 + 2.0 * ps.x[:, 1] ** 2      # ∆f = 2 + 4 = 6
+    lap = dcpse.laplacian(ps, vl, f)
+    sel = _interior(ps)
+    vals = np.asarray(lap)[sel]
+    np.testing.assert_allclose(vals, 6.0, atol=0.5)
+
+
+def test_derivative_of_smooth_field_converges():
+    errs = []
+    for n in (400, 1600):
+        ps, vl = _scattered(n=n, seed=1)
+        x = ps.x
+        f = jnp.sin(2 * jnp.pi * x[:, 0]) * jnp.cos(2 * jnp.pi * x[:, 1])
+        dfdx = dcpse.dcpse_apply(ps, vl, f, alpha=(1, 0), order=2)
+        ref = (2 * jnp.pi * jnp.cos(2 * jnp.pi * x[:, 0])
+               * jnp.cos(2 * jnp.pi * x[:, 1]))
+        sel = _interior(ps)
+        errs.append(float(np.abs(np.asarray(dfdx - ref))[sel].max())
+                    / (2 * np.pi))
+    assert errs[1] < errs[0], errs          # refines with resolution
+    assert errs[1] < 0.1, errs

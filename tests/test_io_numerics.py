@@ -1,0 +1,177 @@
+"""Checkpoint/restart (elastic), VTK output, Poisson solvers, HLO analyzer,
+optimizer behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.io import checkpoint as CK, vtk
+from repro.numerics import poisson as PS
+
+
+# --------------------------------------------------------------------------
+# checkpoint/restart (paper §3.7)
+# --------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+            "d": jnp.asarray(3)}
+    CK.save(tmp_path / "ck", tree, step=7, meta={"note": "x"})
+    out, step, meta = CK.load(tmp_path / "ck", tree)
+    assert step == 7 and meta["note"] == "x"
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_checkpoint_async_then_load(tmp_path):
+    tree = {"w": jnp.full((100,), 2.5)}
+    CK.save(tmp_path / "ck", tree, step=1, block=False)
+    CK.wait_all()
+    out, step, _ = CK.load(tmp_path / "ck", tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    tree = {"w": jnp.arange(50.0)}
+    CK.save(tmp_path / "ck", tree, step=1)
+    # flip a byte in the chunk
+    f = tmp_path / "ck" / "leaf_00000.npy"
+    data = bytearray(f.read_bytes())
+    data[-1] ^= 0xFF
+    f.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        CK.load(tmp_path / "ck", tree)
+
+
+def test_elastic_particle_restart(tmp_path):
+    """Paper §3.7: reload on a different capacity/decomposition."""
+    from repro.core import particles as P
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (37, 2))
+    ps = P.from_positions(x, capacity=64,
+                          props={"m": jnp.arange(37.0)})
+    CK.save_particles(tmp_path / "pk", ps, step=11)
+    ps2, step, meta = CK.load_particles(tmp_path / "pk", capacity=128)
+    assert step == 11 and meta["n"] == 37
+    assert ps2.capacity == 128 and int(ps2.count()) == 37
+    got = np.sort(np.asarray(ps2.props["m"])[np.asarray(ps2.valid)])
+    np.testing.assert_allclose(got, np.arange(37.0))
+
+
+def test_vtk_writers(tmp_path):
+    x = np.random.rand(10, 3)
+    vtk.write_particles(tmp_path / "p.vtk", x, {"rho": np.ones(10),
+                                                "v": np.zeros((10, 3))})
+    txt = (tmp_path / "p.vtk").read_text()
+    assert "POINTS 10 float" in txt and "VECTORS v float" in txt
+    vtk.write_grid(tmp_path / "g.vtk", np.zeros((4, 4, 4)))
+    assert "STRUCTURED_POINTS" in (tmp_path / "g.vtk").read_text()
+
+
+# --------------------------------------------------------------------------
+# Poisson solvers (PetSc replacement, paper §4.4)
+# --------------------------------------------------------------------------
+
+def _manufactured(shape, lengths):
+    ax = [np.arange(n) * (L / n) for n, L in zip(shape, lengths)]
+    X = np.meshgrid(*ax, indexing="ij")
+    kx = 2 * np.pi / lengths[0]
+    ky = 2 * np.pi / lengths[1]
+    u = np.sin(kx * X[0]) * np.cos(2 * ky * X[1])
+    lap = -(kx ** 2 + (2 * ky) ** 2) * u
+    return jnp.asarray(u, jnp.float32), jnp.asarray(lap, jnp.float32)
+
+
+def test_fft_poisson_continuous_solution():
+    shape, lengths = (64, 64), (1.0, 2.0)
+    u, rhs = _manufactured(shape, lengths)
+    got = PS.fft_poisson(rhs, lengths, discrete=False)
+    err = float(jnp.abs(got - u).max())
+    assert err < 1e-3, err
+
+
+def test_multigrid_matches_fft():
+    shape, lengths = (32, 32), (1.0, 1.0)
+    key = jax.random.PRNGKey(0)
+    rhs = jax.random.normal(key, shape)
+    rhs = rhs - jnp.mean(rhs)
+    mg = PS.multigrid_poisson(rhs, lengths, cycles=20)
+    assert float(PS.residual_norm(mg, rhs, lengths)) < 1e-2 * float(
+        jnp.std(rhs))
+    fft = PS.fft_poisson(rhs, lengths, discrete=True)
+    np.testing.assert_allclose(np.asarray(mg - jnp.mean(mg)),
+                               np.asarray(fft - jnp.mean(fft)), atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer (roofline instrument)
+# --------------------------------------------------------------------------
+
+def test_hlo_trip_count_scaling():
+    from repro.launch import hlo_analysis as HA
+
+    def f_scan(x, W):
+        def body(c, _):
+            return jnp.tanh(c @ W), ()
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    def f_unroll(x, W):
+        for _ in range(7):
+            x = jnp.tanh(x @ W)
+        return x
+
+    W = jnp.zeros((128, 128))
+    x = jnp.zeros((8, 128))
+    a1 = HA.analyze(jax.jit(f_scan).lower(x, W).compile().as_text())
+    a2 = HA.analyze(jax.jit(f_unroll).lower(x, W).compile().as_text())
+    expect = 7 * 2 * 8 * 128 * 128
+    assert a1["flops"] == expect, a1["flops"]
+    assert a2["flops"] == expect, a2["flops"]
+
+
+def test_hlo_grad_and_remat_flops():
+    from repro.launch import hlo_analysis as HA
+
+    def loss(Ws, x):
+        def body(c, W):
+            return jnp.tanh(c @ W), ()
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+        y, _ = jax.lax.scan(body, x, Ws)
+        return jnp.sum(y)
+
+    Ws = jnp.zeros((5, 64, 64))
+    x = jnp.zeros((8, 64))
+    a = HA.analyze(jax.jit(jax.grad(loss)).lower(Ws, x).compile().as_text())
+    # fwd + remat-fwd + 2 bwd dots per layer = 4 dots/layer
+    assert a["flops"] == 5 * 4 * 2 * 8 * 64 * 64, a["flops"]
+
+
+# --------------------------------------------------------------------------
+# Optimizer
+# --------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    from repro.training import optimizer as O
+    opt = O.OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                      weight_decay=0.0, clip_norm=10.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = O.init_opt_state(params, opt)
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        g, _ = O.clip_by_global_norm(g, opt.clip_norm)
+        params, state, _ = O.adamw_update(params, g, state, opt)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_bf16_state_memory():
+    from repro.training import optimizer as O
+    opt = O.OptConfig(opt_dtype="bfloat16")
+    params = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    state = O.init_opt_state(params, opt)
+    assert state["m"]["w"].dtype == jnp.bfloat16

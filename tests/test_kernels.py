@@ -1,0 +1,180 @@
+"""Per-Pallas-kernel validation: shape/dtype sweeps against the ref.py
+pure-jnp oracles, in interpret mode (kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.stencil7.stencil7 import gray_scott_step
+from repro.kernels.stencil7.ref import gray_scott_step_ref
+from repro.kernels.lj_cell.lj_cell import lj_cell_forces
+from repro.kernels.lj_cell.ref import lj_cell_forces_ref
+from repro.kernels.sph_forces.sph_forces import sph_cell_forces
+from repro.kernels.sph_forces.ref import sph_cell_forces_ref
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,hd,causal,dtype", [
+    (2, 4, 2, 256, 64, True, jnp.float32),
+    (1, 4, 4, 128, 128, False, jnp.float32),
+    (2, 8, 2, 256, 32, True, jnp.float32),
+    (1, 2, 1, 384, 64, True, jnp.bfloat16),
+    (1, 4, 2, 128, 256, True, jnp.float32),   # gemma-style head_dim
+])
+def test_flash_attention_matches_ref(B, H, K, S, hd, causal, dtype):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, S, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, S, hd)).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128,
+                        interpret=True)
+    o_ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+@settings(max_examples=6, deadline=None)
+@given(nq=st.integers(1, 3), nk_extra=st.integers(0, 2),
+       hd=st.sampled_from([32, 64]), rep=st.sampled_from([1, 2, 4]))
+def test_flash_attention_property_sweep(nq, nk_extra, hd, rep):
+    """Property: any (block-multiple) shape matches the oracle."""
+    B, K = 1, 2
+    H = K * rep
+    Sq = 128 * nq
+    key = jax.random.PRNGKey(nq * 7 + hd)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, Sq, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, Sq, hd), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(o), np.asarray(attention_ref(q, k, v, causal=True)),
+        atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# stencil7
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,block_x", [((16, 16, 16), 4),
+                                           ((32, 16, 8), 8),
+                                           ((8, 32, 32), 8)])
+def test_stencil_matches_ref(shape, block_x):
+    key = jax.random.PRNGKey(1)
+    u = jax.random.uniform(key, shape)
+    v = jax.random.uniform(jax.random.fold_in(key, 1), shape)
+    args = dict(Du=2e-5, Dv=1e-5, F=0.03, k=0.06, dt=1.0, inv_h2=100.0)
+    u1, v1 = gray_scott_step(u, v, block_x=block_x, interpret=True, **args)
+    u2, v2 = gray_scott_step_ref(u, v, **args)
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), atol=1e-6)
+
+
+def test_stencil_many_steps_stable():
+    shape = (16, 16, 16)
+    u = jnp.ones(shape)
+    v = jnp.zeros(shape).at[4:8, 4:8, 4:8].set(0.5)
+    args = dict(Du=2e-5, Dv=1e-5, F=0.03, k=0.06, dt=1.0, inv_h2=100.0)
+    for _ in range(20):
+        u, v = gray_scott_step(u, v, block_x=4, interpret=True, **args)
+    assert np.isfinite(np.asarray(u)).all()
+    assert float(u.max()) <= 1.5 and float(v.min()) >= -0.5
+
+
+# --------------------------------------------------------------------------
+# lj_cell
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(C=st.integers(2, 9), cc=st.sampled_from([8, 16]),
+       K=st.sampled_from([8, 27]), seed=st.integers(0, 5))
+def test_lj_cell_matches_ref(C, cc, K, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2)
+    cell_x = jax.random.uniform(ks[0], (C, cc, 3))
+    nbr_x = jax.random.uniform(ks[1], (C, K * cc, 3))
+    mi = jax.random.uniform(ks[0], (C, cc)) > 0.2
+    mj = jax.random.uniform(ks[1], (C, K * cc)) > 0.2
+    kw = dict(sigma=0.1, epsilon=1.0, r_cut=0.3)
+    f1 = lj_cell_forces(cell_x, nbr_x, mi, mj, interpret=True, **kw)
+    f2 = lj_cell_forces_ref(cell_x, nbr_x, mi, mj, **kw)
+    scale = float(jnp.abs(f2).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(f1) / scale,
+                               np.asarray(f2) / scale, atol=1e-5)
+
+
+def test_lj_cell_end_to_end_matches_engine():
+    from repro.apps import md
+    from repro.core import cell_list as CL, interactions as I
+    from repro.kernels.lj_cell import ops as LJOPS
+    cfg = md.MDConfig(n_per_side=5)
+    ps = md.init_particles(cfg)
+    key = jax.random.PRNGKey(0)
+    ps = ps.replace(x=jnp.where(ps.valid[:, None],
+                                ps.x + 0.01 * jax.random.normal(key, ps.x.shape),
+                                ps.x))
+    f_op, _ = LJOPS.forces(ps, cfg)
+    gs = CL.grid_shape_for((0, 0, 0), (cfg.box,) * 3, cfg.r_cut)
+    cl = CL.build_cell_list(ps, box_lo=(0.,) * 3, box_hi=(cfg.box,) * 3,
+                            grid_shape=gs, periodic=(True,) * 3,
+                            cell_cap=cfg.cell_cap)
+    f_eng = I.apply_kernel_cells(ps, cl, md.lj_force_kernel(cfg),
+                                 r_cut=cfg.r_cut)
+    rel = float(jnp.abs(f_op - f_eng).max()) / (float(jnp.abs(f_eng).max()) + 1e-9)
+    assert rel < 1e-5, rel
+
+
+# --------------------------------------------------------------------------
+# sph_forces
+# --------------------------------------------------------------------------
+
+def _sph_cfg():
+    from repro.apps.sph import SPHConfig
+    return SPHConfig(dp=0.05, box=(1.0, 0.5), fluid=(0.25, 0.25))
+
+
+@settings(max_examples=6, deadline=None)
+@given(C=st.integers(2, 6), cc=st.sampled_from([8, 16]), seed=st.integers(0, 4))
+def test_sph_cell_matches_ref(C, cc, seed):
+    cfg = _sph_cfg()
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    K = 9
+    cx = 0.2 * jax.random.uniform(ks[0], (C, cc, 2))
+    nx = 0.2 * jax.random.uniform(ks[1], (C, K * cc, 2))
+    cv = jax.random.normal(ks[2], (C, cc, 2))
+    nv = jax.random.normal(ks[3], (C, K * cc, 2))
+    cr = cfg.rho0 * (1 + 0.02 * jax.random.normal(ks[0], (C, cc)))
+    nr = cfg.rho0 * (1 + 0.02 * jax.random.normal(ks[1], (C, K * cc)))
+    mi = jax.random.uniform(ks[2], (C, cc)) > 0.2
+    mj = jax.random.uniform(ks[3], (C, K * cc)) > 0.2
+    a1, d1 = sph_cell_forces(cx, nx, cv, nv, cr, nr, mi, mj, cfg=cfg,
+                             interpret=True)
+    a2, d2 = sph_cell_forces_ref(cx, nx, cv, nv, cr, nr, mi, mj, cfg=cfg)
+    sa = float(jnp.abs(a2).max()) + 1.0
+    sd = float(jnp.abs(d2).max()) + 1.0
+    np.testing.assert_allclose(np.asarray(a1) / sa, np.asarray(a2) / sa,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d1) / sd, np.asarray(d2) / sd,
+                               atol=2e-5)
+
+
+def test_sph_op_matches_app_engine():
+    from repro.apps import sph
+    from repro.kernels.sph_forces import ops as SOPS
+    cfg = _sph_cfg()
+    ps = sph.init_dam_break(cfg)
+    for i in range(10):
+        ps, dt, _ = sph.sph_step(ps, cfg, euler=(i % 40 == 0))
+    a1, d1, _ = SOPS.compute_rates(ps, cfg)
+    a2, d2, _ = sph.compute_rates(ps, cfg)
+    rel = float(jnp.abs(a1 - a2).max()) / (float(jnp.abs(a2).max()) + 1e-9)
+    assert rel < 1e-4, rel

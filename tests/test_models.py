@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+REDUCED config runs one forward + one train step on CPU (shapes + finite
+outputs), and prefill+decode exactly matches the one-shot forward (the
+KV/SSM-cache correctness invariant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.training import optimizer as O, serve as SV, train as TR
+
+ARCHS = list(registry.ARCH_NAMES)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+             "targets": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.kind == "encdec":
+        batch["enc_embed"] = 0.1 * jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model))
+    if cfg.kind == "vlm":
+        batch["img_embed"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_img_tokens, cfg.vision_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = registry.get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    hidden, aux, _ = T.forward(params, batch, cfg)
+    assert hidden.shape == (2, 16, cfg.d_model)
+    assert bool(jnp.isfinite(hidden).all()), arch
+    opt = O.OptConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    opt_state = O.init_opt_state(params, opt)
+    step = jax.jit(TR.make_train_step(cfg, opt))
+    losses = []
+    for _ in range(3):
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all(), (arch, losses)
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = registry.get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg, key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    batch.pop("targets")
+    toks = batch["tokens"]
+    hidden, _, _ = T.forward(params, batch, cfg)
+    full_logits = T.logits_from_hidden(params, hidden, cfg)
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :8]
+    prefill = SV.make_prefill_step(cfg, s_max=16)
+    decode = SV.make_decode_step(cfg)
+    logits, caches = prefill(params, pb)
+    errs = [float(jnp.abs(logits[:, 0] - full_logits[:, 7]).max())]
+    for t in range(8, S):
+        db = {"tokens": toks[:, t:t + 1],
+              "position": jnp.full((B,), t, jnp.int32)}
+        logits, caches = decode(params, caches, db)
+        errs.append(float(jnp.abs(logits[:, 0] - full_logits[:, t]).max()))
+    assert max(errs) < 2e-3, (arch, errs)
+
+
+def test_full_configs_match_published_sizes():
+    """The FULL configs are exercised via eval_shape only (no allocation)."""
+    expect = {
+        "starcoder2-15b": (14.0e9, 18.0e9),
+        "jamba-1.5-large-398b": (390e9, 405e9),
+        "qwen3-moe-235b-a22b": (230e9, 240e9),
+        "qwen2-moe-a2.7b": (13e9, 16.5e9),
+        "mamba2-780m": (0.7e9, 1.0e9),
+        "whisper-medium": (0.6e9, 0.9e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        cfg = registry.get_config(arch)
+        shapes = jax.eval_shape(
+            lambda c=cfg: T.init_params(c, jax.random.PRNGKey(0)))
+        n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(shapes))
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_map_equals_dense_oracle():
+    """The shard_map token-map() dispatch equals the dropless dense oracle
+    when capacity suffices (paper map() semantics)."""
+    import dataclasses
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.models import moe as MOE
+    cfg = registry.get_config("qwen2-moe-a2.7b", reduced=True)
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    key = jax.random.PRNGKey(0)
+    E, D, Fe = cfg.n_experts_eff, cfg.d_model, cfg.d_expert
+    w = {
+        "router": 0.5 * jax.random.normal(key, (D, E)),
+        "wi": 0.3 * jax.random.normal(key, (E, D, Fe)),
+        "wg": 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (E, D, Fe)),
+        "wo": 0.3 * jax.random.normal(jax.random.fold_in(key, 2), (E, Fe, D)),
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 3), (24, D))
+    out_dense, aux_d, _ = MOE.moe_dense(x, w, cfg=cfg)
+    # single-device mesh: tp=1, every expert local
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    fn = jax.shard_map(
+        lambda xx, ww: MOE.moe_map_local(xx, ww, cfg=cfg, axis_name="model"),
+        mesh=mesh, in_specs=(P(), jax.tree.map(lambda _: P(), w)),
+        out_specs=(P(), P(), P()), check_vma=False)
+    out_map, aux_m, dropped = fn(x, w)
+    assert int(dropped) == 0
+    np.testing.assert_allclose(np.asarray(out_map), np.asarray(out_dense),
+                               atol=2e-4)
+    np.testing.assert_allclose(float(aux_m), float(aux_d), rtol=1e-5)
+
+
+def test_mamba_seq_sharded_prefill_matches_serial():
+    """Sequence-parallel SSD prefill (ghost-state ring exchange) equals the
+    single-device scan — the paper's ghost_get applied to SSM state."""
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.configs import registry
+from repro.models import mamba as M, transformer as T
+
+cfg = registry.get_config("mamba2-780m", reduced=True)
+key = jax.random.PRNGKey(0)
+p = T.init_params(cfg, key)["blocks"]
+params = jax.tree.map(lambda a: a[0]["b0"] if False else a, p)
+# take layer 0 mamba params
+blk = jax.tree.map(lambda a: a[0], p)["b0"]["mamba"]
+B, S, D = 2, 32, cfg.d_model
+x = 0.1 * jax.random.normal(key, (B, S, D))
+y_ref, h_ref, _ = M.mamba_prefill(blk, x, cfg=cfg)
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+fn = jax.shard_map(
+    lambda xx, ww: M.mamba_prefill_seq_sharded(ww, xx, cfg=cfg, axis_name="data"),
+    mesh=mesh, in_specs=(P(None, "data", None), jax.tree.map(lambda _: P(), blk)),
+    out_specs=(P(None, "data", None), P("data")), check_vma=False)
+y_sh, h_sh = fn(x, blk)
+err_y = float(jnp.abs(y_sh - y_ref).max())
+err_h = float(jnp.abs(h_sh[-B:] - h_ref).max())  # last shard = global final
+assert err_y < 1e-3, err_y
+assert err_h < 1e-3, err_h
+print("SEQ-SHARDED MAMBA OK", err_y, err_h)
+"""
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "SEQ-SHARDED MAMBA OK" in r.stdout, r.stdout + r.stderr

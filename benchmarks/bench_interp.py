@@ -1,0 +1,63 @@
+"""Paper §4.4 interpolation hot path: M'4 P2M / fused M2P / full remesh
+step — jnp oracle (core/interp) vs the m4_interp kernel path. Off-TPU the
+kernel runs in interpret mode, so treat its numbers as a correctness-path
+lower bound; the roofline dry-run carries the TPU projection (DESIGN.md
+§6/§7)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_fn
+from repro.core import interp as IP
+from repro.core import remesh as RM
+from repro.kernels.m4_interp import ops as M4
+
+
+def run():
+    shape = (32, 16, 16)
+    lengths = (8.0, 4.0, 4.0)
+    kw = dict(shape=shape, box_lo=(0.0, 0.0, 0.0), box_hi=lengths,
+              periodic=(True, True, True))
+    on_tpu = jax.devices()[0].platform == "tpu"
+    tag = "" if on_tpu else "_interp"   # interpret-mode disclaimer suffix
+
+    # VIC-realistic layout: one slightly-jittered particle per mesh node
+    key = jax.random.PRNGKey(0)
+    nodes = RM.node_positions(shape, kw["box_lo"], kw["box_hi"],
+                              kw["periodic"])
+    n = nodes.shape[0]
+    h0 = lengths[0] / shape[0]
+    x = jnp.mod(nodes + 0.3 * h0 * jax.random.normal(key, nodes.shape),
+                jnp.asarray(lengths))
+    val = jax.random.normal(jax.random.fold_in(key, 1), (n, 3))
+    valid = jnp.ones(n, bool)
+    u = jax.random.normal(jax.random.fold_in(key, 2), shape + (3,))
+    r = jax.random.normal(jax.random.fold_in(key, 3), shape + (3,))
+
+    sec_p2m_ref, _ = time_fn(
+        jax.jit(lambda xx, vv: IP.p2m(xx, vv, valid, **kw)), x, val)
+    sec_p2m_pal, _ = time_fn(
+        jax.jit(lambda xx, vv: M4.p2m(xx, vv, valid, **kw)), x, val)
+    sec_m2p_ref, _ = time_fn(
+        jax.jit(lambda a, b: (IP.m2p(a, x, valid, **kw),
+                              IP.m2p(b, x, valid, **kw))), u, r)
+    sec_m2p_pal, _ = time_fn(
+        jax.jit(lambda a, b: M4.m2p_fused((a, b), x, valid, **kw)), u, r)
+    sec_rm, _ = time_fn(
+        jax.jit(lambda xx, vv: RM.remesh(xx, vv, valid, threshold=1e-4,
+                                         **kw)[1]), x, val)
+
+    return [
+        row("interp_p2m_oracle", sec_p2m_ref,
+            f"{n / sec_p2m_ref / 1e6:.2f}M p2m/s"),
+        row(f"interp_p2m_m4kernel{tag}", sec_p2m_pal,
+            f"{n / sec_p2m_pal / 1e6:.2f}M p2m/s "
+            f"({sec_p2m_ref / sec_p2m_pal:.2f}x oracle)"),
+        row("interp_m2p2_oracle", sec_m2p_ref,
+            f"{n / sec_m2p_ref / 1e6:.2f}M m2p/s (u+rhs, 2 gathers)"),
+        row(f"interp_m2p_fused_m4kernel{tag}", sec_m2p_pal,
+            f"{n / sec_m2p_pal / 1e6:.2f}M m2p/s (u+rhs, 1 fused pass, "
+            f"{sec_m2p_ref / sec_m2p_pal:.2f}x oracle)"),
+        row("interp_remesh_step", sec_rm,
+            f"{n / sec_rm / 1e6:.2f}M node-reseeds/s (P2M + threshold "
+            f"seed + compaction)"),
+    ]

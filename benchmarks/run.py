@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_sph      — paper Table 3 (SPH time fractions)
   bench_stencil  — paper Table 4 / Fig 7 (Gray-Scott)
   bench_vortex   — paper Fig 9 (vortex-in-cell, Poisson split)
+  bench_interp   — paper §4.4 M'4 P2M/M2P + remesh (m4_interp vs oracle)
   bench_dem      — paper Fig 11 (DEM avalanche)
   bench_cmaes    — paper Fig 12 (PS-CMA-ES)
   bench_roofline — production-mesh roofline per dry-run cell
@@ -18,12 +19,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks import (bench_cmaes, bench_dem, bench_md, bench_membw,
-                            bench_roofline, bench_sph, bench_stencil,
-                            bench_vortex)
+    from benchmarks import (bench_cmaes, bench_dem, bench_interp, bench_md,
+                            bench_membw, bench_roofline, bench_sph,
+                            bench_stencil, bench_vortex)
     print("name,us_per_call,derived")
     for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
-                bench_vortex, bench_dem, bench_cmaes, bench_roofline):
+                bench_vortex, bench_interp, bench_dem, bench_cmaes,
+                bench_roofline):
         for line in mod.run():
             print(line, flush=True)
 

@@ -1,6 +1,11 @@
 """Vortex-in-cell ring (paper §4.4): self-propulsion diagnostics.
 
-    PYTHONPATH=src python examples/vortex_ring.py [--steps 40]
+    PYTHONPATH=src python examples/vortex_ring.py [--steps 40] [--pallas] \
+        [--remesh-threshold 1e-4]
+
+``--pallas`` routes the M'4 interpolation legs through the fused
+kernels/m4_interp Pallas subsystem (interpret mode off-TPU);
+``--remesh-threshold`` re-seeds particles only on nodes with |ω| above it.
 """
 import argparse
 import pathlib
@@ -17,13 +22,22 @@ from repro.io import vtk
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--pallas", action="store_true",
+                    help="use the kernels/m4_interp Pallas subsystem")
+    ap.add_argument("--remesh-threshold", type=float, default=0.0,
+                    help="|omega| node re-seed cutoff (0 = all nodes)")
     args = ap.parse_args()
     cfg = V.VortexConfig(shape=(64, 32, 32), lengths=(16.0, 5.57, 5.57),
-                         dt=0.02)
+                         dt=0.02, use_pallas=args.pallas,
+                         remesh_threshold=args.remesh_threshold)
     w = V.project_divfree(V.init_ring(cfg), cfg)
     z = [float(V.centroid_z(w, cfg))]
     for i in range(args.steps):
-        w = V.vic_step(w, cfg)
+        w, cfg2 = V.step_reprovision(w, cfg)
+        if cfg2.interp_cell_cap != cfg.interp_cell_cap:
+            print(f"step {i + 1:4d}: bucket overflow — re-provisioned "
+                  f"interp_cell_cap to {cfg2.interp_cell_cap}")
+            cfg = cfg2
         if (i + 1) % 10 == 0:
             z.append(float(V.centroid_z(w, cfg)))
             print(f"step {i + 1:4d}: centroid z = {z[-1]:.4f} "

@@ -10,6 +10,12 @@ Per step (two-stage RK with remeshing, M'4 interpolations):
   4. move particles / update particle vorticity (RK2)
   5. interpolate vorticity back to the mesh (P2M, M'4) and remesh
 
+Steps 3–5 route through the particle–mesh interpolation subsystem: the
+remeshing engine (``core.remesh``) re-seeds particles on mesh nodes above
+``remesh_threshold`` each step, and ``use_pallas=True`` switches the M'4
+legs from the jnp oracle (``core.interp``) to the fused Pallas kernels
+(``kernels.m4_interp`` — one M2P pass interpolates u AND the RHS).
+
 Validation (paper): the vortex ring self-propels along its axis — the
 vorticity centroid advances — while total circulation stays bounded.
 """
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import interp as IP
+from repro.core import remesh as RM
 from repro.numerics import poisson as PS
 
 
@@ -36,6 +43,11 @@ class VortexConfig:
     ring_R: float = 1.0
     ring_sigma: float = 1.0 / 3.531
     gamma: float = 1.0
+    # particle–mesh interpolation subsystem (steps 3–5)
+    use_pallas: bool = False          # kernels/m4_interp instead of core/interp
+    remesh_threshold: float = 0.0     # |ω| node re-seed cutoff (0 = all nodes)
+    interp_cb: int = 4                # mesh nodes per interpolation cell/axis
+    interp_cell_cap: int = 0          # particle slots per cell (0 = auto)
 
 
 def _axes(cfg):
@@ -120,36 +132,80 @@ def _mesh_particles(cfg):
     return jnp.asarray(g, jnp.float32)
 
 
+def _interp_ops(cfg: VortexConfig, kw):
+    """Steps 3/5 backends per config flag: ``bucket`` builds (or skips) the
+    per-position-set cell bucketing, which the fused m2p / p2m reuse — the
+    RK2 stage interpolates twice at x1 but buckets it once."""
+    if cfg.use_pallas:
+        from repro.kernels.m4_interp import ops as M4
+        pk = dict(cb=cfg.interp_cb, **kw)
+
+        def bucket(x, valid):
+            return M4.bucket_particles(x, valid,
+                                       cell_cap=cfg.interp_cell_cap, **pk)
+
+        def m2p2(b, fa, fb, x, valid):
+            return M4.m2p_fused_bucketed(b, (fa, fb), valid, **pk)
+
+        def p2m_(b, x, val, valid):
+            return M4.p2m_bucketed(b, val, **pk)
+
+        def ovf(b):
+            return b.overflow
+    else:
+        def bucket(x, valid):
+            return None
+
+        def m2p2(b, fa, fb, x, valid):
+            return IP.m2p(fa, x, valid, **kw), IP.m2p(fb, x, valid, **kw)
+
+        def p2m_(b, x, val, valid):
+            return IP.p2m(x, val, valid, **kw)
+
+        def ovf(b):
+            return jnp.zeros((), jnp.int32)
+    return bucket, m2p2, p2m_, ovf
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def vic_step(w, cfg: VortexConfig):
-    """One RK2 step with remeshing. w: (nx,ny,nz,3) mesh vorticity."""
+    """One RK2 step with remeshing. w: (nx,ny,nz,3) mesh vorticity.
+    Returns (w_next, overflow) — overflow counts particles dropped by
+    interpolation-cell capacity (Pallas path only; 0 on the jnp path).
+    Non-zero means re-provision ``interp_cell_cap`` (see :func:`run`)."""
     kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0),
               box_hi=cfg.lengths, periodic=(True, True, True))
-    x0 = _mesh_particles(cfg)
-    valid = jnp.ones(x0.shape[0], bool)
-    wp0 = w.reshape(-1, 3)
+    bucket, m2p2, p2m_, ovf = _interp_ops(cfg, kw)
+    # remeshing engine: re-seed particles on significant mesh nodes
+    ps, _ = RM.seed_from_mesh(w, box_lo=kw["box_lo"], box_hi=kw["box_hi"],
+                              periodic=kw["periodic"],
+                              threshold=cfg.remesh_threshold, dim=3)
+    x0, wp0, valid = ps.x, ps.props["w"], ps.valid
 
     # stage 1
+    b0 = bucket(x0, valid)
     u0 = velocity_from_vorticity(w, cfg)
     r0 = rhs_field(w, u0, cfg)
-    up = IP.m2p(u0, x0, valid, **kw)
-    rp = IP.m2p(r0, x0, valid, **kw)
+    up, rp = m2p2(b0, u0, r0, x0, valid)
     x1 = x0 + cfg.dt * up
     wp1 = wp0 + cfg.dt * rp
     # P2M of stage-1 state
     L = jnp.asarray(cfg.lengths, x1.dtype)
-    x1 = jnp.mod(x1, L)
-    w1 = IP.p2m(x1, wp1, valid, **kw)
+    x1 = jnp.where(valid[:, None], jnp.mod(x1, L), x1)
+    b1 = bucket(x1, valid)
+    w1 = p2m_(b1, x1, wp1, valid)
     # stage 2 at the predicted state
     u1 = velocity_from_vorticity(w1, cfg)
     r1 = rhs_field(w1, u1, cfg)
-    up1 = IP.m2p(u1, x1, valid, **kw)
-    rp1 = IP.m2p(r1, x1, valid, **kw)
+    up1, rp1 = m2p2(b1, u1, r1, x1, valid)
     # combine (midpoint average), move from x0
-    xf = jnp.mod(x0 + 0.5 * cfg.dt * (up + up1), L)
+    xf = jnp.where(valid[:, None],
+                   jnp.mod(x0 + 0.5 * cfg.dt * (up + up1), L), x0)
     wpf = wp0 + 0.5 * cfg.dt * (rp + rp1)
-    wf = IP.p2m(xf, wpf, valid, **kw)
-    return wf
+    bf = bucket(xf, valid)
+    wf = p2m_(bf, xf, wpf, valid)
+    overflow = ovf(b0) + ovf(b1) + ovf(bf)
+    return wf, overflow
 
 
 def centroid_z(w, cfg: VortexConfig) -> jax.Array:
@@ -165,9 +221,25 @@ def enstrophy(w) -> jax.Array:
     return 0.5 * jnp.mean(jnp.sum(w * w, axis=-1))
 
 
+def step_reprovision(w, cfg: VortexConfig):
+    """vic_step plus its control plane: on bucket overflow, double
+    ``interp_cell_cap`` and redo the step (the OpenFPM re-provision
+    contract). Returns (w_next, cfg) — cfg may have grown. The jnp path
+    skips the host sync entirely (overflow is structurally zero there), so
+    steps still dispatch asynchronously."""
+    w2, ovf = vic_step(w, cfg)
+    if cfg.use_pallas:
+        from repro.kernels.m4_interp.ops import default_cell_cap
+        while int(ovf) > 0:
+            cap = cfg.interp_cell_cap or default_cell_cap(cfg.interp_cb, 3)
+            cfg = dataclasses.replace(cfg, interp_cell_cap=2 * cap)
+            w2, ovf = vic_step(w, cfg)
+    return w2, cfg
+
+
 def run(cfg: VortexConfig, n_steps: int):
     w = project_divfree(init_ring(cfg), cfg)
     z0 = float(centroid_z(w, cfg))
     for _ in range(n_steps):
-        w = vic_step(w, cfg)
+        w, cfg = step_reprovision(w, cfg)
     return w, z0, float(centroid_z(w, cfg))

@@ -4,11 +4,12 @@ Data abstractions:  ParticleSet (particles.py), distributed grids (grid.py).
 Decomposition:      domain.py, decomposition.py, graph_partition.py, hilbert.py.
 Mappings:           mappings.py (map / ghost_get / ghost_put).
 Acceleration:       cell_list.py (cell + Verlet lists), interactions.py.
-Hybrid methods:     interp.py (M'4 particle-mesh interpolation).
+Hybrid methods:     interp.py (M'4 particle-mesh interpolation),
+                    remesh.py (threshold re-seeding / remeshing engine).
 Load balancing:     dlb.py (cost models, in-graph slab balancer, SAR trigger).
 """
 from . import cell_list, decomposition, dlb, domain, graph_partition, grid
-from . import hilbert, interactions, interp, mappings, particles
+from . import hilbert, interactions, interp, mappings, particles, remesh
 
 from .domain import Box, BoundaryConditions, Domain, Ghost, make_domain, PERIODIC, NON_PERIODIC
 from .particles import ParticleSet, empty, from_positions, init_grid

@@ -1,0 +1,114 @@
+"""Remeshing engine for hybrid particle–mesh methods (paper §2, §4.4).
+
+Lagrangian particle methods distort their particle distribution; remeshing
+restores regularity every step: interpolate the particle quantity onto the
+mesh (P2M, M'4), then re-seed particles *on the mesh nodes* that carry
+significant field magnitude and continue from those. The TPU rendering
+(DESIGN.md §2, §7):
+
+  * the node→particle re-seed is a static-shape compaction into the
+    fixed-capacity :class:`ParticleSet` (kept nodes stable-sorted to the
+    front, surplus detected as overflow — the same re-provisioning contract
+    as CellList / ParticleSet.add);
+  * the P2M leg routes through either the jnp oracle (``core.interp``) or
+    the fused Pallas kernel (``kernels.m4_interp``) per flag;
+  * a magnitude threshold drops far-field nodes so the active particle
+    count tracks the support of the field instead of the whole box.
+
+``threshold=0.0`` keeps every node (the dense VIC configuration — exactly
+the classic remesh-onto-full-lattice), so it is a strict generalization of
+seeding particles at all mesh points.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interp as IP
+from repro.core.interp import _node_spacing
+from repro.core.particles import ParticleSet
+
+
+def node_positions(shape, box_lo, box_hi, periodic) -> jax.Array:
+    """(prod(shape), dim) f32 mesh-node coordinates, flat C-order — the
+    node-centered layout of ``core.interp`` (node i at lo + i*h)."""
+    lo, h = _node_spacing(shape, box_lo, box_hi, periodic)
+    axes = [lo[d] + np.arange(n) * h[d] for d, n in enumerate(shape)]
+    pts = np.stack(np.meshgrid(*axes, indexing="ij"), axis=-1)
+    return jnp.asarray(pts.reshape(-1, len(shape)), jnp.float32)
+
+
+def _field_mag(flat_field: jax.Array) -> jax.Array:
+    if flat_field.ndim == 1:
+        return jnp.abs(flat_field)
+    return jnp.linalg.norm(flat_field, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("box_lo", "box_hi", "periodic",
+                                   "threshold", "capacity", "dim"))
+def seed_from_mesh(field: jax.Array, *, box_lo, box_hi, periodic,
+                   threshold: float = 0.0, capacity: int = 0,
+                   dim: int | None = None
+                   ) -> Tuple[ParticleSet, jax.Array]:
+    """Re-seed particles on mesh nodes with |field| >= threshold.
+
+    ``field``: mesh array ``shape`` (scalar) or ``shape + (C,)``. Returns
+    (ParticleSet with the node value in props["w"], overflow) where
+    overflow counts kept nodes that did not fit ``capacity`` (0 = none;
+    surplus nodes with the *largest* flat index are dropped —
+    deterministic). ``capacity`` defaults to the full node count.
+    """
+    dim = dim if dim is not None else len(box_lo)
+    shape = field.shape[:dim]
+    n_nodes = int(np.prod(shape))
+    capacity = capacity or n_nodes
+    flat = field.reshape((n_nodes,) + field.shape[dim:])
+    nodes = node_positions(shape, box_lo, box_hi, periodic)
+    if threshold == 0.0 and capacity == n_nodes:
+        # dense lattice: every node kept, in node order — skip the sort
+        return (ParticleSet(x=nodes, props={"w": flat},
+                            valid=jnp.ones((n_nodes,), bool)),
+                jnp.zeros((), jnp.int32))
+    mag = _field_mag(flat)
+    keep = mag >= threshold
+    order = jnp.argsort(~keep, stable=True)[:capacity]
+    valid = keep[order]
+    x = jnp.where(valid[:, None], nodes[order],
+                  jnp.full((capacity, dim), ParticleSet.FILL, jnp.float32))
+    vshape = (1,) * (flat.ndim - 1)
+    w = jnp.where(valid.reshape((-1,) + vshape), flat[order], 0)
+    overflow = jnp.maximum(jnp.sum(keep) - capacity, 0)
+    return ParticleSet(x=x, props={"w": w}, valid=valid), overflow
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
+                                   "threshold", "capacity", "use_pallas",
+                                   "cb", "cell_cap", "interpret"))
+def remesh(x: jax.Array, w: jax.Array, valid: jax.Array, *, shape,
+           box_lo, box_hi, periodic, threshold: float = 0.0,
+           capacity: int = 0, use_pallas: bool = False, cb: int = 4,
+           cell_cap: int = 0, interpret=None):
+    """Full remeshing step: P2M the particle quantity ``w`` onto the mesh,
+    re-seed on significant nodes, compact into a fixed-capacity set.
+
+    Returns (ParticleSet, mesh_field, overflow) — overflow sums particles
+    dropped by the Pallas bucket capacity and kept nodes that did not fit
+    ``capacity``; non-zero means re-provision.
+    """
+    kw = dict(shape=shape, box_lo=box_lo, box_hi=box_hi, periodic=periodic)
+    if use_pallas:
+        from repro.kernels.m4_interp import ops as M4
+        field, bucket_ovf = M4.p2m(x, w, valid, cb=cb, cell_cap=cell_cap,
+                                   interpret=interpret,
+                                   return_overflow=True, **kw)
+    else:
+        field = IP.p2m(x, w, valid, **kw)
+        bucket_ovf = jnp.zeros((), jnp.int32)
+    ps, seed_ovf = seed_from_mesh(field, box_lo=box_lo, box_hi=box_hi,
+                                  periodic=periodic, threshold=threshold,
+                                  capacity=capacity, dim=len(shape))
+    return ps, field, bucket_ovf + seed_ovf

@@ -1,0 +1,215 @@
+"""Cell-bucketed M'4 particle–mesh interpolation Pallas TPU kernels
+(paper §2/§4.4 hot loop — the vortex-in-cell interpolation + remeshing path).
+
+The TPU-native adaptation (DESIGN.md §2, §7): scatter-adds do not map onto
+the MXU, so P2M is re-formulated as a *conflict-free owner-gather*.
+Particles are pre-bucketed by the existing ``CellList`` into interpolation
+cells of ``cb`` mesh nodes per axis (cell size = cb·h). Each Pallas grid
+step then *owns* one disjoint ``cb^dim`` node patch of the output field and
+pulls every contribution from the 3^dim surrounding particle buckets —
+because the M'4 support is 2h and cb ≥ 2, those buckets are exactly the
+particles that can reach the patch. No two grid steps write the same node,
+so no atomics / serialization are needed.
+
+Neighbor buckets are *not* materialized 27× in HBM (the lj_cell pre-gather
+trade-off): the dense (cell, slot) tiles are passed 3^dim times with
+wrapped index_maps — the stencil7 halo trick applied to particle tiles.
+Per neighbor the kernel evaluates the separable per-axis M'4 weights on the
+VPU, forms the (cb^dim, cell_cap) pair-weight tile, and accumulates
+``weights @ values`` on the MXU into a VMEM scratch accumulator; one write
+to the output block at the end.
+
+M2P is the transpose: each grid step owns one particle bucket, walks the
+3^dim neighboring *field* blocks (again wrapped index_maps, stencil7-style)
+and accumulates ``weights @ field_block`` — velocity and RHS ride in one
+fused channel axis, so the weight tile is computed once for both.
+
+Both kernels are periodic-only (the clamped non-periodic edge semantics of
+the oracle stay on the jnp path) and run with ``interpret=True`` off-TPU.
+Weights are evaluated from raw positions — w = Π_d M'4((x_d − node_d)/h_d)
+with the periodic image resolved per neighbor tile from the grid index, so
+the kernel needs no floor/frac bookkeeping and matches ``core/interp.py``
+to f32 rounding.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.interp import m4_prime
+
+
+def _offsets(dim: int):
+    return list(itertools.product((-1, 0, 1), repeat=dim))
+
+
+def _axis_iota(n: int, axis0: bool) -> jax.Array:
+    """f32 iota of length n as a 2-D array ((n,1) or (1,n)) — TPU forbids
+    1-D iota."""
+    shape = (n, 1) if axis0 else (1, n)
+    return jax.lax.broadcasted_iota(jnp.float32, shape, 0 if axis0 else 1)
+
+
+def _p2m_kernel(*refs, offsets, grid_cells, cb, lo, h, lengths, n_ch):
+    dim = len(grid_cells)
+    K = len(offsets)
+    x_refs, v_refs, m_refs = refs[:K], refs[K:2 * K], refs[2 * K:3 * K]
+    o_ref, acc_ref = refs[3 * K], refs[3 * K + 1]
+    squeeze = (0,) * dim
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for n, off in enumerate(offsets):
+        xp = x_refs[n][squeeze]                       # (cc, dim)
+        vp = v_refs[n][squeeze]                       # (cc, C)
+        mp = m_refs[n][squeeze]                       # (cc,)
+        cc = xp.shape[0]
+        w = mp.astype(jnp.float32).reshape((1,) * dim + (cc,))
+        for d in range(dim):
+            cell = pl.program_id(d) + off[d]
+            # periodic image of this neighbor bucket (data comes in wrapped
+            # by the index_map; positions must be unwrapped to match)
+            shift = jnp.where(cell < 0, -lengths[d],
+                              jnp.where(cell >= grid_cells[d],
+                                        lengths[d], 0.0)).astype(jnp.float32)
+            nodes = (pl.program_id(d) * cb + _axis_iota(cb, True)) * h[d] \
+                + lo[d]                               # (cb, 1) patch nodes
+            s = (nodes - xp[:, d][None, :] - shift) / h[d]     # (cb, cc)
+            wd = m4_prime(s)
+            w = w * wd.reshape((1,) * d + (cb,) + (1,) * (dim - 1 - d) + (cc,))
+        acc_ref[...] += jnp.dot(w.reshape(cb ** dim, cc), vp,
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = acc_ref[...].reshape((cb,) * dim + (n_ch,))
+
+
+@functools.partial(jax.jit, static_argnames=("grid_cells", "cb", "box_lo",
+                                             "box_hi", "interpret"))
+def p2m_cells(cell_x, cell_val, cell_mask, *, grid_cells, cb: int,
+              box_lo, box_hi, interpret: bool = False) -> jax.Array:
+    """Conflict-free P2M over pre-bucketed particle tiles.
+
+    cell_x:    (n_cells, cc, dim) slot positions, flat C-order cell index.
+    cell_val:  (n_cells, cc, C) slot values.
+    cell_mask: (n_cells, cc) slot occupancy.
+    Returns the mesh field ``tuple(cb*g for g in grid_cells) + (C,)``.
+    """
+    dim = len(grid_cells)
+    n_cells = int(np.prod(grid_cells))
+    cc = cell_x.shape[1]
+    n_ch = cell_val.shape[-1]
+    shape = tuple(cb * g for g in grid_cells)
+    lo = tuple(float(v) for v in box_lo)
+    lengths = tuple(float(hi) - float(l) for l, hi in zip(box_lo, box_hi))
+    h = tuple(L / n for L, n in zip(lengths, shape))
+
+    offsets = _offsets(dim)
+    gx = cell_x.reshape(grid_cells + (cc, dim)).astype(jnp.float32)
+    gv = cell_val.reshape(grid_cells + (cc, n_ch)).astype(jnp.float32)
+    gm = cell_mask.reshape(grid_cells + (cc,))
+
+    def nbr_spec(block, off):
+        def imap(*ids):
+            return tuple((ids[d] + off[d]) % grid_cells[d]
+                         for d in range(dim)) + (0,) * len(block)
+        return pl.BlockSpec((1,) * dim + block, imap)
+
+    in_specs = ([nbr_spec((cc, dim), off) for off in offsets]
+                + [nbr_spec((cc, n_ch), off) for off in offsets]
+                + [nbr_spec((cc,), off) for off in offsets])
+    out_specs = pl.BlockSpec((cb,) * dim + (n_ch,),
+                             lambda *ids: ids + (0,))
+    kern = functools.partial(_p2m_kernel, offsets=offsets,
+                             grid_cells=grid_cells, cb=cb, lo=lo, h=h,
+                             lengths=lengths, n_ch=n_ch)
+    K = len(offsets)
+    return pl.pallas_call(
+        kern,
+        grid=grid_cells,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct(shape + (n_ch,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cb ** dim, n_ch), jnp.float32)],
+        interpret=interpret,
+    )(*([gx] * K + [gv] * K + [gm] * K))
+
+
+def _m2p_kernel(*refs, offsets, grid_cells, cb, lo, h, n_ch):
+    dim = len(grid_cells)
+    K = len(offsets)
+    f_refs = refs[:K]
+    x_ref, m_ref, o_ref, acc_ref = refs[K], refs[K + 1], refs[K + 2], refs[K + 3]
+    squeeze = (0,) * dim
+    xp = x_ref[squeeze]                               # (cc, dim)
+    mp = m_ref[squeeze]                               # (cc,)
+    cc = xp.shape[0]
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for n, off in enumerate(offsets):
+        w = mp.astype(jnp.float32).reshape((cc,) + (1,) * dim)
+        for d in range(dim):
+            # unwrapped node coordinates of this neighbor field block — the
+            # index_map fetched the wrapped data, so raw distances are the
+            # minimum-image ones
+            nodes = ((pl.program_id(d) + off[d]) * cb
+                     + _axis_iota(cb, False)) * h[d] + lo[d]   # (1, cb)
+            s = (xp[:, d][:, None] - nodes) / h[d]             # (cc, cb)
+            wd = m4_prime(s)
+            w = w * wd.reshape((cc,) + (1,) * d + (cb,) + (1,) * (dim - 1 - d))
+        fb = f_refs[n][...].reshape(cb ** dim, n_ch)
+        acc_ref[...] += jnp.dot(w.reshape(cc, cb ** dim), fb,
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = acc_ref[...].reshape((1,) * dim + (cc, n_ch))
+
+
+@functools.partial(jax.jit, static_argnames=("grid_cells", "cb", "box_lo",
+                                             "box_hi", "interpret"))
+def m2p_cells(field, cell_x, cell_mask, *, grid_cells, cb: int,
+              box_lo, box_hi, interpret: bool = False) -> jax.Array:
+    """Fused M2P gather over pre-bucketed particle tiles.
+
+    field:     mesh array ``shape + (C,)`` — C may stack several physical
+               fields (u and RHS in one pass).
+    Returns per-slot values (n_cells, cc, C).
+    """
+    dim = len(grid_cells)
+    cc = cell_x.shape[1]
+    n_ch = field.shape[-1]
+    shape = field.shape[:-1]
+    assert shape == tuple(cb * g for g in grid_cells), (shape, grid_cells, cb)
+    lo = tuple(float(v) for v in box_lo)
+    lengths = tuple(float(hi) - float(l) for l, hi in zip(box_lo, box_hi))
+    h = tuple(L / n for L, n in zip(lengths, shape))
+
+    offsets = _offsets(dim)
+    gx = cell_x.reshape(grid_cells + (cc, dim)).astype(jnp.float32)
+    gm = cell_mask.reshape(grid_cells + (cc,))
+
+    def field_spec(off):
+        def imap(*ids):
+            return tuple((ids[d] + off[d]) % grid_cells[d]
+                         for d in range(dim)) + (0,)
+        return pl.BlockSpec((cb,) * dim + (n_ch,), imap)
+
+    tile_spec = lambda block: pl.BlockSpec(
+        (1,) * dim + block, lambda *ids: ids + (0,) * len(block))
+    in_specs = ([field_spec(off) for off in offsets]
+                + [tile_spec((cc, dim)), tile_spec((cc,))])
+    out_specs = tile_spec((cc, n_ch))
+    kern = functools.partial(_m2p_kernel, offsets=offsets,
+                             grid_cells=grid_cells, cb=cb, lo=lo, h=h,
+                             n_ch=n_ch)
+    K = len(offsets)
+    out = pl.pallas_call(
+        kern,
+        grid=grid_cells,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct(grid_cells + (cc, n_ch), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((cc, n_ch), jnp.float32)],
+        interpret=interpret,
+    )(*([field.astype(jnp.float32)] * K + [gx, gm]))
+    n_cells = int(np.prod(grid_cells))
+    return out.reshape(n_cells, cc, n_ch)

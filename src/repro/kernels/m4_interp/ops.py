@@ -1,0 +1,188 @@
+"""Jitted end-to-end M'4 interpolation ops: CellList bucketing (XLA) +
+conflict-free Pallas P2M / fused M2P, mirroring the ``core/interp.py``
+oracle signatures so apps can switch per config flag.
+
+The cell grid is *aligned with the mesh*: each interpolation cell spans
+``cb`` nodes per axis, so the Pallas grid over cells owns disjoint node
+patches (see m4_interp.py). Pallas path is periodic-only; non-periodic
+callers stay on the oracle.
+
+Bucketing is the expensive XLA-side bookkeeping (one argsort + dense
+gathers), so it is exposed: ``bucket_particles`` → ``p2m_bucketed`` /
+``m2p_fused_bucketed`` lets callers interpolating several quantities at
+the *same* positions (the VIC RK2 stage does P2M and M2P at x1) pay for
+it once. Bucket overflow (particles beyond ``cell_cap`` in one cell) is
+*detected* and surfaced — the repo-wide contract: the control plane
+re-provisions capacity rather than computing silently wrong answers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cell_list as CL
+from repro.core.particles import ParticleSet
+from repro.kernels.m4_interp.m4_interp import m2p_cells, p2m_cells
+
+DEFAULT_CB = 4
+
+
+def default_cell_cap(cb: int, dim: int) -> int:
+    """Default bucket capacity: 2× the one-particle-per-node density that
+    remeshed VIC maintains. The single source for re-provisioning callers."""
+    return 2 * cb ** dim
+
+
+class InterpBuckets(NamedTuple):
+    """Dense (n_cells, cc, ·) slot tiles from one bucketing pass."""
+    cell_x: jax.Array      # (n_cells, cc, dim) slot positions
+    cell_mask: jax.Array   # (n_cells, cc) slot occupancy
+    safe: jax.Array        # (n_cells, cc) clamped slot→particle index
+    overflow: jax.Array    # () total dropped particles (cell_cap exceeded)
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.devices()[0].platform != "tpu"
+    return interpret
+
+
+def _check_layout(shape, periodic, cb):
+    if cb < 2:
+        raise ValueError(
+            f"cb={cb}: the 3^dim neighbor-bucket gather only covers the M'4 "
+            "support (2h) for cb >= 2")
+    if not all(periodic):
+        raise NotImplementedError(
+            "m4_interp Pallas path is periodic-only; use core.interp for "
+            f"clamped boundaries (periodic={periodic})")
+    if any(n % cb for n in shape):
+        raise ValueError(f"mesh shape {shape} not divisible by cb={cb}")
+    return tuple(n // cb for n in shape)
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
+                                   "cb", "cell_cap"))
+def bucket_particles(x, valid, *, shape, box_lo, box_hi, periodic,
+                     cb: int = DEFAULT_CB,
+                     cell_cap: int = 0) -> InterpBuckets:
+    """Bin particles into mesh-aligned interpolation cells via CellList.
+
+    ``cell_cap`` defaults to ``2·cb^dim`` (double the one-per-node density
+    remeshed VIC maintains); arbitrary clouds must size it explicitly.
+    Overflow > 0 means that many particles were dropped — re-provision.
+    """
+    dim = len(shape)
+    grid_cells = _check_layout(shape, periodic, cb)
+    cell_cap = cell_cap or default_cell_cap(cb, dim)
+    ps = ParticleSet(x=jnp.where(valid[:, None], x,
+                                 jnp.full_like(x, ParticleSet.FILL)),
+                     props={}, valid=valid)
+    cl = CL.build_cell_list(ps, box_lo=tuple(box_lo), box_hi=tuple(box_hi),
+                            grid_shape=grid_cells, periodic=tuple(periodic),
+                            cell_cap=cell_cap)
+    cap = ps.capacity
+    n_cells = int(np.prod(grid_cells))
+    rows = cl.cells[:n_cells]                    # (n_cells, cc)
+    safe = jnp.minimum(rows, cap - 1)
+    # total dropped particles (CellList.overflow is only the worst cell's
+    # excess; sum the per-cell excess so callers report a true count)
+    dropped = jnp.sum(jnp.maximum(cl.counts[:n_cells] - cell_cap, 0))
+    return InterpBuckets(cell_x=ps.x[safe], cell_mask=rows < cap, safe=safe,
+                         overflow=dropped.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
+                                   "cb", "interpret"))
+def p2m_bucketed(buckets: InterpBuckets, value, *, shape, box_lo, box_hi,
+                 periodic, cb: int = DEFAULT_CB, interpret=None):
+    """P2M from an existing bucketing. ``value``: (N,) or (N, C) indexed by
+    the particle slots the buckets were built from."""
+    interpret = _auto_interpret(interpret)
+    grid_cells = _check_layout(shape, periodic, cb)
+    vec = value.ndim == 2
+    val2 = value if vec else value[:, None]
+    cell_val = val2[buckets.safe]
+    out = p2m_cells(buckets.cell_x, cell_val, buckets.cell_mask,
+                    grid_cells=grid_cells, cb=cb, box_lo=tuple(box_lo),
+                    box_hi=tuple(box_hi), interpret=interpret)
+    out = out.astype(value.dtype)
+    return out if vec else out[..., 0]
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
+                                   "cb", "interpret"))
+def m2p_fused_bucketed(buckets: InterpBuckets, fields, valid, *, shape,
+                       box_lo, box_hi, periodic, cb: int = DEFAULT_CB,
+                       interpret=None):
+    """Fused M2P from an existing bucketing: interpolate several mesh
+    fields (each ``shape`` or ``shape + (C,)``) in ONE kernel pass — the
+    weight tile is computed once for all stacked channels. Returns a tuple
+    matching ``fields``."""
+    interpret = _auto_interpret(interpret)
+    grid_cells = _check_layout(shape, periodic, cb)
+    dim = len(shape)
+    fields = tuple(fields)
+    chans = [1 if f.ndim == dim else f.shape[-1] for f in fields]
+    stacked = jnp.concatenate(
+        [f[..., None] if f.ndim == dim else f for f in fields], axis=-1)
+    tiles = m2p_cells(stacked, buckets.cell_x, buckets.cell_mask,
+                      grid_cells=grid_cells, cb=cb, box_lo=tuple(box_lo),
+                      box_hi=tuple(box_hi), interpret=interpret)
+    cap = valid.shape[0]
+    flat_rows = buckets.safe.reshape(-1)
+    # ``safe`` clamps the sentinel into range, so scatter with the mask-
+    # selected values; each valid particle occupies exactly one slot.
+    flat_vals = jnp.where(buckets.cell_mask.reshape(-1)[:, None],
+                          tiles.reshape(-1, tiles.shape[-1]), 0.0)
+    per_p = jnp.zeros((cap, tiles.shape[-1]), jnp.float32
+                      ).at[flat_rows].add(flat_vals)
+    per_p = jnp.where(valid[:, None], per_p, 0.0)
+    out, c0 = [], 0
+    for f, c in zip(fields, chans):
+        piece = per_p[:, c0:c0 + c].astype(f.dtype)
+        out.append(piece[:, 0] if f.ndim == dim else piece)
+        c0 += c
+    return tuple(out)
+
+
+def p2m(x, value, valid, *, shape, box_lo, box_hi, periodic,
+        cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
+        return_overflow: bool = False):
+    """Pallas P2M, drop-in for ``core.interp.p2m`` (periodic axes only).
+    With ``return_overflow`` returns (field, dropped-particle count)."""
+    kw = dict(shape=shape, box_lo=box_lo, box_hi=box_hi, periodic=periodic,
+              cb=cb)
+    b = bucket_particles(x, valid, cell_cap=cell_cap, **kw)
+    out = p2m_bucketed(b, value, interpret=interpret, **kw)
+    return (out, b.overflow) if return_overflow else out
+
+
+def m2p_fused(fields, x, valid, *, shape, box_lo, box_hi, periodic,
+              cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
+              return_overflow: bool = False):
+    """Fused Pallas M2P (bucket + gather in one call); see
+    ``m2p_fused_bucketed``."""
+    kw = dict(shape=shape, box_lo=box_lo, box_hi=box_hi, periodic=periodic,
+              cb=cb)
+    b = bucket_particles(x, valid, cell_cap=cell_cap, **kw)
+    out = m2p_fused_bucketed(b, fields, valid, interpret=interpret, **kw)
+    return (out, b.overflow) if return_overflow else out
+
+
+def m2p(field, x, valid, *, shape, box_lo, box_hi, periodic,
+        cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
+        return_overflow: bool = False):
+    """Pallas M2P, drop-in for ``core.interp.m2p`` (periodic axes only)."""
+    res = m2p_fused((field,), x, valid, shape=shape, box_lo=box_lo,
+                    box_hi=box_hi, periodic=periodic, cb=cb,
+                    cell_cap=cell_cap, interpret=interpret,
+                    return_overflow=return_overflow)
+    if return_overflow:
+        (out,), ovf = res
+        return out, ovf
+    return res[0]

@@ -1,0 +1,11 @@
+"""Oracles for the M'4 interpolation kernels — delegate to the pure-jnp
+``core/interp.py`` implementations (single source of truth, like the other
+kernel packages' ref modules)."""
+from __future__ import annotations
+
+from repro.core.interp import m2p as m2p_ref, p2m as p2m_ref  # noqa: F401
+
+
+def m2p_fused_ref(fields, x, valid, **kw):
+    """Fused-gather oracle: one independent m2p per field."""
+    return tuple(m2p_ref(f, x, valid, **kw) for f in fields)

@@ -217,3 +217,83 @@ def test_sar_triggers_on_growing_imbalance():
         fired.append(sar.observe(1.0 + imb, 1.0))
     assert any(fired), "SAR must eventually trigger"
     assert not fired[0], "SAR must not trigger immediately"
+
+
+# --------------------------------------------------------------------------
+# Remeshing engine (paper §4.4): threshold re-seed + compaction
+# --------------------------------------------------------------------------
+
+def test_seed_from_mesh_keeps_thresholded_nodes():
+    from repro.core import remesh as RM
+    shape = (8, 8)
+    field = jnp.zeros(shape).at[2, 3].set(1.0).at[5, 6].set(-2.0)
+    ps, ovf = RM.seed_from_mesh(field, box_lo=(0., 0.), box_hi=(1., 1.),
+                                periodic=(True, True), threshold=0.5)
+    assert int(ovf) == 0
+    assert int(ps.count()) == 2
+    xv = np.asarray(ps.x)[np.asarray(ps.valid)]
+    wv = np.asarray(ps.props["w"])[np.asarray(ps.valid)]
+    h = 1.0 / 8
+    np.testing.assert_allclose(sorted(map(tuple, xv)),
+                               [(2 * h, 3 * h), (5 * h, 6 * h)], atol=1e-6)
+    assert sorted(wv.tolist()) == [-2.0, 1.0]
+
+
+def test_seed_from_mesh_capacity_overflow_detected():
+    from repro.core import remesh as RM
+    field = jnp.ones((4, 4))
+    ps, ovf = RM.seed_from_mesh(field, box_lo=(0., 0.), box_hi=(1., 1.),
+                                periodic=(True, True), capacity=10)
+    assert int(ovf) == 6          # 16 kept nodes, 10 slots
+    assert int(ps.count()) == 10
+    assert ps.capacity == 10
+
+
+def test_seed_from_mesh_threshold_zero_is_dense_lattice():
+    from repro.core import remesh as RM
+    key = jax.random.PRNGKey(4)
+    field = jax.random.normal(key, (6, 4, 4, 3))
+    ps, ovf = RM.seed_from_mesh(field, box_lo=(0., 0., 0.),
+                                box_hi=(1.5, 1., 1.), periodic=(True,) * 3)
+    assert int(ps.count()) == 6 * 4 * 4 and int(ovf) == 0
+    np.testing.assert_allclose(np.asarray(ps.props["w"]),
+                               np.asarray(field.reshape(-1, 3)), atol=0)
+    np.testing.assert_allclose(
+        np.asarray(ps.x),
+        np.asarray(RM.node_positions((6, 4, 4), (0., 0., 0.), (1.5, 1., 1.),
+                                     (True,) * 3)), atol=0)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_remesh_on_node_particles_is_identity(use_pallas):
+    """Particles sitting exactly on nodes: M'4 is interpolating, so the
+    P2M leg reproduces the field and re-seeding returns the same set."""
+    from repro.core import remesh as RM
+    shape = (8, 8, 8)
+    box = dict(box_lo=(0., 0., 0.), box_hi=(1., 1., 1.),
+               periodic=(True, True, True))
+    key = jax.random.PRNGKey(5)
+    field = jax.random.normal(key, shape + (3,))
+    ps0, _ = RM.seed_from_mesh(field, **box)
+    ps1, mesh, ovf = RM.remesh(ps0.x, ps0.props["w"], ps0.valid,
+                               shape=shape, use_pallas=use_pallas,
+                               interpret=True, **box)
+    assert int(ovf) == 0
+    np.testing.assert_allclose(np.asarray(mesh), np.asarray(field),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(ps1.props["w"]),
+                               np.asarray(ps0.props["w"]), atol=2e-5)
+
+
+def test_remesh_conserves_total_vorticity():
+    from repro.core import remesh as RM
+    key = jax.random.PRNGKey(6)
+    shape = (8, 8)
+    x = jax.random.uniform(key, (150, 2))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (150,))
+    valid = jnp.ones(150, bool)
+    ps, mesh, _ = RM.remesh(x, w, valid, shape=shape, box_lo=(0., 0.),
+                            box_hi=(1., 1.), periodic=(True, True))
+    np.testing.assert_allclose(float(mesh.sum()), float(w.sum()), rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(ps.props["w"])),
+                               float(w.sum()), rtol=1e-5)

@@ -4,9 +4,18 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# The distributed layer targets the jax>=0.6 API (jax.shard_map with
+# check_vma, jax.sharding.AxisType); on older runtimes these subprocess
+# tests cannot run — skip explicitly instead of failing on an
+# AttributeError deep inside the child process.
+pytestmark = pytest.mark.skipif(
+    not (hasattr(jax, "shard_map") and hasattr(jax.sharding, "AxisType")),
+    reason="needs jax>=0.6 distributed API (jax.shard_map / AxisType)")
 
 SCRIPT = r"""
 import os

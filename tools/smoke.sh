@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Smoke check: tier-1 pytest plus one-step runs of the two entry examples.
+# Usage: tools/smoke.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q "$@"
+
+echo "== examples/vortex_ring.py (1 step) =="
+python examples/vortex_ring.py --steps 1
+
+echo "== examples/quickstart.py =="
+python examples/quickstart.py
+
+echo "smoke OK"

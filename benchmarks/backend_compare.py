@@ -1,0 +1,127 @@
+"""Unified cell-pair engine backend parity: run bench_md / bench_sph /
+bench_dem workloads with backend="jnp" and backend="pallas" (interpret
+mode off-TPU), time both, and report the relative divergence.
+
+The case builders (``md_case`` / ``sph_case`` / ``dem_case`` /
+``dem_settled``) are shared with tests/test_cell_pair.py so the smoke
+gate and the test suite exercise exactly the same workload states.
+
+Registered in ``benchmarks/run.py`` (rows ``*_backend_jnp`` /
+``*_backend_pallas_interp``); ``tools/smoke.sh`` runs it as a gate:
+
+    python benchmarks/backend_compare.py     # exit 1 on > 1e-4 divergence
+"""
+import dataclasses
+import functools
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+TOL = 1e-4
+
+
+def rel(a, b):
+    """max-abs relative divergence of a against reference b."""
+    import jax.numpy as jnp
+    return float(jnp.abs(a - b).max()) / (float(jnp.abs(b).max()) + 1e-9)
+
+
+def md_case():
+    """(cfg, fn): jittered LJ lattice; fn(cfg) -> per-particle forces."""
+    import jax, jax.numpy as jnp
+    from repro.apps import md
+    cfg = md.MDConfig(n_per_side=6)
+    ps = md.init_particles(cfg)
+    key = jax.random.PRNGKey(0)
+    ps = ps.replace(x=jnp.where(
+        ps.valid[:, None], ps.x + 0.01 * jax.random.normal(key, ps.x.shape),
+        ps.x))
+    fn = jax.jit(lambda c: md.compute_forces(ps, c)[0].props["f"],
+                 static_argnums=0)
+    return cfg, fn
+
+
+def sph_case():
+    """(cfg, fn): briefly-developed dam break; fn(cfg) -> accelerations."""
+    import jax
+    from repro.apps import sph
+    cfg = sph.SPHConfig(dp=0.04, box=(1.0, 0.5), fluid=(0.25, 0.25))
+    ps = sph.init_dam_break(cfg)
+    for i in range(5):
+        ps, _, _ = sph.sph_step(ps, cfg, euler=(i % cfg.verlet_reset == 0))
+    fn = jax.jit(lambda c: sph.compute_rates(ps, c)[0], static_argnums=0)
+    return cfg, fn
+
+
+@functools.lru_cache(maxsize=1)
+def dem_settled():
+    """(cfg, ps, cs): grains with random velocities settled for 20 steps so
+    real overlapping contacts exist, contact list freshly rebuilt.
+    Deterministic and reused by several tests and the gate — cached per
+    process (the settle loop is the expensive part)."""
+    import jax, jax.numpy as jnp
+    from repro.apps import dem
+    cfg = dem.DEMConfig(box=(2.0, 0.6, 1.0), fill=(0.8, 0.66, 0.5))
+    ps = dem.init_block(cfg)
+    key = jax.random.PRNGKey(1)
+    v = 0.3 * jax.random.normal(key, ps.props["v"].shape)
+    ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+    cs = dem.build_contacts(ps, cfg)
+    for _ in range(20):
+        ps, cs, rb, _ = dem.dem_step(ps, cs, cfg)
+        if bool(rb):
+            cs = dem.build_contacts(ps, cfg, old=cs)
+    return cfg, ps, dem.build_contacts(ps, cfg, old=cs)
+
+
+def dem_case():
+    """(cfg, fn): settled avalanche state; fn(cfg) -> per-grain forces."""
+    import jax
+    from repro.apps import dem
+    cfg, ps, cs = dem_settled()
+    fn = jax.jit(lambda c: dem.dem_step(ps, cs, c)[0].props["f"],
+                 static_argnums=0)
+    return cfg, fn
+
+
+def compare_all():
+    """[(name, sec_jnp, sec_pallas, rel_divergence)] for md, sph, dem."""
+    from benchmarks.common import time_fn
+    out = []
+    for name, case in (("md", md_case), ("sph", sph_case),
+                       ("dem", dem_case)):
+        cfg, fn = case()
+        pcfg = dataclasses.replace(cfg, backend="pallas", interpret=None)
+        sec_j, ref = time_fn(fn, cfg)
+        sec_p, got = time_fn(fn, pcfg)
+        out.append((name, sec_j, sec_p, rel(got, ref)))
+    return out
+
+
+def run():
+    from benchmarks.common import row
+    rows = []
+    for name, sec_j, sec_p, r in compare_all():
+        rows.append(row(f"{name}_backend_jnp", sec_j,
+                        "cell-pair engine oracle path"))
+        rows.append(row(f"{name}_backend_pallas_interp", sec_p,
+                        f"rel divergence vs jnp {r:.2e} (gate {TOL:g})"))
+    return rows
+
+
+def main() -> int:
+    ok = True
+    for name, sec_j, sec_p, r in compare_all():
+        status = "OK" if r < TOL else "FAIL"
+        print(f"{name}: jnp {sec_j * 1e3:.1f} ms, pallas(interp) "
+              f"{sec_p * 1e3:.1f} ms, rel divergence {r:.2e} [{status}]")
+        ok &= r < TOL
+    if not ok:
+        print(f"backend divergence exceeds {TOL:g}", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

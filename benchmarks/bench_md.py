@@ -23,6 +23,6 @@ def run():
                         f"{rate:.3g} particle-steps/s; 216k-extrap "
                         f"{extrap_216k * 1e3:.0f} ms/step (paper 1-core "
                         f"202 ms)"))
-    # Pallas cell-kernel path (interpret mode on CPU: correctness path, so
-    # report the XLA-engine path as the timing)
+    # The Pallas cell-pair engine path (interpret mode on CPU) is timed and
+    # divergence-gated by benchmarks/backend_compare.py.
     return rows

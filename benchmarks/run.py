@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_dem      — paper Fig 11 (DEM avalanche)
   bench_cmaes    — paper Fig 12 (PS-CMA-ES)
   bench_roofline — production-mesh roofline per dry-run cell
+  backend_compare — unified cell-pair engine: jnp vs pallas(interpret)
+                    timing + relative divergence for MD / SPH / DEM
 """
 import sys
 import pathlib
@@ -19,13 +21,14 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks import (bench_cmaes, bench_dem, bench_interp, bench_md,
-                            bench_membw, bench_roofline, bench_sph,
-                            bench_stencil, bench_vortex)
+    from benchmarks import (backend_compare, bench_cmaes, bench_dem,
+                            bench_interp, bench_md, bench_membw,
+                            bench_roofline, bench_sph, bench_stencil,
+                            bench_vortex)
     print("name,us_per_call,derived")
     for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
                 bench_vortex, bench_interp, bench_dem, bench_cmaes,
-                bench_roofline):
+                backend_compare, bench_roofline):
         for line in mod.run():
             print(line, flush=True)
 

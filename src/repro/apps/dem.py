@@ -15,18 +15,30 @@ list's slots and is *carried over by partner matching* on rebuild.
 Units: the paper quotes k_n=7.849 etc. in scaled units; we use k_n=7.849e4
 (the Walther & Sbalzarini 2009 magnitudes) so that the static penetration
 m·g/k_n ≪ R — noted in DESIGN.md as a parameter-scale adaptation.
+
+``DEMConfig.backend`` selects how the *normal* (Hertzian spring + damping)
+contact forces are computed: ``"jnp"`` keeps them in the contact-list loop
+(the oracle path, exactly the historical behavior), ``"pallas"`` evaluates
+them through the unified cell-pair engine (:func:`dem_normal_body`,
+``kernels/cell_pair``) over a fresh cell list each step. The tangential
+springs — whose elastic displacement history must survive rebuilds —
+always stay on the half-Verlet contact-list path. Note the pallas path
+still evaluates Fn per listed contact (the Coulomb cap on |Ft| needs it)
+and builds an extra cell list, so it targets the TPU VMEM hot loop —
+off-TPU (interpret) it is a correctness path, not a fast one.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cell_list as CL
+from repro.core import interactions as I
 from repro.core import particles as P
 
 
@@ -48,6 +60,8 @@ class DEMConfig:
     k_max: int = 12
     cell_cap: int = 24
     skin: float = 0.02
+    backend: str = "jnp"               # "jnp" | "pallas" normal-force path
+    interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
 
     @property
     def r_cut(self) -> float:
@@ -113,10 +127,50 @@ def build_contacts(ps: P.ParticleSet, cfg: DEMConfig,
     return ContactState(nbr=vl.nbr, u_t=u_t, x_build=ps.x)
 
 
-def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig):
+def dem_normal_body(cfg: DEMConfig):
+    """Hertzian normal contact pair body (cell-pair engine protocol):
+    spring + velocity damping, both radial — F_ij = mag · dx. Tangential
+    history forces are not representable here (they need per-contact
+    state) and stay on the contact-list path."""
+    two_R = 2.0 * cfg.R
+    m_eff = cfg.m / 2.0
+
+    def body(dx, r2, ok, wi, wj):
+        r = jnp.sqrt(jnp.maximum(r2, 1e-12))
+        delta = two_R - r
+        hertz = jnp.sqrt(jnp.maximum(delta, 0.0) / two_R)
+        vr = jnp.zeros_like(r2)                   # (v_i - v_j)·dx
+        for d in range(3):
+            vr = vr + (wi["v"][..., d] - wj["v"][..., d]) * dx(d)
+        # Fn = hertz·(kn·δ·n̂ − γn·m_eff·v_n), v_n = ((v_i−v_j)·n̂)n̂,
+        # n̂ = dx/r  ⇒  purely radial with this magnitude:
+        mag = hertz * (cfg.kn * delta - cfg.gamma_n * m_eff * vr / r) / r
+        return {"f": I.Radial(jnp.where(delta > 0.0, mag, 0.0))}
+
+    return body
+
+
+def normal_forces(ps: P.ParticleSet, cfg: DEMConfig, backend: str = "jnp",
+                  interpret: Optional[bool] = None):
+    """Grain-grain normal forces via the unified cell-pair engine (fresh
+    cell list; periodic y handled by the gather's box shifts)."""
+    cl = CL.build_cell_list(ps, **_cl_kw(cfg))
+    out = I.apply_pair_kernel(ps, cl, dem_normal_body(cfg),
+                              out={"f": "radial"}, r_cut=cfg.r_cut,
+                              prop_names=("v",), backend=backend,
+                              interpret=interpret)
+    return out["f"], cl.overflow
+
+
+def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig,
+                   include_normal: bool = True):
     """Pairwise grain forces + torques over the half contact list; the
     reverse contributions are scatter-added (antisymmetric force, symmetric
-    torque sign per Newton's third law at the contact point)."""
+    torque sign per Newton's third law at the contact point).
+
+    ``include_normal=False`` drops the normal (spring + damping) term from
+    the returned force — used when the cell-pair engine supplies it — but
+    still evaluates it per contact for the Coulomb cap on |Ft|."""
     cap, k = cs.nbr.shape
     xm = ps.masked_x()
     j = jnp.minimum(cs.nbr, cap - 1)
@@ -158,7 +212,8 @@ def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig):
     u_t = u_t * scale
     u_t = jnp.where(touch[..., None], u_t, 0.0)
 
-    F = jnp.where(touch[..., None], Fn + Ft, 0.0)
+    F = jnp.where(touch[..., None], (Fn if include_normal else 0.0) + Ft,
+                  0.0)
     T = jnp.where(touch[..., None],
                   -cfg.R * jnp.cross(n_hat, Ft), 0.0)
 
@@ -190,7 +245,17 @@ def wall_forces(ps: P.ParticleSet, cfg: DEMConfig):
 
 @partial(jax.jit, static_argnames=("cfg",))
 def dem_step(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig):
-    f_c, t_c, cs = contact_forces(ps, cs, cfg)
+    """Returns (ps, cs, rebuild, overflow); overflow is the pallas path's
+    per-step cell-list overflow (0 on the contact-loop path) — nonzero
+    means normal forces were dropped and ``cell_cap`` must be raised."""
+    if cfg.backend == "pallas":
+        f_c, t_c, cs = contact_forces(ps, cs, cfg, include_normal=False)
+        f_n, overflow = normal_forces(ps, cfg, backend="pallas",
+                                      interpret=cfg.interpret)
+        f_c = f_c + f_n
+    else:
+        f_c, t_c, cs = contact_forces(ps, cs, cfg)
+        overflow = jnp.asarray(0, jnp.int32)
     f = f_c + wall_forces(ps, cfg) + cfg.m * gravity_vec(cfg)[None, :]
     # leapfrog (paper eq. 13)
     v = ps.props["v"] + cfg.dt / cfg.m * f
@@ -205,14 +270,16 @@ def dem_step(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig):
     ps = ps.with_prop("f", f).with_prop("t", t_c)
     moved2 = jnp.max(jnp.sum(jnp.where(vm, ps.x - cs.x_build, 0.0) ** 2, -1))
     rebuild = moved2 > (0.5 * cfg.skin) ** 2
-    return ps, cs, rebuild
+    return ps, cs, rebuild, overflow
 
 
 def run(cfg: DEMConfig, n_steps: int):
     ps = init_block(cfg)
     cs = build_contacts(ps, cfg)
     for i in range(n_steps):
-        ps, cs, rebuild = dem_step(ps, cs, cfg)
+        ps, cs, rebuild, overflow = dem_step(ps, cs, cfg)
+        assert int(overflow) == 0, (
+            f"cell overflow at step {i}; raise DEMConfig.cell_cap")
         if bool(rebuild):
             cs = build_contacts(ps, cfg, old=cs)
     return ps, cs

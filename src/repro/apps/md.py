@@ -6,6 +6,12 @@ velocity-Verlet integration. The distributed path uses the adaptive-slab
 ``map()`` / ``ghost_get()`` mappings; energies validate conservation (the
 paper's validation criterion — energy curves identical to LAMMPS and total
 energy conserved).
+
+The LJ physics is a single ~10-line pair body (:func:`lj_pair_body`) run
+by the unified cell-pair engine: ``MDConfig.backend`` selects ``"jnp"``
+(portable ``apply_kernel_cells``, the oracle) or ``"pallas"`` (the VMEM
+pair-tile kernel, ``kernels/cell_pair``; off-TPU it runs in interpret
+mode unless ``MDConfig.interpret`` says otherwise).
 """
 from __future__ import annotations
 
@@ -33,6 +39,8 @@ class MDConfig:
     cell_cap: int = 48
     capacity_factor: float = 1.3
     dim: int = 3
+    backend: str = "jnp"               # "jnp" | "pallas" pair-engine path
+    interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
 
     @property
     def r_cut(self) -> float:
@@ -43,20 +51,26 @@ class MDConfig:
         return self.n_per_side ** self.dim
 
 
-def lj_force_kernel(cfg: MDConfig):
-    s2 = cfg.sigma ** 2
-    eps = cfg.epsilon
-    rc2 = cfg.r_cut ** 2
+def lj_pair_body(sigma: float, epsilon: float):
+    """LJ force pair body (cell-pair engine protocol): F_ij = mag · dx."""
+    s2 = sigma * sigma
 
-    def kern(dx, r2, wi, wj):
+    def body(dx, r2, ok, wi, wj):
         r2s = jnp.maximum(r2, 1e-12)
         inv = s2 / r2s
         inv3 = inv * inv * inv
-        mag = 24.0 * eps * (2.0 * inv3 * inv3 - inv3) / r2s
-        mag = jnp.where(r2 < rc2, mag, 0.0)
-        return dx * mag[..., None]
+        mag = 24.0 * epsilon * (2.0 * inv3 * inv3 - inv3) / r2s
+        return {"f": I.Radial(mag)}
 
-    return kern
+    return body
+
+
+def lj_force_kernel(cfg: MDConfig):
+    """jnp ``kernel(dx, r2, wi, wj) -> force`` derived from the same pair
+    body the Pallas engine runs (single-source physics)."""
+    kern = I.as_jnp_kernel(lj_pair_body(cfg.sigma, cfg.epsilon),
+                           {"f": "radial"}, cfg.r_cut)
+    return lambda dx, r2, wi, wj: kern(dx, r2, wi, wj)["f"]
 
 
 def lj_potential_kernel(cfg: MDConfig):
@@ -91,8 +105,10 @@ def _cl_kw(cfg: MDConfig):
 
 def compute_forces(ps: P.ParticleSet, cfg: MDConfig):
     cl = CL.build_cell_list(ps, **_cl_kw(cfg))
-    f = I.apply_kernel_cells(ps, cl, lj_force_kernel(cfg), r_cut=cfg.r_cut)
-    return ps.with_prop("f", f), cl.overflow
+    out = I.apply_pair_kernel(ps, cl, lj_pair_body(cfg.sigma, cfg.epsilon),
+                              out={"f": "radial"}, r_cut=cfg.r_cut,
+                              backend=cfg.backend, interpret=cfg.interpret)
+    return ps.with_prop("f", out["f"]), cl.overflow
 
 
 @partial(jax.jit, static_argnames=("cfg",))

@@ -14,6 +14,9 @@ across the periodic seam, so the local force pass is free of minimum-image
 logic: it runs a plain non-periodic cell list over the padded box — exactly
 OpenFPM's "all computation is local once ghosts are populated".
 
+The local force pass runs through the unified cell-pair engine
+(``MDConfig.backend`` = "jnp" | "pallas", same flag as the serial app).
+
 Validated against the serial `apps.md` trajectory particle-by-particle
 (tests/test_mappings.py::test_distributed_md_matches_serial).
 """
@@ -28,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.apps.md import MDConfig, lj_force_kernel
+from repro.apps.md import MDConfig, lj_pair_body
 from repro.core import cell_list as CL
 from repro.core import dlb
 from repro.core import interactions as I
@@ -55,7 +58,7 @@ def make_distributed_step(mesh: Mesh, cfg: MDConfig, example: PS.ParticleSet,
     """Build the jitted distributed MD step over a globally sharded
     ParticleSet. Returns step(ps, bounds) -> (ps, overflow)."""
     spec = M.ps_specs(example, axis_name)
-    kern = lj_force_kernel(cfg)
+    body = lj_pair_body(cfg.sigma, cfg.epsilon)
     cl_kw = _padded_cl_kw(cfg)
 
     def local_step(ps: PS.ParticleSet, bounds):
@@ -77,7 +80,9 @@ def make_distributed_step(mesh: Mesh, cfg: MDConfig, example: PS.ParticleSet,
             props={},
             valid=jnp.concatenate([ps.valid, gp.valid]))
         cl = CL.build_cell_list(combo, **cl_kw)
-        f = I.apply_kernel_cells(combo, cl, kern, r_cut=cfg.r_cut)
+        f = I.apply_pair_kernel(combo, cl, body, out={"f": "radial"},
+                                r_cut=cfg.r_cut, backend=cfg.backend,
+                                interpret=cfg.interpret)["f"]
         f_local = f[: ps.capacity]
         ps = ps.with_prop("f", jnp.where(ps.valid[:, None], f_local, 0.0))
         # 5. second kick

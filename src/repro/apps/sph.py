@@ -7,6 +7,12 @@ This is the paper's dynamic-load-balancing showcase: the fluid column
 collapses and sloshes, so a static decomposition degrades;
 ``run_distributed`` pairs the adaptive-slab ``map()``/``ghost_get()``
 mappings with the in-graph cost-balancer and the SAR trigger (core/dlb.py).
+
+The fused continuity+momentum physics is one pair body
+(:func:`sph_pair_body`) run by the unified cell-pair engine:
+``SPHConfig.backend`` selects ``"jnp"`` (oracle) or ``"pallas"`` (VMEM
+pair tiles, ``kernels/cell_pair``; interpret mode off-TPU via
+``SPHConfig.interpret=None`` auto-detection).
 """
 from __future__ import annotations
 
@@ -40,6 +46,8 @@ class SPHConfig:
     fluid: Tuple[float, ...] = (0.4, 0.4)    # dam column extents
     cell_cap: int = 64
     verlet_reset: int = 40
+    backend: str = "jnp"               # "jnp" | "pallas" pair-engine path
+    interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
 
     @property
     def h(self) -> float:
@@ -75,49 +83,47 @@ def kernel_consts(cfg: SPHConfig):
     return h, alpha_d
 
 
-def grad_w_factory(cfg: SPHConfig):
-    """Analytic cubic-spline gradient: returns gradW(dx, r2) (vector)."""
-    h, alpha_d = kernel_consts(cfg)
+def eos(rho, cfg: SPHConfig):
+    return cfg.b_eos * ((rho / cfg.rho0) ** cfg.gamma - 1.0)
 
-    def grad_w(dx, r2):
+
+def sph_pair_body(cfg: SPHConfig):
+    """Fused momentum + continuity pair body (cell-pair engine protocol):
+    one cubic-spline gradient evaluation — the expensive part — feeds both
+    the acceleration (radial) and dρ/dt (scalar) outputs."""
+    h, alpha_d = kernel_consts(cfg)
+    m = cfg.mass
+
+    def body(dx, r2, ok, wi, wj):
         r = jnp.sqrt(jnp.maximum(r2, 1e-12))
         q = r / h
         dwdq = jnp.where(
             q <= 1.0, alpha_d * (-3.0 * q + 2.25 * q * q),
             jnp.where(q <= 2.0, -0.75 * alpha_d * (2.0 - q) ** 2, 0.0))
-        return (dwdq / (h * r))[..., None] * dx
-
-    return grad_w
-
-
-def eos(rho, cfg: SPHConfig):
-    return cfg.b_eos * ((rho / cfg.rho0) ** cfg.gamma - 1.0)
-
-
-def sph_kernel_factory(cfg: SPHConfig):
-    """Momentum + continuity in one fused pass (dict-valued kernel)."""
-    grad_w = grad_w_factory(cfg)
-    m = cfg.mass
-    h = cfg.h
-
-    def kern(dx, r2, wi, wj):
-        gw = grad_w(dx, r2)                       # (…, dim)
-        vij = wi["v"] - wj["v"]
+        gw_over_r = dwdq / (h * r)                # gradW = gw_over_r · dx
         rho_i, rho_j = wi["rho"], wj["rho"]
         P_i, P_j = eos(rho_i, cfg), eos(rho_j, cfg)
+        vr = jnp.zeros_like(r2)                   # (v_i - v_j)·dx
+        for d in range(cfg.dim):
+            vr = vr + (wi["v"][..., d] - wj["v"][..., d]) * dx(d)
         # artificial viscosity (approaching pairs only)
-        vr = jnp.sum(vij * dx, axis=-1)
         mu = h * vr / (r2 + cfg.eta2)
         rho_bar = 0.5 * (rho_i + rho_j)
         pi_visc = jnp.where(vr < 0.0, -cfg.alpha * cfg.c_sound * mu / rho_bar,
                             0.0)
         coef = P_i / jnp.maximum(rho_i * rho_i, 1e-6) \
             + P_j / jnp.maximum(rho_j * rho_j, 1e-6) + pi_visc
-        acc = -m * coef[..., None] * gw
-        drho = m * jnp.sum(vij * gw, axis=-1)
-        return {"a": acc, "drho": drho}
+        return {"a": I.Radial(-m * coef * gw_over_r),
+                "drho": m * vr * gw_over_r}
 
-    return kern
+    return body
+
+
+def sph_kernel_factory(cfg: SPHConfig):
+    """jnp ``kernel(dx, r2, wi, wj) -> {"a", "drho"}`` derived from the
+    same pair body the Pallas engine runs (single-source physics)."""
+    return I.as_jnp_kernel(sph_pair_body(cfg),
+                           {"a": "radial", "drho": "scalar"}, cfg.r_cut)
 
 
 # --------------------------------------------------------------------------
@@ -200,9 +206,10 @@ def _cl_kw(cfg: SPHConfig):
 
 def compute_rates(ps: P.ParticleSet, cfg: SPHConfig):
     cl = CL.build_cell_list(ps, **_cl_kw(cfg))
-    out = I.apply_kernel_cells(ps, cl, sph_kernel_factory(cfg),
-                               r_cut=cfg.r_cut,
-                               prop_names=("v", "rho"))
+    out = I.apply_pair_kernel(ps, cl, sph_pair_body(cfg),
+                              out={"a": "radial", "drho": "scalar"},
+                              r_cut=cfg.r_cut, prop_names=("v", "rho"),
+                              backend=cfg.backend, interpret=cfg.interpret)
     grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
     fluid = ps.props["kind"] == FLUID
     a = jnp.where(fluid[:, None], out["a"] + grav, 0.0)

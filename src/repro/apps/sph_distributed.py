@@ -5,6 +5,8 @@ cost balancer, triggered by the SAR heuristic.
 
 Step =  rates over local+ghost (ghosts carry v, rho — the property-subset
 ghost_get) → integrate (local) → map() → [SAR? → balanced_bounds → map()].
+The rate pass runs through the unified cell-pair engine
+(``SPHConfig.backend`` = "jnp" | "pallas", same flag as the serial app).
 """
 from __future__ import annotations
 
@@ -35,7 +37,7 @@ def make_distributed_step(mesh: Mesh, cfg: sph.SPHConfig,
                           example: PS.ParticleSet, axis_name="shards",
                           bucket_cap=2048, ghost_cap=2048):
     spec = M.ps_specs(example, axis_name)
-    kern = sph.sph_kernel_factory(cfg)
+    body = sph.sph_pair_body(cfg)
     cl_kw = _padded_cl_kw(cfg)
     ghost_props = ("v", "rho", "kind")
 
@@ -51,8 +53,11 @@ def make_distributed_step(mesh: Mesh, cfg: sph.SPHConfig,
                    for k in ghost_props},
             valid=jnp.concatenate([ps.valid, gp.valid]))
         cl = CL.build_cell_list(combo, **cl_kw)
-        out = I.apply_kernel_cells(combo, cl, kern, r_cut=cfg.r_cut,
-                                   prop_names=("v", "rho"))
+        out = I.apply_pair_kernel(combo, cl, body,
+                                  out={"a": "radial", "drho": "scalar"},
+                                  r_cut=cfg.r_cut, prop_names=("v", "rho"),
+                                  backend=cfg.backend,
+                                  interpret=cfg.interpret)
         n = ps.capacity
         grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
         fluid = ps.props["kind"] == sph.FLUID

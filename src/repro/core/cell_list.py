@@ -104,9 +104,22 @@ def build_cell_list(ps: ParticleSet, *, box_lo, box_hi, grid_shape,
                     box_hi=tuple(box_hi))
 
 
-def neighborhood_cells(cl: CellList) -> jax.Array:
-    """(n_cells, 3^dim) flat ids of each cell's neighborhood (self included).
-    Non-periodic out-of-range neighbors point at the trash row."""
+def neighborhood(cl: CellList) -> Tuple[jax.Array, jax.Array]:
+    """Single source for the 3^dim cell-neighborhood enumeration: returns
+    (cells, shifts), consumed zipped per (cell, K-slot).
+
+    cells  — (n_cells, 3^dim) int32 flat ids of each cell's neighborhood
+             (self included); non-periodic out-of-range neighbors point at
+             the trash row.
+    shifts — (n_cells, 3^dim, dim) float32 box shift of each neighbor cell
+             relative to the home cell's frame: a periodic neighbor reached
+             by wrapping below the box carries -L, above carries +L,
+             in-range neighbors carry 0. Adding the shift to a wrapped
+             neighbor's particle positions makes the *direct* displacement
+             from the home cell equal the periodic image displacement —
+             exact for any grid size (including axes with < 3 cells, where
+             the same cell appears in the neighborhood under several
+             shifts)."""
     gs = np.asarray(cl.grid_shape)
     dim = cl.dim
     n_cells = cl.n_cells
@@ -117,16 +130,29 @@ def neighborhood_cells(cl: CellList) -> jax.Array:
     flat = np.zeros(nb.shape[:2], np.int64)
     valid = np.ones(nb.shape[:2], bool)
     strides = np.concatenate([np.cumprod(gs[::-1])[::-1][1:], [1]])
+    L = np.asarray(cl.box_hi) - np.asarray(cl.box_lo)
+    shifts = np.zeros(nb.shape, np.float32)
     for d in range(dim):
         c = nb[..., d]
         if cl.periodic[d]:
+            shifts[..., d] = (c // gs[d]) * L[d]
             c = np.mod(c, gs[d])
         else:
             valid &= (c >= 0) & (c < gs[d])
             c = np.clip(c, 0, gs[d] - 1)
         flat += c * strides[d]
     flat = np.where(valid, flat, n_cells)
-    return jnp.asarray(flat, jnp.int32)
+    return jnp.asarray(flat, jnp.int32), jnp.asarray(shifts)
+
+
+def neighborhood_cells(cl: CellList) -> jax.Array:
+    """(n_cells, 3^dim) flat neighborhood ids (see :func:`neighborhood`)."""
+    return neighborhood(cl)[0]
+
+
+def neighborhood_shifts(cl: CellList) -> jax.Array:
+    """(n_cells, 3^dim, dim) neighbor box shifts (see :func:`neighborhood`)."""
+    return neighborhood(cl)[1]
 
 
 @jax.tree_util.register_dataclass
@@ -152,6 +178,13 @@ def build_verlet(ps: ParticleSet, cl: CellList, r_verlet: float,
     ``half=True`` builds the *symmetric* list (j > i only), matching the
     paper's symmetric-interaction optimization (§4.1): each pair appears
     once; contributions to j are pushed back via ghost_put-style scatter.
+
+    Caveat: periodic images are resolved by minimum image over the listed
+    index, so a grid axis needs ≥ 3 cells (otherwise a neighbor cell
+    appears twice in the neighborhood and the pair is double-listed). The
+    cell-tile paths (``interactions.apply_kernel_cells`` / the Pallas
+    cell-pair engine) use per-neighbor-cell shifts and are exact for any
+    grid size.
     """
     cap = ps.capacity
     hood = neighborhood_cells(cl)                      # (n_cells, K)
@@ -160,8 +193,7 @@ def build_verlet(ps: ParticleSet, cl: CellList, r_verlet: float,
     xm = ps.masked_x()
 
     def per_particle(i):
-        ci = cl.cell_id[i]
-        ci = jnp.minimum(ci, cl.n_cells)  # trash-safe
+        ci = cl.cell_id[i]      # ∈ [0, n_cells]; n_cells = trash (invalid)
         cand = cl.cells[hood[jnp.minimum(ci, cl.n_cells - 1)]]  # (K, cell_cap)
         cand = jnp.where(ci < cl.n_cells, cand, cap).reshape(K * cell_cap)
         xi = xm[i]

@@ -1,7 +1,7 @@
 """Pairwise particle interaction engine — ``applyKernel_in[_sym]`` (paper
 Listing 4.1, lines 50-51).
 
-Three execution paths, all numerically identical (property-tested):
+Four execution paths, all numerically identical (property-tested):
 
   * ``apply_kernel_verlet``      — full Verlet-list gather; one row of
     neighbors per particle. General, simple.
@@ -12,17 +12,40 @@ Three execution paths, all numerically identical (property-tested):
   * ``apply_kernel_cells``       — cell-blocked dense tiles: for each cell,
     interact its ≤cell_cap particles against the 3^dim-neighborhood
     candidates as one dense masked tile. Streams over cells with
-    ``lax.map`` so peak memory is batch-bounded. This is the structural
-    twin of the ``lj_cell`` Pallas kernel (kernels/lj_cell) and the path
-    the TPU roofline cares about: (cap × K·cap) tiles feed the VPU/MXU.
+    ``lax.map`` so peak memory is batch-bounded.
+  * ``backend="pallas"`` (via :func:`apply_pair_kernel`) — the same dense
+    cell tiles evaluated by the unified Pallas cell-pair engine
+    (``kernels/cell_pair``): the pair hot loop runs entirely in VMEM,
+    with one shared implementation of the gather/pad/mask/scatter
+    plumbing for every pairwise workload (MD, SPH, DEM, ...).
 
 Interaction kernels are user functions ``kernel(dx, r2, wi, wj) -> value``
 where ``dx = x_i - x_j`` (minimum image), matching the paper's
 ``DEFINE_INTERACTION`` pattern. Kernels must be *additive* (paper §2), so the
 result is order-independent.
+
+Workloads that want both backends write the physics once as a *pair body*
+(the cell-pair engine protocol, DESIGN.md §2):
+
+    body(dx, r2, ok, wi, wj) -> {name: per-pair value}
+
+      dx(d)  -> displacement component d of x_i - x_j (callable, so Pallas
+                keeps tiles 2-D per component)
+      r2     -> squared pair distance
+      ok     -> pair validity (cutoff + slot masks + self-exclusion)
+      wi[k]  -> i-side property; scalars broadcast against the pair shape,
+                vectors expose components via ``[..., d]``
+      value  -> per-pair scalar (summed over j) or :class:`Radial` (the
+                engine emits ``Σ_j mag · dx`` — forces, accelerations)
+
+``apply_pair_kernel(..., backend="jnp")`` routes a body through
+:func:`apply_kernel_cells` via :func:`as_jnp_kernel`; ``backend="pallas"``
+routes it through ``kernels.cell_pair.apply_kernel_pallas``. The jnp path
+is the oracle for the Pallas path.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Callable, Dict
 
@@ -31,9 +54,89 @@ import jax.numpy as jnp
 import numpy as np
 
 from .particles import ParticleSet
-from .cell_list import CellList, VerletList, neighborhood_cells, _min_image
+from .cell_list import CellList, VerletList, neighborhood, _min_image
 
 KernelFn = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Radial:
+    """Marker for a radially-directed per-pair value: the contribution of
+    pair (i, j) is ``mag * (x_i - x_j)`` — the shape of every central
+    force. Bodies return it so the engine can contract the magnitude
+    against displacement components without materializing pair vectors."""
+
+    mag: Any
+
+
+def check_out_kind(name: str, kind: str, value):
+    """Validate a body's returned value against its declared ``out`` kind
+    (both backends call this, so a mismatched body fails loudly and
+    identically instead of silently diverging). Returns the magnitude for
+    radial outputs, the value itself for scalar ones."""
+    if kind == "radial":
+        if not isinstance(value, Radial):
+            raise TypeError(
+                f"pair-body output {name!r} is declared 'radial' but the "
+                f"body returned a bare value; wrap it in Radial(mag)")
+        return value.mag
+    if isinstance(value, Radial):
+        raise TypeError(
+            f"pair-body output {name!r} is declared {kind!r} but the body "
+            f"returned Radial; declare it 'radial' or return the array")
+    return value
+
+
+def as_jnp_kernel(body, out, r_cut: float) -> KernelFn:
+    """Adapt a pair *body* (the cell-pair engine protocol above) into a
+    ``kernel(dx, r2, wi, wj)`` for the jnp paths — single-source physics.
+    ``out`` maps result name -> "scalar" | "radial" (same declaration the
+    Pallas engine consumes); ``r_cut`` rebuilds the engine's cutoff mask
+    so the body sees identical ``ok`` semantics."""
+    rc2 = r_cut * r_cut
+
+    def kernel(dx_arr, r2, wi, wj):
+        ok = (r2 < rc2) & (r2 > 1e-12)
+        dx = lambda d: dx_arr[..., d]
+        vals = body(dx, r2, ok, wi, wj)
+        res = {}
+        for name, kind in sorted(out.items()):
+            v = check_out_kind(name, kind, vals[name])
+            if kind == "radial":
+                res[name] = jnp.where(ok, v, 0.0)[..., None] * dx_arr
+            else:
+                res[name] = jnp.where(ok, v, 0.0)
+        return res
+
+    return kernel
+
+
+def apply_pair_kernel(ps: ParticleSet, cl: CellList, body, *, out,
+                      r_cut: float, prop_names=(), backend: str = "jnp",
+                      interpret: bool | None = None, cell_batch: int = 256,
+                      cells_per_block: int = 4):
+    """Uniform front door over the cell-blocked execution paths.
+
+    ``body`` follows the pair-body protocol (module docstring); ``out``
+    maps result name -> "scalar" | "radial". ``backend="jnp"`` evaluates
+    via :func:`apply_kernel_cells` (portable, the oracle);
+    ``backend="pallas"`` via the unified cell-pair engine
+    (``kernels/cell_pair``), with ``interpret=None`` auto-enabling
+    interpret mode off-TPU. Returns {name: (cap, ...) per-particle sums}.
+    """
+    if backend == "jnp":
+        kern = as_jnp_kernel(body, out, r_cut)
+        return apply_kernel_cells(ps, cl, kern, r_cut=r_cut,
+                                  prop_names=prop_names,
+                                  cell_batch=cell_batch)
+    if backend == "pallas":
+        # deferred import: core must stay importable without kernels/
+        from repro.kernels.cell_pair.cell_pair import apply_kernel_pallas
+        return apply_kernel_pallas(ps, cl, body, out=out, r_cut=r_cut,
+                                   prop_names=prop_names,
+                                   cells_per_block=cells_per_block,
+                                   interpret=interpret)
+    raise ValueError(f"unknown backend {backend!r}; want 'jnp' or 'pallas'")
 
 
 def _gather_props(props, idx, cap):
@@ -106,12 +209,17 @@ def apply_kernel_verlet_sym(ps: ParticleSet, vl: VerletList, cl: CellList,
 
 def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
                        r_cut: float, prop_names=(), cell_batch: int = 256):
-    """Cell-blocked dense-tile evaluation (structural twin of the Pallas
-    kernel). For each cell: (cell_cap) x (3^dim * cell_cap) masked pair tile.
-    Returns per-particle sums (same layout as the particle set)."""
+    """Cell-blocked dense-tile evaluation (structural twin of the unified
+    Pallas cell-pair engine, kernels/cell_pair — this is its oracle path).
+    For each cell: (cell_cap) x (3^dim * cell_cap) masked pair tile.
+    Periodic images are resolved by shifting each neighbor cell's
+    positions by its box offset (``neighborhood_shifts``), so the direct
+    displacement equals the image displacement for any grid size — same
+    semantics as the Pallas engine's gather. Returns per-particle sums
+    (same layout as the particle set)."""
     cap = ps.capacity
     cell_cap = cl.cell_cap
-    hood = neighborhood_cells(cl)           # (n_cells, K)
+    hood, shifts = neighborhood(cl)         # (n_cells, K), (n_cells, K, dim)
     n_cells, K = hood.shape
     xm = ps.masked_x()
     props = {k: ps.props[k] for k in prop_names}
@@ -119,12 +227,14 @@ def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
 
     def per_cell(c):
         rows = cl.cells[c]                              # (cell_cap,)
-        cand = cl.cells[hood[c]].reshape(K * cell_cap)  # (K*cell_cap,)
+        cand2 = cl.cells[hood[c]]                       # (K, cell_cap)
+        cand = cand2.reshape(K * cell_cap)
         row_ok = rows < cap
         cand_ok = cand < cap
         xi = xm[jnp.minimum(rows, cap - 1)]             # (cc, dim)
-        xj = xm[jnp.minimum(cand, cap - 1)]             # (Kcc, dim)
-        dx = _min_image(xi[:, None, :] - xj[None, :, :], cl)
+        xj = (xm[jnp.minimum(cand2, cap - 1)]           # (Kcc, dim), shifted
+              + shifts[c][:, None, :]).reshape(K * cell_cap, -1)
+        dx = xi[:, None, :] - xj[None, :, :]
         r2 = jnp.sum(dx * dx, axis=-1)                  # (cc, Kcc)
         pair_ok = (row_ok[:, None] & cand_ok[None, :]
                    & (rows[:, None] != cand[None, :]) & (r2 < rc2))

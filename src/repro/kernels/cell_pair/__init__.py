@@ -1,0 +1,8 @@
+"""Unified Pallas cell-pair interaction engine (MD, SPH, DEM, ...)."""
+from repro.kernels.cell_pair.cell_pair import (CellTiles, apply_kernel_pallas,
+                                               cell_pair_pallas,
+                                               gather_cell_tiles,
+                                               scatter_slots)
+
+__all__ = ["CellTiles", "apply_kernel_pallas", "cell_pair_pallas",
+           "gather_cell_tiles", "scatter_slots"]

@@ -1,0 +1,196 @@
+"""Unified Pallas cell-pair interaction engine (paper §2/§4.1, DESIGN.md §2).
+
+One implementation of the cell-blocked pair hot loop serves every pairwise
+workload — MD, SPH, DEM, and whatever comes next — the ``applyKernel_in``
+one-engine-many-clients argument of the paper (and of FDPS). The XLA side
+pre-gathers dense per-cell candidate tiles, applying the per-neighbor-cell
+periodic box shift so the kernel's *direct* displacement equals the minimum
+image for any grid size; the Pallas kernel evaluates a user-supplied
+~30-line *pair body* over the (cells_per_block, cell_cap, K·cell_cap)
+masked tile entirely in VMEM; per-slot sums are scattered back to
+particles. All pad / BlockSpec / mask / gather / scatter plumbing lives
+here and only here.
+
+Body protocol (shared with ``core.interactions.as_jnp_kernel``):
+
+    body(dx, r2, ok, wi, wj) -> {name: value}
+
+      dx(d)  -> displacement component d (x_i - x_j), pair-broadcast shape
+      r2     -> squared distance over the pair tile
+      ok     -> pair validity: slot masks & r2 < r_cut² & r2 > 0
+      wi[k]  -> i-side property; scalar (Cb, cc, 1) or vector
+                (Cb, cc, 1, dim) — index ``[..., d]`` for components
+      wj[k]  -> j-side property; scalar (Cb, 1, Kcc) / vector
+                (Cb, 1, Kcc, dim)
+      value  -> per-pair scalar array (engine sums over j) or
+                ``interactions.Radial(mag)`` (engine emits ``Σ_j mag·dx``)
+
+Tiles stay 2-D per cell block for the VPU: displacements are unrolled per
+component and radial outputs are contracted component-wise. VMEM per grid
+step is (Cb·cc + Cb·K·cc)·(dim + per-prop widths)·4 bytes — for the MD
+defaults (Cb=4, cc=48, K=27) about 650 KB, comfortably under budget; SPH
+adds v and rho tiles (~2.3×). The pure-jnp oracle is
+``core.interactions.apply_pair_kernel(..., backend="jnp")``, which routes
+the same body through ``apply_kernel_cells`` — which is why this package
+carries no separate ref.py.
+
+Caveat: like the dense jnp cells path, the 3^dim candidate pre-gather
+duplicates positions K-fold in HBM; size ``cell_cap`` to the workload.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cell_list import CellList, neighborhood
+from repro.core.interactions import Radial, _bmask, check_out_kind
+from repro.core.particles import ParticleSet
+
+
+class CellTiles(NamedTuple):
+    """Dense per-cell tiles: the engine's XLA-side pre-gather product."""
+
+    rows: jax.Array       # (n_cells, cc) int32 particle index per slot
+    cell_x: jax.Array     # (n_cells, cc, dim) home-cell positions
+    nbr_x: jax.Array      # (n_cells, K*cc, dim) candidates, shift-applied
+    cell_mask: jax.Array  # (n_cells, cc) bool
+    nbr_mask: jax.Array   # (n_cells, K*cc) bool
+    props_i: Dict[str, jax.Array]
+    props_j: Dict[str, jax.Array]
+
+
+def gather_cell_tiles(ps: ParticleSet, cl: CellList,
+                      prop_names=()) -> CellTiles:
+    """XLA-side pre-gather: dense per-cell tiles from a CellList. Periodic
+    neighbor cells' positions are shifted by the box offset of the image
+    they were reached through (``neighborhood_shifts``), so the kernel's
+    direct displacement equals the periodic image displacement — exact for
+    any grid size, including axes with fewer than 3 cells."""
+    cap = ps.capacity
+    xm = ps.masked_x()
+    hood, shifts = neighborhood(cl)         # (n_cells, K), (n_cells, K, dim)
+    n_cells, K = hood.shape
+    cc = cl.cell_cap
+    rows = cl.cells[:n_cells]                       # (n_cells, cc)
+    cand = cl.cells[hood].reshape(n_cells, K * cc)  # (n_cells, K*cc)
+    safe_r = jnp.minimum(rows, cap - 1)
+    safe_c = jnp.minimum(cand, cap - 1)
+    nbr_x = (xm[safe_c].reshape(n_cells, K, cc, ps.dim)
+             + shifts[:, :, None, :]).reshape(n_cells, K * cc, ps.dim)
+    return CellTiles(
+        rows=rows, cell_x=xm[safe_r], nbr_x=nbr_x,
+        cell_mask=rows < cap, nbr_mask=cand < cap,
+        props_i={k: ps.props[k][safe_r] for k in prop_names},
+        props_j={k: ps.props[k][safe_c] for k in prop_names})
+
+
+def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float):
+    """Generic tile kernel: unpack refs, build the pair mask, run the body,
+    reduce each output over the candidate axis."""
+    it = iter(refs)
+    xi = next(it)[...]          # (Cb, cc, dim)
+    xj = next(it)[...]          # (Cb, Kcc, dim)
+    mi = next(it)[...]          # (Cb, cc)
+    mj = next(it)[...]          # (Cb, Kcc)
+    wi, wj = {}, {}
+    for k in prop_names:
+        ai, aj = next(it)[...], next(it)[...]
+        wi[k] = ai[:, :, None] if ai.ndim == 2 else ai[:, :, None, :]
+        wj[k] = aj[:, None, :] if aj.ndim == 2 else aj[:, None, :, :]
+    out_refs = list(it)
+
+    def dx(d):
+        return xi[:, :, None, d] - xj[:, None, :, d]
+
+    r2 = jnp.zeros(xi.shape[:2] + (xj.shape[1],), jnp.float32)
+    for d in range(dim):
+        dd = dx(d)
+        r2 = r2 + dd * dd
+    ok = (mi[:, :, None] & mj[:, None, :] & (r2 < rc2) & (r2 > 1e-12))
+    vals = body(dx, r2, ok, wi, wj)
+    for (name, kind), oref in zip(out_spec, out_refs):
+        v = check_out_kind(name, kind, vals[name])
+        if kind == "radial":
+            mag = jnp.where(ok, v, 0.0)
+            for d in range(dim):
+                oref[:, :, d] = jnp.sum(mag * dx(d), axis=2)
+        else:
+            oref[...] = jnp.sum(jnp.where(ok, v, 0.0), axis=2)
+
+
+def cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask, props_i=None,
+                     props_j=None, *, body, out, r_cut: float,
+                     cells_per_block: int = 4, interpret: bool = False):
+    """Tile-level engine entry: pad to a cells_per_block multiple, build
+    BlockSpecs, run the pair kernel, unpad.
+
+    cell_x: (C, cc, dim); nbr_x: (C, Kcc, dim); masks (C, cc)/(C, Kcc);
+    props_i/props_j: {name: (C, cc[, dim]) / (C, Kcc[, dim])}. ``out`` maps
+    name -> "scalar" | "radial". Returns {name: (C, cc[, dim]) per-slot
+    sums}. Self-pairs are excluded by the r² > 0 guard (a particle is its
+    own neighborhood candidate at r = 0). jit at the call site."""
+    props_i = dict(props_i or {})
+    props_j = dict(props_j or {})
+    C0, cc, dim = cell_x.shape
+    names = tuple(sorted(props_i))
+    args = [cell_x, nbr_x, cell_mask, nbr_mask]
+    for k in names:
+        args += [props_i[k], props_j[k]]
+    pad = (-C0) % cells_per_block
+    if pad:
+        args = [jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+                for a in args]
+    C = C0 + pad
+    grid = (C // cells_per_block,)
+    bs = lambda t: pl.BlockSpec((cells_per_block,) + t,
+                                lambda i: (i,) + (0,) * len(t))
+    out_spec = tuple(sorted(out.items()))
+    out_shapes = [jax.ShapeDtypeStruct(
+        (C, cc, dim) if kind == "radial" else (C, cc), jnp.float32)
+        for _, kind in out_spec]
+    kern = functools.partial(_pair_kernel, body=body, prop_names=names,
+                             out_spec=out_spec, dim=dim, rc2=r_cut * r_cut)
+    res = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[bs(a.shape[1:]) for a in args],
+        out_specs=[bs(s.shape[1:]) for s in out_shapes],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*args)
+    return {name: r[:C0] for (name, _), r in zip(out_spec, res)}
+
+
+def scatter_slots(rows: jax.Array, val: jax.Array, cap: int) -> jax.Array:
+    """Slot→particle scatter-back: (n_cells, cc, ...) per-slot sums into a
+    (cap, ...) per-particle array (sentinel rows land on the dropped
+    cap-th slot)."""
+    flat_rows = rows.reshape(-1)
+    flat = val.reshape((flat_rows.shape[0],) + val.shape[2:])
+    out = jnp.zeros((cap + 1,) + flat.shape[1:], flat.dtype)
+    return out.at[jnp.minimum(flat_rows, cap)].add(flat)[:cap]
+
+
+def apply_kernel_pallas(ps: ParticleSet, cl: CellList, body, *, out,
+                        r_cut: float, prop_names=(),
+                        cells_per_block: int = 4,
+                        interpret: bool | None = None):
+    """End-to-end Pallas path: gather → pair kernel → scatter. The fourth
+    execution path of ``core.interactions`` (use
+    ``apply_pair_kernel(..., backend="pallas")`` for the uniform front
+    door). ``interpret=None`` auto-enables interpret mode off-TPU."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    t = gather_cell_tiles(ps, cl, prop_names)
+    res = cell_pair_pallas(t.cell_x, t.nbr_x, t.cell_mask, t.nbr_mask,
+                           t.props_i, t.props_j, body=body, out=out,
+                           r_cut=r_cut, cells_per_block=cells_per_block,
+                           interpret=interpret)
+    cap = ps.capacity
+    return {name: jnp.where(_bmask(ps.valid, s), s, 0)
+            for name, s in ((n, scatter_slots(t.rows, v, cap))
+                            for n, v in res.items())}

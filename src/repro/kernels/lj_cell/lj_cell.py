@@ -1,100 +1,27 @@
-"""Cell-blocked Lennard-Jones force Pallas TPU kernel (paper §4.1 hot loop).
+"""Cell-blocked Lennard-Jones forces (paper §4.1 hot loop) — a thin pair
+body over the unified cell-pair engine (``kernels/cell_pair``).
 
-The TPU-native adaptation of the MD cell-list force loop (DESIGN.md §2):
-the ragged per-cell neighbor iteration becomes a dense masked pair tile.
-The XLA side pre-gathers, per cell, the (cell_cap, 3) positions of the
-cell's own particles and the (K·cell_cap, 3) candidate positions of the
-3^dim neighborhood (this gather is memory-bound bookkeeping); the kernel
-then computes the O(cell_cap × K·cell_cap) pair interactions — the compute
-hot spot — entirely in VMEM.
-
-Grid: (n_cells / cells_per_block,). Each step loads
-(Cb, cc, 3) + (Cb, Kcc, 3) + masks and emits (Cb, cc, 3) forces. For the
-default Cb=4, cc=32, Kcc=864: ~450 KB of VMEM — well under budget, and the
-inner pair loop vectorizes on the VPU (r² reductions over the trailing
-3-vector are unrolled, keeping the (cc, Kcc) tiles 2-D).
-"""
+Historically this file carried its own pad/BlockSpec/mask/gather/scatter
+plumbing; that now lives once in the engine, and LJ is just
+``apps.md.lj_pair_body`` (~10 lines of physics). The package remains for
+the tile-level oracle tests (ref.py) and the jitted end-to-end op
+(ops.py)."""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.apps.md import lj_pair_body
+from repro.kernels.cell_pair.cell_pair import cell_pair_pallas
 
 
-def _kernel(xi_ref, xj_ref, mi_ref, mj_ref, f_ref, *, sigma2: float,
-            epsilon: float, rc2: float):
-    xi = xi_ref[...]          # (Cb, cc, 3)
-    xj = xj_ref[...]          # (Cb, Kcc, 3)
-    mi = mi_ref[...]          # (Cb, cc)
-    mj = mj_ref[...]          # (Cb, Kcc)
-
-    # pairwise displacements per component (keep tiles 2-D per cell block)
-    r2 = jnp.zeros(xi.shape[:2] + (xj.shape[1],), jnp.float32)
-    for d in range(3):
-        dd = xi[:, :, None, d] - xj[:, None, :, d]
-        r2 = r2 + dd * dd
-    pair_ok = (mi[:, :, None] & mj[:, None, :] & (r2 < rc2) & (r2 > 1e-12))
-    r2s = jnp.maximum(r2, 1e-12)
-    inv = sigma2 / r2s
-    inv3 = inv * inv * inv
-    mag = 24.0 * epsilon * (2.0 * inv3 * inv3 - inv3) / r2s
-    mag = jnp.where(pair_ok, mag, 0.0)
-    for d in range(3):
-        dd = xi[:, :, None, d] - xj[:, None, :, d]
-        f_ref[:, :, d] = jnp.sum(mag * dd, axis=2)
-
-
-@functools.partial(jax.jit, static_argnames=("sigma", "epsilon", "r_cut",
-                                             "cells_per_block", "interpret"))
 def lj_cell_forces(cell_x, nbr_x, cell_mask, nbr_mask, *, sigma: float,
                    epsilon: float, r_cut: float, cells_per_block: int = 4,
                    interpret: bool = False):
     """cell_x: (C, cc, 3); nbr_x: (C, Kcc, 3); masks: (C, cc)/(C, Kcc).
     Returns per-slot forces (C, cc, 3). Self-pairs are excluded by the
-    r² > 0 guard (a particle is its own neighborhood candidate at r=0)."""
-    C0, cc, _ = cell_x.shape
-    Kcc = nbr_x.shape[1]
-    pad = (-C0) % cells_per_block
-    if pad:
-        cell_x = jnp.pad(cell_x, ((0, pad), (0, 0), (0, 0)))
-        nbr_x = jnp.pad(nbr_x, ((0, pad), (0, 0), (0, 0)))
-        cell_mask = jnp.pad(cell_mask, ((0, pad), (0, 0)))
-        nbr_mask = jnp.pad(nbr_mask, ((0, pad), (0, 0)))
-    C = C0 + pad
-    grid = (C // cells_per_block,)
-    bs = lambda t: pl.BlockSpec((cells_per_block,) + t, lambda i: (i,) + (0,) * len(t))
-    kern = functools.partial(_kernel, sigma2=sigma * sigma, epsilon=epsilon,
-                             rc2=r_cut * r_cut)
-    out = pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[bs((cc, 3)), bs((Kcc, 3)), bs((cc,)), bs((Kcc,))],
-        out_specs=bs((cc, 3)),
-        out_shape=jax.ShapeDtypeStruct((C, cc, 3), jnp.float32),
-        interpret=interpret,
-    )(cell_x, nbr_x, cell_mask, nbr_mask)
-    return out[:C0]
-
-
-def gather_cell_tiles(ps, cl):
-    """XLA-side pre-gather: dense per-cell tiles from a CellList. Positions
-    of periodic neighbor cells are given as-is; the kernel's cutoff test
-    relies on ghost images / minimum-image having been applied upstream
-    (distributed path) or on the box being larger than 2·r_cut so the
-    min-image displacement equals the direct one after wrapping (tests)."""
-    import jax.numpy as jnp
-    from repro.core.cell_list import neighborhood_cells
-    from repro.core.particles import ParticleSet
-
-    cap = ps.capacity
-    xm = ps.masked_x()
-    hood = neighborhood_cells(cl)                   # (n_cells, K)
-    n_cells, K = hood.shape
-    cc = cl.cell_cap
-    rows = cl.cells[:n_cells]                       # (n_cells, cc)
-    cand = cl.cells[hood].reshape(n_cells, K * cc)  # (n_cells, K*cc)
-    cell_x = xm[jnp.minimum(rows, cap - 1)]
-    nbr_x = xm[jnp.minimum(cand, cap - 1)]
-    return (cell_x, nbr_x, rows < cap, cand < cap, rows)
+    engine's r² > 0 guard (a particle is its own neighborhood candidate at
+    r=0). jit at the call site."""
+    out = cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask,
+                           body=lj_pair_body(sigma, epsilon),
+                           out={"f": "radial"}, r_cut=r_cut,
+                           cells_per_block=cells_per_block,
+                           interpret=interpret)
+    return out["f"]

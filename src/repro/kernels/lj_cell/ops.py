@@ -1,45 +1,19 @@
-"""Jitted end-to-end LJ force op: cell-list build + pre-gather (XLA) +
-pair-tile kernel (Pallas), scattering per-slot results back to particles."""
+"""Jitted end-to-end LJ force op — delegates to apps.md's compute_forces
+with the Pallas backend of the unified cell-pair engine forced on."""
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import cell_list as CL
-from repro.kernels.lj_cell.lj_cell import lj_cell_forces, gather_cell_tiles
+from repro.apps import md
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret"))
 def forces(ps, cfg, interpret: bool | None = None):
-    """Drop-in replacement for apps.md.compute_forces' interaction part."""
-    if interpret is None:
-        interpret = jax.devices()[0].platform != "tpu"
-    gs = CL.grid_shape_for((0.0,) * cfg.dim, (cfg.box,) * cfg.dim, cfg.r_cut)
-    cl = CL.build_cell_list(ps, box_lo=(0.0,) * cfg.dim,
-                            box_hi=(cfg.box,) * cfg.dim, grid_shape=gs,
-                            periodic=(True,) * cfg.dim,
-                            cell_cap=cfg.cell_cap)
-    cell_x, nbr_x, mi, mj, rows = gather_cell_tiles(ps, cl)
-    # wrap neighbor displacements via minimum image against cell centers:
-    # apply min-image by shifting nbr positions into the frame of each cell
-    f_tiles = lj_cell_forces(cell_x, _min_image_to(cell_x, nbr_x, cfg.box),
-                             mi, mj, sigma=cfg.sigma, epsilon=cfg.epsilon,
-                             r_cut=cfg.r_cut, interpret=interpret)
-    cap = ps.capacity
-    flat_rows = rows.reshape(-1)
-    flat_f = f_tiles.reshape(-1, 3)
-    out = jnp.zeros((cap + 1, 3), jnp.float32).at[
-        jnp.minimum(flat_rows, cap)].add(flat_f)[:cap]
-    return jnp.where(ps.valid[:, None], out, 0.0), cl.overflow
-
-
-def _min_image_to(cell_x, nbr_x, box: float):
-    """Shift neighbor candidates to the nearest periodic image of each
-    cell's first valid particle (cells are smaller than box/2, so one
-    reference point fixes the image for the whole tile)."""
-    ref = cell_x[:, :1, :]                       # (C, 1, 3)
-    d = nbr_x - ref
-    shift = box * jnp.round(d / box)
-    return nbr_x - shift
+    """Drop-in replacement for apps.md.compute_forces' interaction part:
+    returns (forces, cell-list overflow)."""
+    pcfg = dataclasses.replace(cfg, backend="pallas", interpret=interpret)
+    ps2, overflow = md.compute_forces(ps, pcfg)
+    return ps2.props["f"], overflow

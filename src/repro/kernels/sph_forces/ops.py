@@ -1,43 +1,19 @@
-"""Jitted end-to-end SPH rate op using the Pallas pair-tile kernel."""
+"""Jitted end-to-end SPH rate op — delegates to apps.sph's compute_rates
+with the Pallas backend of the unified cell-pair engine forced on."""
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import cell_list as CL
-from repro.core.cell_list import neighborhood_cells
-from repro.apps.sph import SPHConfig, FLUID, _cl_kw
-from repro.kernels.sph_forces.sph_forces import sph_cell_forces
+from repro.apps import sph
+from repro.apps.sph import SPHConfig
 
 
 @partial(jax.jit, static_argnames=("cfg", "interpret"))
 def compute_rates(ps, cfg: SPHConfig, interpret: bool | None = None):
-    """Kernel-backed replacement for apps.sph.compute_rates."""
-    if interpret is None:
-        interpret = jax.devices()[0].platform != "tpu"
-    cl = CL.build_cell_list(ps, **_cl_kw(cfg))
-    cap = ps.capacity
-    xm = ps.masked_x()
-    hood = neighborhood_cells(cl)
-    n_cells, K = hood.shape
-    cc = cl.cell_cap
-    rows = cl.cells[:n_cells]
-    cand = cl.cells[hood].reshape(n_cells, K * cc)
-    safe_r = jnp.minimum(rows, cap - 1)
-    safe_c = jnp.minimum(cand, cap - 1)
-    a_t, dr_t = sph_cell_forces(
-        xm[safe_r], xm[safe_c],
-        ps.props["v"][safe_r], ps.props["v"][safe_c],
-        ps.props["rho"][safe_r], ps.props["rho"][safe_c],
-        rows < cap, cand < cap, cfg=cfg, interpret=interpret)
-    flat_rows = rows.reshape(-1)
-    a = jnp.zeros((cap + 1, cfg.dim), jnp.float32).at[
-        jnp.minimum(flat_rows, cap)].add(a_t.reshape(-1, cfg.dim))[:cap]
-    drho = jnp.zeros((cap + 1,), jnp.float32).at[
-        jnp.minimum(flat_rows, cap)].add(dr_t.reshape(-1))[:cap]
-    grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
-    fluid = ps.props["kind"] == FLUID
-    a = jnp.where(fluid[:, None], a + grav, 0.0)
-    return a, drho, cl.overflow
+    """Kernel-backed replacement for apps.sph.compute_rates: returns
+    (accel, drho, cell-list overflow)."""
+    pcfg = dataclasses.replace(cfg, backend="pallas", interpret=interpret)
+    return sph.compute_rates(ps, pcfg)

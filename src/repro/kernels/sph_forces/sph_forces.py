@@ -1,113 +1,29 @@
-"""Fused SPH density+momentum Pallas TPU kernel (paper §4.2 hot loop).
+"""Fused SPH density+momentum tile kernel (paper §4.2 hot loop) — a thin
+pair body over the unified cell-pair engine (``kernels/cell_pair``).
 
-Same dense cell-tile pattern as lj_cell: XLA pre-gathers per-cell particle
-tiles (positions, velocities, densities); one kernel pass computes BOTH the
-continuity-equation rate dρ/dt and the momentum equation acceleration
-(pressure + artificial viscosity) — the fusion matters because both terms
-share the kernel-gradient evaluation, the expensive part.
-
-2-D formulation (the benchmark dam break); tiles are (Cb, cc) × (Cb, Kcc)
-with per-component displacement unrolling to keep everything 2-D for the
-VPU.
-"""
+The fusion (one cubic-spline gradient evaluation feeding both the
+continuity rate dρ/dt and the momentum acceleration) lives in
+``apps.sph.sph_pair_body``; all pad/BlockSpec/mask/scatter plumbing lives
+in the engine. The package remains for the tile-level oracle tests
+(ref.py) and the jitted end-to-end op (ops.py)."""
 from __future__ import annotations
 
-import functools
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.apps.sph import sph_pair_body
+from repro.kernels.cell_pair.cell_pair import cell_pair_pallas
 
 
-def _kernel(xi_ref, xj_ref, vi_ref, vj_ref, ri_ref, rj_ref, mi_ref, mj_ref,
-            a_ref, dr_ref, *,
-            dim: int, h: float, alpha_d: float, m: float, b_eos: float,
-            rho0: float, gamma: float, alpha: float, c0: float, eta2: float,
-            rc2: float):
-    xi, xj = xi_ref[...], xj_ref[...]
-    vi, vj = vi_ref[...], vj_ref[...]
-    ri, rj = ri_ref[...], rj_ref[...]
-    mi, mj = mi_ref[...], mj_ref[...]
-    r2 = jnp.zeros((xi.shape[0], xi.shape[1], xj.shape[1]), jnp.float32)
-    for d in range(dim):
-        dd = xi[:, :, None, d] - xj[:, None, :, d]
-        r2 = r2 + dd * dd
-    ok = (mi[:, :, None] & mj[:, None, :] & (r2 < rc2) & (r2 > 1e-12))
-    r = jnp.sqrt(jnp.maximum(r2, 1e-12))
-    q = r / h
-    dwdq = jnp.where(q <= 1.0, alpha_d * (-3.0 * q + 2.25 * q * q),
-                     jnp.where(q <= 2.0, -0.75 * alpha_d * (2.0 - q) ** 2,
-                               0.0))
-    gw_over_r = jnp.where(ok, dwdq / (h * r), 0.0)   # gradW = gw_over_r * dx
-
-    # pressures from Tait EOS
-    def P(rho):
-        return b_eos * ((rho / rho0) ** gamma - 1.0)
-
-    Pi = P(ri)[:, :, None]
-    Pj = P(rj)[:, None, :]
-    rho_i = ri[:, :, None]
-    rho_j = rj[:, None, :]
-
-    vr = jnp.zeros_like(r2)
-    for d in range(dim):
-        dd = xi[:, :, None, d] - xj[:, None, :, d]
-        dv = vi[:, :, None, d] - vj[:, None, :, d]
-        vr = vr + dv * dd
-    mu = h * vr / (r2 + eta2)
-    rho_bar = 0.5 * (rho_i + rho_j)
-    pi_visc = jnp.where(vr < 0.0, -alpha * c0 * mu / rho_bar, 0.0)
-    coef = Pi / jnp.maximum(rho_i * rho_i, 1e-6) \
-        + Pj / jnp.maximum(rho_j * rho_j, 1e-6) + pi_visc
-    scal = jnp.where(ok, -m * coef * gw_over_r, 0.0)
-
-    drho = jnp.zeros_like(r2)
-    for d in range(dim):
-        dd = xi[:, :, None, d] - xj[:, None, :, d]
-        dv = vi[:, :, None, d] - vj[:, None, :, d]
-        a_ref[:, :, d] = jnp.sum(scal * dd, axis=2)
-        drho = drho + dv * (gw_over_r * dd)
-    dr_ref[...] = m * jnp.sum(jnp.where(ok, drho, 0.0), axis=2)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "cells_per_block",
-                                             "interpret"))
 def sph_cell_forces(cell_x, nbr_x, cell_v, nbr_v, cell_rho, nbr_rho,
                     cell_mask, nbr_mask, *, cfg, cells_per_block: int = 4,
                     interpret: bool = False):
     """Tiles: (C, cc, dim)/(C, Kcc, dim) positions+velocities, (C, cc)/(C,
-    Kcc) densities+masks. Returns (accel (C, cc, dim), drho (C, cc))."""
-    C0, cc, dim = cell_x.shape
-    Kcc = nbr_x.shape[1]
-    pad = (-C0) % cells_per_block
-    if pad:
-        p3 = ((0, pad), (0, 0), (0, 0))
-        p2 = ((0, pad), (0, 0))
-        cell_x, nbr_x = jnp.pad(cell_x, p3), jnp.pad(nbr_x, p3)
-        cell_v, nbr_v = jnp.pad(cell_v, p3), jnp.pad(nbr_v, p3)
-        cell_rho, nbr_rho = jnp.pad(cell_rho, p2), jnp.pad(nbr_rho, p2)
-        cell_mask, nbr_mask = jnp.pad(cell_mask, p2), jnp.pad(nbr_mask, p2)
-    C = C0 + pad
-    grid = (C // cells_per_block,)
-    bs = lambda t: pl.BlockSpec((cells_per_block,) + t,
-                                lambda i: (i,) + (0,) * len(t))
-    import numpy as np
-    h = cfg.h
-    alpha_d = (10.0 / (7.0 * np.pi * h * h) if dim == 2
-               else 1.0 / (np.pi * h ** 3))
-    kern = functools.partial(
-        _kernel, dim=dim, h=h, alpha_d=alpha_d, m=cfg.mass, b_eos=cfg.b_eos,
-        rho0=cfg.rho0, gamma=cfg.gamma, alpha=cfg.alpha, c0=cfg.c_sound,
-        eta2=cfg.eta2, rc2=cfg.r_cut ** 2)
-    a, dr = pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[bs((cc, dim)), bs((Kcc, dim)), bs((cc, dim)),
-                  bs((Kcc, dim)), bs((cc,)), bs((Kcc,)), bs((cc,)),
-                  bs((Kcc,))],
-        out_specs=[bs((cc, dim)), bs((cc,))],
-        out_shape=[jax.ShapeDtypeStruct((C, cc, dim), jnp.float32),
-                   jax.ShapeDtypeStruct((C, cc), jnp.float32)],
-        interpret=interpret,
-    )(cell_x, nbr_x, cell_v, nbr_v, cell_rho, nbr_rho, cell_mask, nbr_mask)
-    return a[:C0], dr[:C0]
+    Kcc) densities+masks. Returns (accel (C, cc, dim), drho (C, cc)).
+    jit at the call site."""
+    out = cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask,
+                           {"v": cell_v, "rho": cell_rho},
+                           {"v": nbr_v, "rho": nbr_rho},
+                           body=sph_pair_body(cfg),
+                           out={"a": "radial", "drho": "scalar"},
+                           r_cut=cfg.r_cut,
+                           cells_per_block=cells_per_block,
+                           interpret=interpret)
+    return out["a"], out["drho"]

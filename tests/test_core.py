@@ -139,6 +139,38 @@ def test_cell_list_overflow_detected():
     assert int(cl.overflow) == 12
 
 
+def test_build_verlet_trash_row_invalid_particles():
+    """Regression for the build_verlet trash-row path: invalid particles
+    (cell_id = n_cells) get empty neighbor rows and never appear in any
+    valid particle's list — including via the trash row that non-periodic
+    edge cells' neighborhoods point at."""
+    n, cap = 14, 24
+    key = jax.random.PRNGKey(5)
+    x = jax.random.uniform(key, (n, 2))
+    ps = P.from_positions(x, capacity=cap)
+    # invalidate some real particles too (removal mid-run), not just padding
+    ps = ps.where(jnp.arange(cap) % 5 != 2)
+    r_cut = 0.3
+    gs = CL.grid_shape_for((0, 0), (1, 1), r_cut)
+    cl = CL.build_cell_list(ps, box_lo=(0., 0.), box_hi=(1., 1.),
+                            grid_shape=gs, periodic=(False, False),
+                            cell_cap=cap)
+    vl = CL.build_verlet(ps, cl, r_cut, k_max=cap)
+    nbr = np.asarray(vl.nbr)
+    valid = np.asarray(ps.valid)
+    assert (nbr[~valid] == cap).all(), "invalid rows must be empty"
+    listed = nbr[nbr < cap]
+    assert valid[listed].all(), "invalid particles listed as neighbors"
+    # and the surviving lists match brute force over valid particles
+    xn = np.asarray(ps.x)
+    for i in np.nonzero(valid)[0]:
+        d = xn[i] - xn
+        r2 = (d ** 2).sum(axis=1)
+        brute = set(np.nonzero((r2 < r_cut ** 2) & valid)[0].tolist()) - {i}
+        mine = set(nbr[i].tolist()) - {cap}
+        assert mine == brute, (i, mine, brute)
+
+
 # --------------------------------------------------------------------------
 # Interaction engine: all three paths agree (additivity/order-independence)
 # --------------------------------------------------------------------------

@@ -70,7 +70,8 @@ def test_dem_avalanche_flows():
     ps = dem.init_block(cfg)
     cs = dem.build_contacts(ps, cfg)
     for i in range(250):
-        ps, cs, rebuild = dem.dem_step(ps, cs, cfg)
+        ps, cs, rebuild, ovf = dem.dem_step(ps, cs, cfg)
+        assert int(ovf) == 0
         if bool(rebuild):
             cs = dem.build_contacts(ps, cfg, old=cs)
     v = np.asarray(ps.props["v"])[np.asarray(ps.valid)]

@@ -15,4 +15,7 @@ python examples/vortex_ring.py --steps 1
 echo "== examples/quickstart.py =="
 python examples/quickstart.py
 
+echo "== cell-pair engine backend parity (jnp vs pallas interpret) =="
+python benchmarks/backend_compare.py
+
 echo "smoke OK"

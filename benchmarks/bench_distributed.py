@@ -1,0 +1,88 @@
+"""Distributed weak scaling — MD step on 1/2/4/8 forced host devices.
+
+The paper's headline result (§4.1, Table 2) is scalability of the same
+client code from 1 to many processors. This benchmark runs the distributed
+MD step (map() + ghost_get() + local forces) on 1-, 2-, 4- and 8-device
+submeshes of 8 forced host devices, holding ~particles-per-device constant
+(weak scaling). Workload construction is shared with the
+serial-vs-distributed equivalence tests via benchmarks/dist_common.py — we
+time exactly what the tests prove correct.
+
+Device count is locked at first jax backend init, so the parent benchmark
+process (1 device) re-execs this file as a ``--child`` subprocess with
+XLA_FLAGS forced, and relays its CSV rows.
+"""
+import os
+import sys
+
+# Weak scaling: ndev -> lattice side, keeping n/ndev within ~7% of 512
+# (cube roots of 512·ndev are not integral for ndev=2,4).
+SCALE = {1: 8, 2: 10, 4: 13, 8: 16}
+# sigma chosen so r_cut = 3σ fits inside the thinnest slab (1/8 box) —
+# the ±1-neighbor ghost exchange is exact and cell caps hold at this density
+SIGMA = 0.04
+N_TIME = 5
+
+import pathlib
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.xla_env import ensure_forced_host_devices
+
+
+def _child_main():
+    ensure_forced_host_devices(os.environ)
+
+    import time
+
+    import jax
+    import numpy as np
+    from benchmarks import dist_common as DC
+    from repro.apps import md_distributed as MDD
+
+    for ndev, nps in sorted(SCALE.items()):
+        cfg = DC.md_config(n_per_side=nps, sigma=SIGMA)
+        mesh = DC.make_submesh(ndev)
+        cap_per_dev = int(np.ceil(cfg.n_particles / ndev * 3))
+        ps, bounds = DC.md_distributed_start(mesh, cfg, ndev,
+                                             cap_per_dev=cap_per_dev)
+        step = MDD.make_distributed_step(mesh, cfg, ps)
+        ps, ovf = step(ps, bounds)            # compile + warmup
+        jax.block_until_ready(ps.x)
+        assert int(ovf) == 0, f"overflow at ndev={ndev}"
+        t0 = time.perf_counter()
+        for _ in range(N_TIME):
+            ps, ovf = step(ps, bounds)
+        jax.block_until_ready(ps.x)
+        us = (time.perf_counter() - t0) / N_TIME * 1e6
+        per_kp = us / cfg.n_particles * 1e3
+        print(f"dist_md_weak_nd{ndev},{us:.1f},"
+              f"us_per_1e3_particles={per_kp:.2f};n={cfg.n_particles}",
+              flush=True)
+
+
+def run():
+    """Parent entry (benchmarks/run.py): relay the child's CSV rows."""
+    import subprocess
+    env = dict(os.environ)
+    ensure_forced_host_devices(env)
+    r = subprocess.run([sys.executable, os.path.abspath(__file__), "--child"],
+                       capture_output=True, text=True, timeout=1800, env=env)
+    rows = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("dist_md_weak")]
+    if r.returncode != 0 or not rows:
+        print(f"bench_distributed child failed:\n{r.stderr[-2000:]}",
+              file=sys.stderr)
+        return []
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for line in run():
+            print(line)

@@ -1,0 +1,131 @@
+"""Shared distributed workload fixtures.
+
+One definition of the MD / SPH / Gray-Scott distributed workloads, used by
+both the serial-vs-distributed equivalence tests
+(tests/distributed/test_dist_equivalence.py) and the weak-scaling benchmark
+(benchmarks/bench_distributed.py) — the benchmark measures exactly the
+configurations the tests prove correct.
+
+Everything here goes through the version-portable runtime shim
+(core/runtime.py); nothing assumes a jax version.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.apps import md, sph
+from repro.core import dlb
+from repro.core import particles as PS
+from repro.core import runtime as RT
+
+AXIS = "shards"
+
+
+def make_submesh(ndev: int):
+    """1-D mesh over the first ``ndev`` visible devices (so an 8-forced-host
+    process can host 1/2/4/8-device meshes)."""
+    return RT.make_mesh((ndev,), (AXIS,), devices=jax.devices()[:ndev])
+
+
+def shard_over(ps: PS.ParticleSet, mesh) -> PS.ParticleSet:
+    sh = NamedSharding(mesh, P(AXIS))
+    return jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
+
+
+def slab_scatter(ps0: PS.ParticleSet, bounds, ndev: int, cap_per_dev: int,
+                 slab_axis: int = 0) -> PS.ParticleSet:
+    """Host-side 'global map': place every valid particle of ``ps0`` into its
+    owning device's slot block (device d owns slots [d·cap, (d+1)·cap)).
+
+    Adds an int32 ``id`` prop — the particle's dense index among ``ps0``'s
+    valid rows — the provenance key that serial-vs-distributed comparisons
+    match on."""
+    val0 = np.asarray(ps0.valid)
+    xs = np.asarray(ps0.x)[val0]
+    props = {k: np.asarray(v)[val0] for k, v in ps0.props.items()}
+    props["id"] = np.arange(len(xs), dtype=np.int32)
+    owner = np.clip(
+        np.searchsorted(np.asarray(bounds), xs[:, slab_axis], "right") - 1,
+        0, ndev - 1)
+    cap = ndev * cap_per_dev
+    X = np.full((cap, xs.shape[1]), PS.ParticleSet.FILL, np.float32)
+    PR = {k: np.zeros((cap,) + v.shape[1:], v.dtype) for k, v in props.items()}
+    V = np.zeros(cap, bool)
+    for d in range(ndev):
+        rows = np.nonzero(owner == d)[0]
+        assert len(rows) <= cap_per_dev, "raise cap_per_dev"
+        b = d * cap_per_dev
+        X[b:b + len(rows)] = xs[rows]
+        for k in PR:
+            PR[k][b:b + len(rows)] = props[k][rows]
+        V[b:b + len(rows)] = True
+    return PS.ParticleSet(x=jnp.asarray(X),
+                          props={k: jnp.asarray(v) for k, v in PR.items()},
+                          valid=jnp.asarray(V))
+
+
+# --------------------------------------------------------------------------
+# MD workload (paper §4.1) — also the weak-scaling benchmark subject
+# --------------------------------------------------------------------------
+
+def md_config(n_per_side: int = 8, sigma: float = 0.085) -> md.MDConfig:
+    return md.MDConfig(n_per_side=n_per_side, sigma=sigma, dt=0.0005)
+
+
+def md_serial_start(cfg: md.MDConfig, seed: int = 0):
+    """Serial reference state: lattice + thermal velocities, f=0. Returns
+    (ps, v0); the particle at serial slot i has id i on the distributed
+    side (init_grid packs valid rows first)."""
+    ps = md.init_particles(cfg, capacity=cfg.n_particles)
+    key = jax.random.PRNGKey(seed)
+    v0 = 0.3 * jax.random.normal(key, (cfg.n_particles, cfg.dim))
+    v0 = v0 - v0.mean(axis=0, keepdims=True)
+    return ps.with_prop("v", v0), v0
+
+
+def md_distributed_start(mesh, cfg: md.MDConfig, ndev: int,
+                         cap_per_dev: int = 160, seed: int = 0):
+    """Distributed start with the SAME initial condition as
+    :func:`md_serial_start` (velocities injected by particle id)."""
+    from repro.apps import md_distributed as MDD
+    ps, bounds = MDD.init_distributed(mesh, cfg, ndev,
+                                      cap_per_dev=cap_per_dev, thermal_v=0.0)
+    _, v0 = md_serial_start(cfg, seed)
+    ids = np.asarray(ps.props["id"])
+    val = np.asarray(ps.valid)
+    v_all = np.zeros_like(np.asarray(ps.props["v"]))
+    v_all[val] = np.asarray(v0)[ids[val]]
+    ps = ps.with_prop("v", jnp.asarray(v_all))
+    return shard_over(ps, mesh), bounds
+
+
+# --------------------------------------------------------------------------
+# SPH workload (paper §4.2 dam break)
+# --------------------------------------------------------------------------
+
+def sph_config() -> sph.SPHConfig:
+    return sph.SPHConfig(dp=0.05, box=(1.0, 0.5), fluid=(0.25, 0.25))
+
+
+def sph_distributed_start(mesh, cfg: sph.SPHConfig, ndev: int,
+                          cap_factor: float = 3.0):
+    """Dam-break initial state scattered over uniform slabs, with an ``id``
+    prop for serial comparison. Returns (ps_sharded, bounds, ps_serial)."""
+    ps0 = sph.init_dam_break(cfg, capacity_factor=1.05)
+    n = int(ps0.count())
+    cap_per_dev = int(np.ceil(n / ndev * cap_factor))
+    bounds = dlb.uniform_bounds(ndev, 0.0, float(cfg.box[0]))
+    ps = slab_scatter(ps0, bounds, ndev, cap_per_dev)
+    return shard_over(ps, mesh), bounds, ps0
+
+
+# --------------------------------------------------------------------------
+# Gray-Scott workload (paper §4.3)
+# --------------------------------------------------------------------------
+
+def gs_config(lead: int = 64):
+    from repro.apps import gray_scott as GS
+    return GS.GSConfig(shape=(lead, 16, 16))

@@ -12,6 +12,8 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_roofline — production-mesh roofline per dry-run cell
   backend_compare — unified cell-pair engine: jnp vs pallas(interpret)
                     timing + relative divergence for MD / SPH / DEM
+  bench_distributed — MD weak scaling on 1/2/4/8 forced host devices
+                    (workloads shared with tests/distributed)
 """
 import sys
 import pathlib
@@ -22,13 +24,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 def main() -> None:
     from benchmarks import (backend_compare, bench_cmaes, bench_dem,
-                            bench_interp, bench_md, bench_membw,
-                            bench_roofline, bench_sph, bench_stencil,
-                            bench_vortex)
+                            bench_distributed, bench_interp, bench_md,
+                            bench_membw, bench_roofline, bench_sph,
+                            bench_stencil, bench_vortex)
     print("name,us_per_call,derived")
     for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
                 bench_vortex, bench_interp, bench_dem, bench_cmaes,
-                backend_compare, bench_roofline):
+                backend_compare, bench_distributed, bench_roofline):
         for line in mod.run():
             print(line, flush=True)
 

@@ -1,0 +1,31 @@
+"""Forced-host-device-count env plumbing for the multi-device harness.
+
+jax-free on purpose: the forcing flag must land in XLA_FLAGS *before* jax
+initializes its backend, so the three consumers (tests/distributed/conftest,
+tests/_dist_launcher, benchmarks/bench_distributed's child) import this
+module ahead of any jax import. One definition — the device count and the
+append-if-absent logic cannot drift between them.
+"""
+from __future__ import annotations
+
+import re
+
+FORCED_DEVICE_COUNT = 8
+FORCE_FLAG = f"--xla_force_host_platform_device_count={FORCED_DEVICE_COUNT}"
+
+_FORCE_PAT = re.compile(r"--xla_force_host_platform_device_count=\d+")
+
+
+def ensure_forced_host_devices(env) -> None:
+    """Force exactly ``FORCED_DEVICE_COUNT`` host devices in
+    ``env['XLA_FLAGS']`` (any mutable mapping, e.g. ``os.environ`` or a
+    subprocess env dict). A pre-existing force with a different count is
+    REPLACED, not kept — the multi-device suite is built for exactly 8
+    devices (submeshes carve out fewer), and inheriting e.g. a stray
+    2-device force from the caller's environment would make the whole child
+    suite skip."""
+    flags = env.get("XLA_FLAGS", "")
+    if _FORCE_PAT.search(flags):
+        env["XLA_FLAGS"] = _FORCE_PAT.sub(FORCE_FLAG, flags)
+    else:
+        env["XLA_FLAGS"] = (flags + " " + FORCE_FLAG).strip()

@@ -114,10 +114,16 @@ def run(cfg: GSConfig, n_steps: int, seed: int = 0):
     return u, v
 
 
-def run_distributed(cfg: GSConfig, n_steps: int, mesh, axis_name="shards",
-                    seed: int = 0):
-    """Slab-distributed run: leading axis sharded, halo width 1."""
+def run_distributed(cfg: GSConfig, n_steps: int, mesh=None,
+                    axis_name="shards", seed: int = 0):
+    """Slab-distributed run: leading axis sharded, halo width 1.
+
+    ``mesh=None`` builds a 1-D mesh over all visible devices via the
+    version-portable runtime shim (core/runtime.py)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import runtime as RT
+    if mesh is None:
+        mesh = RT.make_mesh((RT.device_count(),), (axis_name,))
     step = G.make_stencil_step(mesh, axis_name, gs_step_padded(cfg), halo=1,
                                periodic=True, n_fields=2)
     u, v = init_fields(cfg, seed)

@@ -37,6 +37,7 @@ from repro.core import dlb
 from repro.core import interactions as I
 from repro.core import mappings as M
 from repro.core import particles as PS
+from repro.core import runtime as RT
 from repro.numerics import integrators as TI
 
 
@@ -88,11 +89,11 @@ def make_distributed_step(mesh: Mesh, cfg: MDConfig, example: PS.ParticleSet,
         # 5. second kick
         ps = TI.velocity_verlet_kick2(ps, cfg.dt)
         overflow = jnp.maximum(jnp.maximum(ovf_map, ovf_g),
-                               jax.lax.pmax(cl.overflow, axis_name))
+                               RT.pmax(cl.overflow, axis_name))
         return ps, overflow
 
-    stepped = jax.shard_map(local_step, mesh=mesh, in_specs=(spec, P()),
-                            out_specs=(spec, P()), check_vma=False)
+    stepped = RT.shard_map(local_step, mesh, in_specs=(spec, P()),
+                           out_specs=(spec, P()), check_vma=False)
     return jax.jit(stepped)
 
 

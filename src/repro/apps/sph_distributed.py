@@ -23,6 +23,7 @@ from repro.core import dlb
 from repro.core import interactions as I
 from repro.core import mappings as M
 from repro.core import particles as PS
+from repro.core import runtime as RT
 
 
 def _padded_cl_kw(cfg: sph.SPHConfig):
@@ -66,7 +67,7 @@ def make_distributed_step(mesh: Mesh, cfg: sph.SPHConfig,
         # global dynamic dt (pmax over shards)
         amax = jnp.max(jnp.where(ps.valid,
                                  jnp.linalg.norm(a, axis=-1), 0.0))
-        amax = jax.lax.pmax(amax, axis_name)
+        amax = RT.pmax(amax, axis_name)
         dt = cfg.cfl * jnp.minimum(jnp.sqrt(cfg.h / jnp.maximum(amax, 1e-6)),
                                    cfg.h / cfg.c_sound)
         # integrate (same scheme as the serial app)
@@ -89,13 +90,13 @@ def make_distributed_step(mesh: Mesh, cfg: sph.SPHConfig,
         # migrate
         ps, ovf_m = M.map_particles_local(ps, bounds, axis_name, bucket_cap)
         overflow = jnp.maximum(jnp.maximum(ovf_g, ovf_m),
-                               jax.lax.pmax(cl.overflow, axis_name))
+                               RT.pmax(cl.overflow, axis_name))
         # per-shard load (for SAR / imbalance telemetry)
-        load = jax.lax.all_gather(jnp.sum(ps.valid), axis_name)
+        load = RT.all_gather(jnp.sum(ps.valid), axis_name)
         return ps, dt, overflow, load
 
-    stepped = jax.shard_map(
-        local_step, mesh=mesh, in_specs=(spec, P(), P()),
+    stepped = RT.shard_map(
+        local_step, mesh, in_specs=(spec, P(), P()),
         out_specs=(spec, P(), P(), P()), check_vma=False)
     return jax.jit(stepped)
 
@@ -110,15 +111,15 @@ def make_rebalance(mesh: Mesh, cfg: sph.SPHConfig, example: PS.ParticleSet,
         hist = dlb.histogram_cost(ps.x[:, 0],
                                   jnp.where(ps.valid, 1.0, 0.0),
                                   0.0, float(cfg.box[0]), 256)
-        hist = jax.lax.psum(hist, axis_name)
+        hist = RT.psum(hist, axis_name)
         new_bounds = dlb.bounds_from_histogram(hist, ndev, 0.0,
                                                float(cfg.box[0]))
         ps, ovf = M.map_particles_local(ps, new_bounds, axis_name,
                                         bucket_cap)
         return ps, new_bounds, ovf
 
-    fn = jax.shard_map(local, mesh=mesh, in_specs=(spec, P()),
-                       out_specs=(spec, P(), P()), check_vma=False)
+    fn = RT.shard_map(local, mesh, in_specs=(spec, P()),
+                      out_specs=(spec, P(), P()), check_vma=False)
     return jax.jit(fn)
 
 

@@ -26,6 +26,8 @@ import numpy as np
 
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import runtime as RT
+
 
 def halo_pad(field: jax.Array, halo: int, axis_name: str, *,
              periodic: bool = True, fill: float = 0.0) -> jax.Array:
@@ -34,14 +36,13 @@ def halo_pad(field: jax.Array, halo: int, axis_name: str, *,
     (Dirichlet) padding; use ``edge`` semantics by passing fill=None."""
     if halo == 0:
         return field
-    ndev = jax.lax.axis_size(axis_name)
-    me = jax.lax.axis_index(axis_name)
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
     lo_face = field[:halo]          # my lowest rows -> left neighbor's high halo
     hi_face = field[-halo:]         # my highest rows -> right neighbor's low halo
-    right = [(i, (i + 1) % ndev) for i in range(ndev)]
-    left = [(i, (i - 1) % ndev) for i in range(ndev)]
-    from_left = jax.lax.ppermute(hi_face, axis_name, right)
-    from_right = jax.lax.ppermute(lo_face, axis_name, left)
+    right, left = RT.shift_perms(ndev)
+    from_left = RT.ppermute(hi_face, axis_name, right)
+    from_right = RT.ppermute(lo_face, axis_name, left)
     if not periodic:
         if fill is None:  # edge replication
             pad_lo = field[:1].repeat(halo, axis=0)
@@ -106,8 +107,8 @@ def make_stencil_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
             trimmed.append(o)
         return tuple(trimmed)
 
-    mapped = jax.shard_map(
-        local_step, mesh=mesh,
+    mapped = RT.shard_map(
+        local_step, mesh,
         in_specs=tuple(spec for _ in range(n_fields)),
         out_specs=tuple(spec for _ in range(n_fields)),
         check_vma=False)

@@ -25,9 +25,11 @@ without recompilation. The full sub-sub-domain/graph machinery
 (core/decomposition.py) provides the host-side cost model that chooses the
 bounds; within a device the cell structures handle locality.
 
-All functions here are written to run **inside** ``jax.shard_map`` over a
-1-D mesh axis; ``make_*`` wrappers construct the shard_mapped jitted
-callables over globally sharded ParticleSets.
+All functions here are written to run **inside** ``runtime.shard_map``
+(the version-portable shim, core/runtime.py) over a 1-D mesh axis; the
+``make_*`` wrappers construct the shard_mapped jitted callables over
+globally sharded ParticleSets. Collectives are taken from ``runtime``
+(DESIGN.md §2a), never from ``jax.lax`` directly.
 """
 from __future__ import annotations
 
@@ -41,6 +43,7 @@ import numpy as np
 
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import runtime as RT
 from .particles import ParticleSet
 
 # --------------------------------------------------------------------------
@@ -95,8 +98,8 @@ def map_particles_local(ps: ParticleSet, bounds: jax.Array, axis_name: str,
     overflow = max(bucket overflow, slot overflow): nonzero means capacities
     must be re-provisioned (control-plane responsibility; state remains
     consistent for retained particles)."""
-    ndev = jax.lax.axis_size(axis_name)
-    me = jax.lax.axis_index(axis_name)
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
     dest = owner_of(ps.x[:, slab_axis], bounds)
     dest = jnp.where(ps.valid, dest, ndev)
     stay = ps.valid & (dest == me)
@@ -106,8 +109,8 @@ def map_particles_local(ps: ParticleSet, bounds: jax.Array, axis_name: str,
     buckets, slot_valid, ovf = bucket_pack(leaving_dest, payload, ndev, bucket_cap)
 
     def a2a(a):
-        return jax.lax.all_to_all(a, axis_name, split_axis=0, concat_axis=0,
-                                  tiled=False)
+        return RT.all_to_all(a, axis_name, split_axis=0, concat_axis=0,
+                             tiled=False)
 
     recv = jax.tree.map(a2a, buckets)
     recv_valid = a2a(slot_valid)
@@ -120,7 +123,7 @@ def map_particles_local(ps: ParticleSet, bounds: jax.Array, axis_name: str,
     kept = ps.where(stay)
     merged, add_ovf = kept.add_count(incoming)
     # overflow must be reduced across devices so every shard agrees
-    total_ovf = jax.lax.pmax(jnp.maximum(ovf, add_ovf), axis_name)
+    total_ovf = RT.pmax(jnp.maximum(ovf, add_ovf), axis_name)
     return merged, total_ovf
 
 
@@ -189,8 +192,8 @@ def ghost_get_local(ps: ParticleSet, bounds: jax.Array, r_ghost: float,
     ``prop_names`` mirrors OpenFPM's property-subset ghost_get
     (``ghost_get<prop...>()``): only the listed properties are
     communicated (all, if None)."""
-    ndev = jax.lax.axis_size(axis_name)
-    me = jax.lax.axis_index(axis_name)
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
     my_lo = bounds[me]
     my_hi = bounds[me + 1]
     xs = ps.x[:, slab_axis]
@@ -204,11 +207,10 @@ def ghost_get_local(ps: ParticleSet, bounds: jax.Array, r_ghost: float,
     lo_x, lo_p, lo_v, lo_s, ovf_lo = _pack_side(ps_send, near_lo, ghost_cap)
     hi_x, hi_p, hi_v, hi_s, ovf_hi = _pack_side(ps_send, near_hi, ghost_cap)
 
-    right = [(i, (i + 1) % ndev) for i in range(ndev)]
-    left = [(i, (i - 1) % ndev) for i in range(ndev)]
+    right, left = RT.shift_perms(ndev)
 
     def send(perm, tree):
-        return jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), tree)
+        return jax.tree.map(lambda a: RT.ppermute(a, axis_name, perm), tree)
 
     # what I receive from my LEFT neighbor is what it sent rightwards
     from_left = send(right, dict(x=hi_x, p=hi_p, v=hi_v, s=hi_s))
@@ -236,7 +238,7 @@ def ghost_get_local(ps: ParticleSet, bounds: jax.Array, r_ghost: float,
         valid=jnp.stack([from_left["v"], from_right["v"]]),
         src_slot=jnp.stack([from_left["s"], from_right["s"]]),
     )
-    overflow = jax.lax.pmax(jnp.maximum(ovf_lo, ovf_hi), axis_name)
+    overflow = RT.pmax(jnp.maximum(ovf_lo, ovf_hi), axis_name)
     return ghosts, overflow
 
 
@@ -261,20 +263,19 @@ def ghost_put_local(contrib, ghosts: GhostLayer, ps: ParticleSet,
     (The paper's third merge mode — 'merge into a list' — is returned to the
     caller as the raw returned buffers: fixed-capacity list semantics.)
     """
-    ndev = jax.lax.axis_size(axis_name)
-    right = [(i, (i + 1) % ndev) for i in range(ndev)]
-    left = [(i, (i - 1) % ndev) for i in range(ndev)]
+    ndev = RT.axis_size(axis_name)
+    right, left = RT.shift_perms(ndev)
 
     # row 0 of the ghost layer came FROM the left ⇒ contributions go back left.
     def back(perm, tree):
-        return jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, perm), tree)
+        return jax.tree.map(lambda a: RT.ppermute(a, axis_name, perm), tree)
 
     to_left = back(left, jax.tree.map(lambda a: a[0], contrib))
     to_right = back(right, jax.tree.map(lambda a: a[1], contrib))
-    slot_l = jax.lax.ppermute(ghosts.src_slot[0], axis_name, left)
-    slot_r = jax.lax.ppermute(ghosts.src_slot[1], axis_name, right)
-    val_l = jax.lax.ppermute(ghosts.valid[0], axis_name, left)
-    val_r = jax.lax.ppermute(ghosts.valid[1], axis_name, right)
+    slot_l = RT.ppermute(ghosts.src_slot[0], axis_name, left)
+    slot_r = RT.ppermute(ghosts.src_slot[1], axis_name, right)
+    val_l = RT.ppermute(ghosts.valid[0], axis_name, left)
+    val_r = RT.ppermute(ghosts.valid[1], axis_name, right)
 
     cap = ps.capacity
 
@@ -335,8 +336,8 @@ def make_map_fn(mesh: Mesh, example: ParticleSet, axis_name: str,
     def fn(ps: ParticleSet, bounds: jax.Array):
         return map_particles_local(ps, bounds, axis_name, bucket_cap, slab_axis)
 
-    mapped = jax.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                           out_specs=(spec, P()), check_vma=False)
+    mapped = RT.shard_map(fn, mesh, in_specs=(spec, P()),
+                          out_specs=(spec, P()), check_vma=False)
     return jax.jit(mapped)
 
 
@@ -360,6 +361,6 @@ def make_ghost_get_fn(mesh: Mesh, example: ParticleSet, axis_name: str,
     ghost_example = GhostLayer(x=example.x, props=send_props,
                                valid=example.valid, src_slot=example.valid)
     gspec = jax.tree.map(lambda _: P(axis_name), ghost_example)
-    mapped = jax.shard_map(fn, mesh=mesh, in_specs=(spec, P()),
-                           out_specs=(gspec, P()), check_vma=False)
+    mapped = RT.shard_map(fn, mesh, in_specs=(spec, P()),
+                          out_specs=(gspec, P()), check_vma=False)
     return jax.jit(mapped)

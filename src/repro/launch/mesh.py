@@ -5,11 +5,15 @@ Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips
 
 Functions, not module constants: importing this module never touches jax
 device state (device count is locked at first backend init — the dry-run
-sets XLA_FLAGS before importing anything).
+sets XLA_FLAGS before importing anything). Meshes are built through the
+version-portable runtime shim (core/runtime.py), so the same code runs on
+every supported jax version.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.core import runtime as RT
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -24,19 +28,16 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)} — the "
             f"dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
             f"count=512 before any jax import")
-    import numpy as np
-    dev_array = np.asarray(devices[:n]).reshape(shape)
-    from jax.sharding import Mesh
-    return Mesh(dev_array, axes)
+    return RT.make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_local_mesh(shape=None, axes=("data", "model")):
     """Mesh over whatever devices exist (tests, examples)."""
-    import numpy as np
     devices = jax.devices()
     if shape is None:
         shape = (1, len(devices))
         axes = ("data", "model")
-    n = int(np.prod(shape))
-    from jax.sharding import Mesh
-    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return RT.make_mesh(shape, axes, devices=devices[:n])

@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import runtime as RT
+
 
 def ssm_sizes(cfg):
     d_inner = cfg.d_inner
@@ -203,10 +205,10 @@ def mamba_prefill_seq_sharded(params, x, *, cfg, axis_name: str, cons=None):
     the incoming prefix state with a cheap correction pass.
     """
     B, S, D = x.shape
-    ndev = jax.lax.axis_size(axis_name)
-    me = jax.lax.axis_index(axis_name)
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
     ct = x.dtype
-    nxt = [(i, (i + 1) % ndev) for i in range(ndev)]
+    nxt, _ = RT.shift_perms(ndev)
 
     # Conv ghost layer: the depthwise causal conv (K taps) needs the last
     # K-1 pre-activation projections of the left neighbor — a literal
@@ -214,7 +216,7 @@ def mamba_prefill_seq_sharded(params, x, *, cfg, axis_name: str, cons=None):
     Kc = cfg.ssm_conv
     tail = lambda w: (x @ params[w].astype(ct))[:, -(Kc - 1):]
     ghost = {"x": tail("w_x"), "B": tail("w_B"), "C": tail("w_C")}
-    ghost = jax.tree.map(lambda a: jax.lax.ppermute(a, axis_name, nxt), ghost)
+    ghost = jax.tree.map(lambda a: RT.ppermute(a, axis_name, nxt), ghost)
     ghost = jax.tree.map(lambda a: jnp.where(me == 0, 0.0, a), ghost)
 
     # Pass 1: local scan from zero state; record per-shard decay and state.
@@ -239,8 +241,8 @@ def mamba_prefill_seq_sharded(params, x, *, cfg, axis_name: str, cons=None):
     prefix_h = jnp.zeros_like(h_local)
     prefix_la = jnp.zeros_like(total_la)
     for k in range(1, ndev):
-        shifted_h = jax.lax.ppermute(shifted_h, axis_name, nxt)
-        shifted_la = jax.lax.ppermute(shifted_la, axis_name, nxt)
+        shifted_h = RT.ppermute(shifted_h, axis_name, nxt)
+        shifted_la = RT.ppermute(shifted_la, axis_name, nxt)
         use = (me >= k)
         inc_h = jnp.where(use, shifted_h, 0.0)
         inc_la = jnp.where(use, shifted_la, 0.0)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import runtime as RT
+
 
 def router_probs(x2d, w_router, *, top_k: int, n_real: Optional[int] = None):
     """x2d: (T, D) -> (gates (T,k), experts (T,k), probs (T,E)).
@@ -103,8 +105,8 @@ def moe_map_local(x2d, w, *, cfg, axis_name: str, cons=None):
     ≡ rank mod tp), so collectively every (token, k) pair is dispatched
     exactly once.
     """
-    tp = jax.lax.axis_size(axis_name)
-    me = jax.lax.axis_index(axis_name)
+    tp = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
     T, D = x2d.shape
     E = cfg.n_experts_eff
     E_local = E // tp
@@ -149,8 +151,8 @@ def moe_map_local(x2d, w, *, cfg, axis_name: str, cons=None):
     shaped = jax.tree.map(
         lambda a: a.reshape((tp, E_local * cap_se) + a.shape[2:]), packed)
     recv = jax.tree.map(
-        lambda a: jax.lax.all_to_all(a, axis_name, split_axis=0,
-                                     concat_axis=0, tiled=False), shaped)
+        lambda a: RT.all_to_all(a, axis_name, split_axis=0,
+                                concat_axis=0, tiled=False), shaped)
     # recv["x"]: (tp, E_local*cap_se, D); regroup (free reshape/transpose)
     # to (E_local, tp*cap_se, D) expert tiles
     def regroup(a):
@@ -170,12 +172,12 @@ def moe_map_local(x2d, w, *, cfg, axis_name: str, cons=None):
         a = a.reshape((E_local, tp, cap_se) + a.shape[2:])
         a = jnp.swapaxes(a, 0, 1)
         return a.reshape((tp, E_local * cap_se) + a.shape[3:])
-    home = jax.lax.all_to_all(ungroup(h), axis_name, split_axis=0,
-                              concat_axis=0, tiled=False)
-    home_tok = jax.lax.all_to_all(ungroup(rtok), axis_name, split_axis=0,
-                                  concat_axis=0, tiled=False)
-    home_val = jax.lax.all_to_all(ungroup(rgate != 0), axis_name,
-                                  split_axis=0, concat_axis=0, tiled=False)
+    home = RT.all_to_all(ungroup(h), axis_name, split_axis=0,
+                         concat_axis=0, tiled=False)
+    home_tok = RT.all_to_all(ungroup(rtok), axis_name, split_axis=0,
+                             concat_axis=0, tiled=False)
+    home_val = RT.all_to_all(ungroup(rgate != 0), axis_name,
+                             split_axis=0, concat_axis=0, tiled=False)
 
     # ghost_put(sum): scatter-add contributions into token rows, then psum
     # across the model axis (each rank dispatched a disjoint stripe).
@@ -183,8 +185,8 @@ def moe_map_local(x2d, w, *, cfg, axis_name: str, cons=None):
         jnp.where(home_val, home_tok, T).reshape(-1)].add(
             jnp.where(home_val.reshape(-1)[:, None], home.reshape(-1, D), 0)
     )[:T]
-    out = jax.lax.psum(out, axis_name)
-    n_dropped = jax.lax.psum(dropped, axis_name)
+    out = RT.psum(out, axis_name)
+    n_dropped = RT.psum(dropped, axis_name)
     return out, aux, n_dropped
 
 

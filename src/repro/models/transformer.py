@@ -328,13 +328,15 @@ def _apply_moe(p_moe, x, cfg, ctx):
             "wo": spec_for(("experts", "expert_mlp", "embed"), rules, mesh),
         }
 
+        from repro.core import runtime as RT
+
         def inner(x2d_l, w_l):
             out, aux, dropped = MOE.moe_map_local(
                 x2d_l, w_l, cfg=cfg, axis_name="model", cons=None)
-            return out, jax.lax.pmean(aux, "model"), dropped
+            return out, RT.pmean(aux, "model"), dropped
 
-        out, aux, dropped = jax.shard_map(
-            inner, mesh=mesh,
+        out, aux, dropped = RT.shard_map(
+            inner, mesh,
             in_specs=(tok_spec, w_specs),
             out_specs=(tok_spec, P(), P()),
             check_vma=False)(x2d, {k: p_moe[k] for k in w_specs})

@@ -1,0 +1,42 @@
+"""One subprocess entry point for the opt-in multi-device suite.
+
+The distributed tests are real pytest files under tests/distributed/ (not
+inline -c scripts); they need 8 forced host devices, which must be set
+before jax's backend initializes — impossible in the already-initialized
+tier-1 process. This launcher shells out to ``python -m pytest`` with the
+environment prepared and asserts the child suite passed (and actually ran
+something — an all-skip child is a failure, not a pass).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from benchmarks.xla_env import ensure_forced_host_devices
+
+
+def run_distributed_pytest(*targets: str, timeout: int = 900,
+                           min_passed: int = 1) -> None:
+    env = dict(os.environ)
+    env["REPRO_DISTRIBUTED"] = "1"
+    ensure_forced_host_devices(env)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+           *targets]
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=ROOT,
+                       timeout=timeout, env=env)
+    tail = r.stdout[-4000:] + "\n" + r.stderr[-3000:]
+    assert r.returncode == 0, f"distributed suite failed:\n{tail}"
+    m = re.search(r"(\d+) passed", r.stdout)
+    n_passed = int(m.group(1)) if m else 0
+    assert n_passed >= min_passed, \
+        f"expected >={min_passed} passing distributed tests, " \
+        f"got {n_passed}:\n{tail}"

@@ -1,0 +1,50 @@
+"""Opt-in in-process multi-device suite.
+
+This conftest runs at collection time, BEFORE any test module imports jax
+arrays — when the suite is opted in (``REPRO_DISTRIBUTED=1``) it forces
+``--xla_force_host_platform_device_count=8`` into XLA_FLAGS so the whole
+child process sees 8 host devices (XLA reads the flag at first backend
+init, which happens after conftest import). Tests that want fewer devices
+build submeshes over a prefix of the 8
+(``benchmarks.dist_common.make_submesh``).
+
+Without ``REPRO_DISTRIBUTED=1`` nothing happens: collection is skipped and
+XLA_FLAGS is left untouched, so a plain ``pytest`` run keeps its normal
+device count. The tier-1 entry points are the launchers in
+tests/test_mappings.py / tests/test_models.py (see tests/_dist_launcher.py),
+and ``tools/smoke.sh`` runs the suite explicitly.
+"""
+import os
+import sys
+
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+if os.environ.get("REPRO_DISTRIBUTED") == "1":
+    from benchmarks.xla_env import ensure_forced_host_devices
+    ensure_forced_host_devices(os.environ)
+else:
+    collect_ignore_glob = ["test_*.py"]
+
+import pytest
+
+
+def pytest_collection_modifyitems(items):
+    marker = pytest.mark.distributed
+    here = os.path.dirname(__file__)
+    for item in items:
+        if str(getattr(item, "fspath", "")).startswith(here):
+            item.add_marker(marker)
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _require_8_devices():
+    """Fail fast with a clear message if the backend initialized before the
+    flag landed (e.g. someone imported jax arrays in a parent conftest)."""
+    import jax
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 forced host devices — launch via the "
+                    "tests/test_mappings.py entry point or set "
+                    "REPRO_DISTRIBUTED=1 before jax initializes")

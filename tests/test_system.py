@@ -81,6 +81,34 @@ def test_dem_avalanche_flows():
     assert (x[:, 2] > -0.05).all(), "floor penetration"
 
 
+def test_runtime_compatibility_policy():
+    """DESIGN.md §2a: version-dependent jax distributed API names
+    (``jax.shard_map``, ``AxisType``) may be spelled only inside the
+    version-portable shim, core/runtime.py — everything else must go
+    through it so the whole repo stays runnable on MIN_JAX_VERSION."""
+    import os
+    import re
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    shim = os.path.join("core", "runtime.py")
+    offenders = []
+    pat = re.compile(r"jax\.shard_map|AxisType")
+    for dirpath, _, files in os.walk(src):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            if os.path.normpath(path).endswith(
+                    os.path.join("repro", shim)):
+                continue
+            with open(path) as fh:
+                for lineno, line in enumerate(fh, 1):
+                    if pat.search(line):
+                        offenders.append(f"{path}:{lineno}: {line.strip()}")
+    assert not offenders, \
+        "version-gated jax API outside core/runtime.py:\n" + \
+        "\n".join(offenders)
+
+
 def test_ps_cmaes_beats_independent():
     """§4.6: swarm coupling outperforms independent CMA-ES instances on a
     multimodal function (success-performance criterion, fixed eval budget —

@@ -6,8 +6,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1 pytest =="
-python -m pytest -x -q "$@"
+echo "== tier-1 pytest (single-device; distributed suite runs below) =="
+python -m pytest -x -q -m "not distributed" "$@"
+
+echo "== distributed suite (8 forced host devices, in-process harness) =="
+REPRO_DISTRIBUTED=1 python -m pytest -x -q -p no:cacheprovider \
+    tests/distributed
 
 echo "== examples/vortex_ring.py (1 step) =="
 python examples/vortex_ring.py --steps 1

@@ -57,8 +57,8 @@ def sph_case():
 
 @functools.lru_cache(maxsize=1)
 def dem_settled():
-    """(cfg, ps, cs): grains with random velocities settled for 20 steps so
-    real overlapping contacts exist, contact list freshly rebuilt.
+    """(cfg, ps): grains with random velocities settled for 20 engine steps
+    so real overlapping contacts (and loaded tangential springs) exist.
     Deterministic and reused by several tests and the gate — cached per
     process (the settle loop is the expensive part)."""
     import jax, jax.numpy as jnp
@@ -68,21 +68,20 @@ def dem_settled():
     key = jax.random.PRNGKey(1)
     v = 0.3 * jax.random.normal(key, ps.props["v"].shape)
     ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
-    cs = dem.build_contacts(ps, cfg)
     for _ in range(20):
-        ps, cs, rb, _ = dem.dem_step(ps, cs, cfg)
-        if bool(rb):
-            cs = dem.build_contacts(ps, cfg, old=cs)
-    return cfg, ps, dem.build_contacts(ps, cfg, old=cs)
+        ps, flags = dem.dem_step(ps, cfg)
+        assert int(flags.any()) == 0
+    return cfg, ps
 
 
 def dem_case():
-    """(cfg, fn): settled avalanche state; fn(cfg) -> per-grain forces."""
+    """(cfg, fn): settled avalanche state; fn(cfg) -> per-grain forces
+    after one full engine step (normal pass on cfg.backend, tangential
+    history pass on the contact list)."""
     import jax
     from repro.apps import dem
-    cfg, ps, cs = dem_settled()
-    fn = jax.jit(lambda c: dem.dem_step(ps, cs, c)[0].props["f"],
-                 static_argnums=0)
+    cfg, ps = dem_settled()
+    fn = lambda c: dem.dem_step(ps, c)[0].props["f"]
     return cfg, fn
 
 

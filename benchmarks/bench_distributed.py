@@ -41,22 +41,23 @@ def _child_main():
     import jax
     import numpy as np
     from benchmarks import dist_common as DC
-    from repro.apps import md_distributed as MDD
+    from repro.apps import md
+    from repro.core import simulation as SIM
 
     for ndev, nps in sorted(SCALE.items()):
         cfg = DC.md_config(n_per_side=nps, sigma=SIGMA)
         mesh = DC.make_submesh(ndev)
         cap_per_dev = int(np.ceil(cfg.n_particles / ndev * 3))
-        ps, bounds = DC.md_distributed_start(mesh, cfg, ndev,
-                                             cap_per_dev=cap_per_dev)
-        step = MDD.make_distributed_step(mesh, cfg, ps)
-        ps, ovf = step(ps, bounds)            # compile + warmup
-        jax.block_until_ready(ps.x)
-        assert int(ovf) == 0, f"overflow at ndev={ndev}"
+        state = DC.md_distributed_start(mesh, cfg, ndev,
+                                        cap_per_dev=cap_per_dev)
+        step = SIM.make_sim_step(md.physics, cfg, mesh, axis_name=DC.AXIS)
+        state, flags, _ = step(state, {})     # compile + warmup
+        jax.block_until_ready(state.ps.x)
+        assert int(flags.any()) == 0, f"overflow at ndev={ndev}"
         t0 = time.perf_counter()
         for _ in range(N_TIME):
-            ps, ovf = step(ps, bounds)
-        jax.block_until_ready(ps.x)
+            state, flags, _ = step(state, {})
+        jax.block_until_ready(state.ps.x)
         us = (time.perf_counter() - t0) / N_TIME * 1e6
         per_kp = us / cfg.n_particles * 1e3
         print(f"dist_md_weak_nd{ndev},{us:.1f},"

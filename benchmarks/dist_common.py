@@ -1,10 +1,16 @@
 """Shared distributed workload fixtures.
 
-One definition of the MD / SPH / Gray-Scott distributed workloads, used by
-both the serial-vs-distributed equivalence tests
+One definition of the MD / SPH / DEM / Gray-Scott distributed workloads,
+used by both the serial-vs-distributed equivalence tests
 (tests/distributed/test_dist_equivalence.py) and the weak-scaling benchmark
 (benchmarks/bench_distributed.py) — the benchmark measures exactly the
 configurations the tests prove correct.
+
+All particle workloads go through the unified simulation layer
+(core/simulation.py): the *same* physics spec builds the serial and the
+sharded step, so these fixtures only pick configurations and initial
+states. Configs are chosen to honor the ghost contract the engine now
+checks in-graph (r_cut <= min slab width on 8 slabs).
 
 Everything here goes through the version-portable runtime shim
 (core/runtime.py); nothing assumes a jax version.
@@ -16,10 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.apps import md, sph
-from repro.core import dlb
+from repro.apps import dem, md, sph
 from repro.core import particles as PS
 from repro.core import runtime as RT
+from repro.core import simulation as SIM
 
 AXIS = "shards"
 
@@ -33,38 +39,6 @@ def make_submesh(ndev: int):
 def shard_over(ps: PS.ParticleSet, mesh) -> PS.ParticleSet:
     sh = NamedSharding(mesh, P(AXIS))
     return jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
-
-
-def slab_scatter(ps0: PS.ParticleSet, bounds, ndev: int, cap_per_dev: int,
-                 slab_axis: int = 0) -> PS.ParticleSet:
-    """Host-side 'global map': place every valid particle of ``ps0`` into its
-    owning device's slot block (device d owns slots [d·cap, (d+1)·cap)).
-
-    Adds an int32 ``id`` prop — the particle's dense index among ``ps0``'s
-    valid rows — the provenance key that serial-vs-distributed comparisons
-    match on."""
-    val0 = np.asarray(ps0.valid)
-    xs = np.asarray(ps0.x)[val0]
-    props = {k: np.asarray(v)[val0] for k, v in ps0.props.items()}
-    props["id"] = np.arange(len(xs), dtype=np.int32)
-    owner = np.clip(
-        np.searchsorted(np.asarray(bounds), xs[:, slab_axis], "right") - 1,
-        0, ndev - 1)
-    cap = ndev * cap_per_dev
-    X = np.full((cap, xs.shape[1]), PS.ParticleSet.FILL, np.float32)
-    PR = {k: np.zeros((cap,) + v.shape[1:], v.dtype) for k, v in props.items()}
-    V = np.zeros(cap, bool)
-    for d in range(ndev):
-        rows = np.nonzero(owner == d)[0]
-        assert len(rows) <= cap_per_dev, "raise cap_per_dev"
-        b = d * cap_per_dev
-        X[b:b + len(rows)] = xs[rows]
-        for k in PR:
-            PR[k][b:b + len(rows)] = props[k][rows]
-        V[b:b + len(rows)] = True
-    return PS.ParticleSet(x=jnp.asarray(X),
-                          props={k: jnp.asarray(v) for k, v in PR.items()},
-                          valid=jnp.asarray(V))
 
 
 # --------------------------------------------------------------------------
@@ -89,17 +63,10 @@ def md_serial_start(cfg: md.MDConfig, seed: int = 0):
 def md_distributed_start(mesh, cfg: md.MDConfig, ndev: int,
                          cap_per_dev: int = 160, seed: int = 0):
     """Distributed start with the SAME initial condition as
-    :func:`md_serial_start` (velocities injected by particle id)."""
-    from repro.apps import md_distributed as MDD
-    ps, bounds = MDD.init_distributed(mesh, cfg, ndev,
-                                      cap_per_dev=cap_per_dev, thermal_v=0.0)
-    _, v0 = md_serial_start(cfg, seed)
-    ids = np.asarray(ps.props["id"])
-    val = np.asarray(ps.valid)
-    v_all = np.zeros_like(np.asarray(ps.props["v"]))
-    v_all[val] = np.asarray(v0)[ids[val]]
-    ps = ps.with_prop("v", jnp.asarray(v_all))
-    return shard_over(ps, mesh), bounds
+    :func:`md_serial_start`, scattered through the simulation layer."""
+    ps0, _ = md_serial_start(cfg, seed)
+    return SIM.distribute(ps0, md.physics, cfg, mesh, axis_name=AXIS,
+                          cap_per_dev=cap_per_dev)
 
 
 # --------------------------------------------------------------------------
@@ -107,19 +74,47 @@ def md_distributed_start(mesh, cfg: md.MDConfig, ndev: int,
 # --------------------------------------------------------------------------
 
 def sph_config() -> sph.SPHConfig:
-    return sph.SPHConfig(dp=0.05, box=(1.0, 0.5), fluid=(0.25, 0.25))
+    # box[0]/8 = 0.15 >= r_cut = 0.1414: the ghost contract holds on 8
+    # slabs (the engine's in-graph check rejects the tighter 1.0-box).
+    return sph.SPHConfig(dp=0.05, box=(1.2, 0.6), fluid=(0.25, 0.25))
 
 
 def sph_distributed_start(mesh, cfg: sph.SPHConfig, ndev: int,
                           cap_factor: float = 3.0):
-    """Dam-break initial state scattered over uniform slabs, with an ``id``
-    prop for serial comparison. Returns (ps_sharded, bounds, ps_serial)."""
+    """Dam-break initial state scattered over uniform slabs. Returns
+    (state, ps_serial)."""
     ps0 = sph.init_dam_break(cfg, capacity_factor=1.05)
-    n = int(ps0.count())
-    cap_per_dev = int(np.ceil(n / ndev * cap_factor))
-    bounds = dlb.uniform_bounds(ndev, 0.0, float(cfg.box[0]))
-    ps = slab_scatter(ps0, bounds, ndev, cap_per_dev)
-    return shard_over(ps, mesh), bounds, ps0
+    state = SIM.distribute(ps0, sph.physics, cfg, mesh, axis_name=AXIS,
+                           cap_factor=cap_factor)
+    return state, ps0
+
+
+# --------------------------------------------------------------------------
+# DEM workload (paper §4.5 avalanche) — distributed for free via the spec
+# --------------------------------------------------------------------------
+
+def dem_config() -> dem.DEMConfig:
+    # box[0]/8 = 0.3 >= r_cut = 0.14; grains span all 8 slabs.
+    return dem.DEMConfig(box=(2.4, 0.6, 1.0), fill=(2.0, 0.66, 0.5))
+
+
+def dem_settled_start(cfg: dem.DEMConfig, n_settle: int = 20, seed: int = 1):
+    """Block with random velocities settled ``n_settle`` serial steps so
+    real contacts (and tangential springs) exist."""
+    ps = dem.init_block(cfg)
+    key = jax.random.PRNGKey(seed)
+    v = 0.3 * jax.random.normal(key, ps.props["v"].shape)
+    ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+    for _ in range(n_settle):
+        ps, flags = dem.dem_step(ps, cfg)
+        assert int(flags.any()) == 0
+    return ps
+
+
+def dem_distributed_start(mesh, cfg: dem.DEMConfig, ps0: PS.ParticleSet,
+                          cap_factor: float = 3.0):
+    return SIM.distribute(ps0, dem.physics, cfg, mesh, axis_name=AXIS,
+                          cap_factor=cap_factor)
 
 
 # --------------------------------------------------------------------------

@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV.
                     timing + relative divergence for MD / SPH / DEM
   bench_distributed — MD weak scaling on 1/2/4/8 forced host devices
                     (workloads shared with tests/distributed)
+  bench_sim_engine — unified make_sim_step engine vs frozen pre-refactor
+                    steps (MD+SPH, serial + 8-device): no step-time
+                    regression (ratio gate 1.05)
 """
 import sys
 import pathlib
@@ -25,12 +28,13 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 def main() -> None:
     from benchmarks import (backend_compare, bench_cmaes, bench_dem,
                             bench_distributed, bench_interp, bench_md,
-                            bench_membw, bench_roofline, bench_sph,
-                            bench_stencil, bench_vortex)
+                            bench_membw, bench_roofline, bench_sim_engine,
+                            bench_sph, bench_stencil, bench_vortex)
     print("name,us_per_call,derived")
     for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
                 bench_vortex, bench_interp, bench_dem, bench_cmaes,
-                backend_compare, bench_distributed, bench_roofline):
+                backend_compare, bench_distributed, bench_sim_engine,
+                bench_roofline):
         for line in mod.run():
             print(line, flush=True)
 

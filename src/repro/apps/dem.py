@@ -6,31 +6,29 @@ leapfrog integration (paper eq. 9-13). The inclination is applied by
 rotating the gravity vector (paper: 30°); x has fixed walls, y is periodic,
 +z is free space.
 
-The per-contact tangential springs are the paper's point about DEM being
-nontrivial to parallelize: contact lists are of varying length and must
-survive Verlet-list rebuilds (and, distributed, ghost exchanges — the
-``ghost_put(merge)`` use case). Here contact state lives in the half Verlet
-list's slots and is *carried over by partner matching* on rebuild.
+The app is a *thin physics spec* for the simulation layer
+(core/simulation.py). The per-contact tangential springs are the paper's
+point about DEM being nontrivial to parallelize: contact state must
+survive list rebuilds and — distributed — particle migration and ghost
+exchange. Here the springs are *declared per-particle fields*
+(``ct_id``: partner particle ids, ``ct_ut``: tangential displacements)
+that ``map()`` migrates automatically with their grain; each step the
+contact list is rebuilt from the cell list over local+ghost particles and
+history is carried over by *partner-id matching* — the id is the
+provenance that slab-local slot indices cannot provide. Both sides of a
+contact integrate mirrored springs (u_t_ij = −u_t_ji), so Newton's third
+law holds without any return communication. The Hertzian *normal* forces
+run through the unified cell-pair engine (:func:`dem_normal_body`;
+``DEMConfig.backend`` = "jnp" | "pallas"), the history-dependent
+tangential pass stays on the contact list inside the ``finish`` hook.
 
 Units: the paper quotes k_n=7.849 etc. in scaled units; we use k_n=7.849e4
 (the Walther & Sbalzarini 2009 magnitudes) so that the static penetration
 m·g/k_n ≪ R — noted in DESIGN.md as a parameter-scale adaptation.
-
-``DEMConfig.backend`` selects how the *normal* (Hertzian spring + damping)
-contact forces are computed: ``"jnp"`` keeps them in the contact-list loop
-(the oracle path, exactly the historical behavior), ``"pallas"`` evaluates
-them through the unified cell-pair engine (:func:`dem_normal_body`,
-``kernels/cell_pair``) over a fresh cell list each step. The tangential
-springs — whose elastic displacement history must survive rebuilds —
-always stay on the half-Verlet contact-list path. Note the pallas path
-still evaluates Fn per listed contact (the Coulomb cap on |Ft| needs it)
-and builds an extra cell list, so it targets the TPU VMEM hot loop —
-off-TPU (interpret) it is a correctness path, not a fast one.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -40,6 +38,7 @@ import numpy as np
 from repro.core import cell_list as CL
 from repro.core import interactions as I
 from repro.core import particles as P
+from repro.core import simulation as SIM
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +66,13 @@ class DEMConfig:
     def r_cut(self) -> float:
         return 2.0 * self.R + self.skin
 
+    @property
+    def k_full(self) -> int:
+        """Contact slots of the *full* neighbor list (each pair listed on
+        both rows — the form that parallelizes, since each side owns its
+        half of the contact): twice the half-list budget."""
+        return 2 * self.k_max
+
 
 def init_block(cfg: DEMConfig, capacity_factor: float = 1.3) -> P.ParticleSet:
     dp = 2.02 * cfg.R
@@ -76,15 +82,19 @@ def init_block(cfg: DEMConfig, capacity_factor: float = 1.3) -> P.ParticleSet:
     x[:, 2] += cfg.R  # rest just above the floor
     n = len(x)
     cap = int(n * capacity_factor)
-    k = cfg.k_max
-    return P.from_positions(
+    k = cfg.k_full
+    ps = P.from_positions(
         jnp.asarray(x, jnp.float32), capacity=cap,
         props={
             "v": jnp.zeros((n, 3), jnp.float32),
             "w": jnp.zeros((n, 3), jnp.float32),      # angular velocity
             "f": jnp.zeros((n, 3), jnp.float32),
             "t": jnp.zeros((n, 3), jnp.float32),      # torque
+            # tangential contact springs, keyed by partner id (-1 = empty)
+            "ct_id": jnp.full((n, k), -1, jnp.int32),
+            "ct_ut": jnp.zeros((n, k, 3), jnp.float32),
         })
+    return SIM.with_ids(ps)
 
 
 def gravity_vec(cfg: DEMConfig):
@@ -93,45 +103,11 @@ def gravity_vec(cfg: DEMConfig):
                        jnp.float32)
 
 
-def _cl_kw(cfg: DEMConfig):
-    lo = (0.0, 0.0, 0.0)
-    hi = tuple(float(b) for b in cfg.box)
-    gs = CL.grid_shape_for(lo, hi, cfg.r_cut)
-    return dict(box_lo=lo, box_hi=hi, grid_shape=gs,
-                periodic=(False, True, False), cell_cap=cfg.cell_cap)
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class ContactState:
-    """Per-(particle, Verlet-slot) tangential springs (paper eq. 10)."""
-
-    nbr: jax.Array    # (cap, k_max) partner index (cap = empty)
-    u_t: jax.Array    # (cap, k_max, 3) tangential displacement
-    x_build: jax.Array
-
-
-def build_contacts(ps: P.ParticleSet, cfg: DEMConfig,
-                   old: ContactState | None = None) -> ContactState:
-    """(Re)build the half Verlet list; carry tangential history over by
-    partner matching — the contact-list management the paper highlights."""
-    cl = CL.build_cell_list(ps, **_cl_kw(cfg))
-    vl = CL.build_verlet(ps, cl, cfg.r_cut, cfg.k_max, half=True)
-    u_t = jnp.zeros((ps.capacity, cfg.k_max, 3), jnp.float32)
-    if old is not None:
-        # match new partners against old slots: (cap, k_new, k_old)
-        match = vl.nbr[:, :, None] == old.nbr[:, None, :]
-        carried = jnp.einsum("iko,iod->ikd",
-                             match.astype(jnp.float32), old.u_t)
-        u_t = jnp.where((vl.nbr < ps.capacity)[:, :, None], carried, 0.0)
-    return ContactState(nbr=vl.nbr, u_t=u_t, x_build=ps.x)
-
-
 def dem_normal_body(cfg: DEMConfig):
     """Hertzian normal contact pair body (cell-pair engine protocol):
     spring + velocity damping, both radial — F_ij = mag · dx. Tangential
     history forces are not representable here (they need per-contact
-    state) and stay on the contact-list path."""
+    state) and live in the ``finish`` hook's contact-list pass."""
     two_R = 2.0 * cfg.R
     m_eff = cfg.m / 2.0
 
@@ -150,6 +126,14 @@ def dem_normal_body(cfg: DEMConfig):
     return body
 
 
+def _cl_kw(cfg: DEMConfig):
+    lo = (0.0, 0.0, 0.0)
+    hi = tuple(float(b) for b in cfg.box)
+    gs = CL.grid_shape_for(lo, hi, cfg.r_cut)
+    return dict(box_lo=lo, box_hi=hi, grid_shape=gs,
+                periodic=(False, True, False), cell_cap=cfg.cell_cap)
+
+
 def normal_forces(ps: P.ParticleSet, cfg: DEMConfig, backend: str = "jnp",
                   interpret: Optional[bool] = None):
     """Grain-grain normal forces via the unified cell-pair engine (fresh
@@ -162,22 +146,27 @@ def normal_forces(ps: P.ParticleSet, cfg: DEMConfig, backend: str = "jnp",
     return out["f"], cl.overflow
 
 
-def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig,
-                   include_normal: bool = True):
-    """Pairwise grain forces + torques over the half contact list; the
-    reverse contributions are scatter-added (antisymmetric force, symmetric
-    torque sign per Newton's third law at the contact point).
+def tangential_forces(ps: P.ParticleSet, combo: P.ParticleSet,
+                      nbr: jax.Array, cfg: DEMConfig):
+    """History-dependent tangential pass over the full contact list
+    (paper eq. 10-12). ``nbr`` indexes ``combo`` (local + ghosts); old
+    springs in ``ps.props["ct_id"/"ct_ut"]`` are matched to the new list by
+    partner id — the carry-over that survives rebuilds, migration, and
+    ghost exchange. Returns (F_t, torque, ct_id, ct_ut); the returned
+    spring state is aligned with ``nbr``'s slots.
 
-    ``include_normal=False`` drops the normal (spring + damping) term from
-    the returned force — used when the cell-pair engine supplies it — but
-    still evaluates it per contact for the Coulomb cap on |Ft|."""
-    cap, k = cs.nbr.shape
-    xm = ps.masked_x()
-    j = jnp.minimum(cs.nbr, cap - 1)
-    okj = cs.nbr < cap
-    xi = xm[:, None, :]
-    xj = xm[j]
-    # periodic y minimum image
+    Also recomputes Fn per listed contact: the Coulomb cap |Ft| ≤ μ|Fn|
+    couples the two per contact, so the summed engine output cannot
+    supply it."""
+    n, k = nbr.shape
+    cap_c = combo.capacity
+    okj = nbr < cap_c
+    j = jnp.minimum(nbr, cap_c - 1)
+    xm_c = combo.masked_x()
+    xi = ps.masked_x()[:, None, :]
+    xj = xm_c[j]
+    # periodic y minimum image (slab decomposition is along non-periodic x;
+    # ghosts arrive unshifted there)
     Ly = cfg.box[1]
     dx = xi - xj
     dy = dx[..., 1] - Ly * jnp.round(dx[..., 1] / Ly)
@@ -188,17 +177,22 @@ def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig,
     n_hat = dx / jnp.maximum(r, 1e-9)[..., None]
 
     vi = ps.props["v"][:, None, :]
-    vj = ps.props["v"][j]
+    vj = combo.props["v"][j]
     wi = ps.props["w"][:, None, :]
-    wj = ps.props["w"][j]
+    wj = combo.props["w"][j]
     # relative velocity at the contact point
     v_rel = vi - vj - jnp.cross((cfg.R * (wi + wj)), n_hat)
     v_n = jnp.sum(v_rel * n_hat, axis=-1, keepdims=True) * n_hat
     v_t = v_rel - v_n
 
-    # advance tangential springs for touching contacts (explicit Euler,
-    # paper eq. 10); project into the current tangent plane
-    u_t = cs.u_t + cfg.dt * v_t
+    # carry springs over by partner id, then advance for touching contacts
+    # (explicit Euler, paper eq. 10); project into the current tangent plane
+    pid = jnp.where(okj, combo.props["id"][j], -1)
+    old_id = ps.props["ct_id"]
+    match = (pid[:, :, None] == old_id[:, None, :]) & (old_id[:, None, :] >= 0)
+    carried = jnp.einsum("iko,iod->ikd", match.astype(jnp.float32),
+                         ps.props["ct_ut"])
+    u_t = carried + cfg.dt * v_t
     u_t = u_t - jnp.sum(u_t * n_hat, -1, keepdims=True) * n_hat
     hertz = jnp.sqrt(jnp.maximum(delta, 0.0) / (2.0 * cfg.R))[..., None]
     m_eff = cfg.m / 2.0
@@ -209,21 +203,12 @@ def contact_forces(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig,
     ft_mag = jnp.linalg.norm(Ft, axis=-1, keepdims=True)
     scale = jnp.minimum(1.0, cfg.mu * fn_mag / jnp.maximum(ft_mag, 1e-9))
     Ft = Ft * scale
-    u_t = u_t * scale
-    u_t = jnp.where(touch[..., None], u_t, 0.0)
+    u_t = jnp.where(touch[..., None], u_t * scale, 0.0)
 
-    F = jnp.where(touch[..., None], (Fn if include_normal else 0.0) + Ft,
-                  0.0)
-    T = jnp.where(touch[..., None],
-                  -cfg.R * jnp.cross(n_hat, Ft), 0.0)
-
-    f_i = jnp.sum(F, axis=1)
-    t_i = jnp.sum(T, axis=1)
-    # reverse: force -F on j, torque with same lever arm sign
-    jj = jnp.where(okj, cs.nbr, cap).reshape(-1)
-    f_j = jnp.zeros((cap + 1, 3), F.dtype).at[jj].add(-F.reshape(-1, 3))[:cap]
-    t_j = jnp.zeros((cap + 1, 3), T.dtype).at[jj].add(T.reshape(-1, 3))[:cap]
-    return f_i + f_j, t_i + t_j, dataclasses.replace(cs, u_t=u_t)
+    F = jnp.where(touch[..., None], Ft, 0.0)
+    T = jnp.where(touch[..., None], -cfg.R * jnp.cross(n_hat, Ft), 0.0)
+    ct_id = jnp.where(touch, pid, -1)
+    return (jnp.sum(F, axis=1), jnp.sum(T, axis=1), ct_id, u_t)
 
 
 def wall_forces(ps: P.ParticleSet, cfg: DEMConfig):
@@ -243,43 +228,62 @@ def wall_forces(ps: P.ParticleSet, cfg: DEMConfig):
     return f
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def dem_step(ps: P.ParticleSet, cs: ContactState, cfg: DEMConfig):
-    """Returns (ps, cs, rebuild, overflow); overflow is the pallas path's
-    per-step cell-list overflow (0 on the contact-loop path) — nonzero
-    means normal forces were dropped and ``cell_cap`` must be raised."""
-    if cfg.backend == "pallas":
-        f_c, t_c, cs = contact_forces(ps, cs, cfg, include_normal=False)
-        f_n, overflow = normal_forces(ps, cfg, backend="pallas",
-                                      interpret=cfg.interpret)
-        f_c = f_c + f_n
-    else:
-        f_c, t_c, cs = contact_forces(ps, cs, cfg)
-        overflow = jnp.asarray(0, jnp.int32)
-    f = f_c + wall_forces(ps, cfg) + cfg.m * gravity_vec(cfg)[None, :]
-    # leapfrog (paper eq. 13)
-    v = ps.props["v"] + cfg.dt / cfg.m * f
-    x = ps.x + cfg.dt * v
-    w = ps.props["w"] + cfg.dt / cfg.inertia * t_c
-    # periodic wrap in y
-    x = x.at[:, 1].set(jnp.mod(x[:, 1], cfg.box[1]))
-    vm = ps.valid[:, None]
-    ps = ps.replace(x=jnp.where(vm, x, ps.x))
-    ps = ps.with_prop("v", jnp.where(vm, v, 0.0))
-    ps = ps.with_prop("w", jnp.where(vm, w, 0.0))
-    ps = ps.with_prop("f", f).with_prop("t", t_c)
-    moved2 = jnp.max(jnp.sum(jnp.where(vm, ps.x - cs.x_build, 0.0) ** 2, -1))
-    rebuild = moved2 > (0.5 * cfg.skin) ** 2
-    return ps, cs, rebuild, overflow
+def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
+    """DEM as a simulation-layer spec. Normal forces come from the pair
+    engine; ``finish`` rebuilds the contact list over local+ghosts, runs
+    the tangential-history pass (id-matched springs), adds walls and
+    rotated gravity, and advances the leapfrog."""
+    lo = (0.0, 0.0, 0.0)
+    hi = tuple(float(b) for b in cfg.box)
+
+    def finish(ctx):
+        ps, combo, cl = ctx.ps, ctx.combo, ctx.cl
+        n = ps.capacity
+        vl = CL.build_verlet(combo, cl, cfg.r_cut, cfg.k_full, half=False)
+        f_t, torque, ct_id, ct_ut = tangential_forces(ps, combo,
+                                                      vl.nbr[:n], cfg)
+        f = (ctx.pair["f"][:n] + f_t + wall_forces(ps, cfg)
+             + cfg.m * gravity_vec(cfg)[None, :])
+        # leapfrog (paper eq. 13)
+        v = ps.props["v"] + cfg.dt / cfg.m * f
+        x = ps.x + cfg.dt * v
+        w = ps.props["w"] + cfg.dt / cfg.inertia * torque
+        # periodic wrap in y
+        x = x.at[:, 1].set(jnp.mod(x[:, 1], cfg.box[1]))
+        vm = ps.valid[:, None]
+        ps = ps.replace(x=jnp.where(vm, x, ps.x))
+        ps = ps.with_prop("v", jnp.where(vm, v, 0.0))
+        ps = ps.with_prop("w", jnp.where(vm, w, 0.0))
+        ps = ps.with_prop("f", f).with_prop("t", torque)
+        ps = ps.with_prop("ct_id", ct_id).with_prop("ct_ut", ct_ut)
+        return ps, {}, vl.overflow
+
+    return SIM.PhysicsSpec(
+        name="dem", box_lo=lo, box_hi=hi,
+        periodic=(False, True, False),
+        r_cut=cfg.r_cut, cell_cap=cfg.cell_cap,
+        pair_out={"f": "radial"},
+        make_body=lambda: dem_normal_body(cfg),
+        pair_props=("v",),
+        ghost_props=("v", "w", "id"),
+        advance=None, finish=finish,
+        backend=cfg.backend, interpret=cfg.interpret,
+        bucket_cap=512, ghost_cap=1024)
+
+
+def dem_step(ps: P.ParticleSet, cfg: DEMConfig):
+    """One leapfrog step through the unified engine (serial = 1-slab path).
+    Returns (ps, flags) — check ``flags.any()`` for cell/contact-slot
+    overflow (nonzero means raise ``cell_cap`` / ``k_max``)."""
+    step = SIM.make_sim_step(physics, cfg)
+    state, flags, _ = step(SIM.serial_state(ps, physics, cfg), {})
+    return state.ps, flags
 
 
 def run(cfg: DEMConfig, n_steps: int):
     ps = init_block(cfg)
-    cs = build_contacts(ps, cfg)
     for i in range(n_steps):
-        ps, cs, rebuild, overflow = dem_step(ps, cs, cfg)
-        assert int(overflow) == 0, (
-            f"cell overflow at step {i}; raise DEMConfig.cell_cap")
-        if bool(rebuild):
-            cs = build_contacts(ps, cfg, old=cs)
-    return ps, cs
+        ps, flags = dem_step(ps, cfg)
+        assert int(flags.any()) == 0, (
+            f"overflow at step {i}; raise DEMConfig.cell_cap / k_max")
+    return ps

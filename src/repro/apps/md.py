@@ -1,31 +1,32 @@
 """Lennard-Jones molecular dynamics (paper §4.1, Listing 4.1).
 
 Reproduces the paper's MD client: particles on a periodic cubic lattice,
-LJ interactions within r_cut = 3σ, symmetric-interaction evaluation,
-velocity-Verlet integration. The distributed path uses the adaptive-slab
-``map()`` / ``ghost_get()`` mappings; energies validate conservation (the
-paper's validation criterion — energy curves identical to LAMMPS and total
-energy conserved).
+LJ interactions within r_cut = 3σ, velocity-Verlet integration. Energies
+validate conservation (the paper's validation criterion — energy curves
+identical to LAMMPS and total energy conserved).
 
-The LJ physics is a single ~10-line pair body (:func:`lj_pair_body`) run
-by the unified cell-pair engine: ``MDConfig.backend`` selects ``"jnp"``
-(portable ``apply_kernel_cells``, the oracle) or ``"pallas"`` (the VMEM
-pair-tile kernel, ``kernels/cell_pair``; off-TPU it runs in interpret
-mode unless ``MDConfig.interpret`` says otherwise).
+The app is a *thin physics spec* for the simulation layer
+(core/simulation.py): the LJ physics is a single ~10-line pair body
+(:func:`lj_pair_body`) plus two integrator hooks, declared once in
+:func:`physics`. ``make_sim_step(physics, cfg)`` runs it serially;
+``make_sim_step(physics, cfg, mesh)`` runs the same spec under
+``map()``/``ghost_get()`` on a device mesh — there is no distributed
+version of this file. ``MDConfig.backend`` selects the ``"jnp"`` oracle
+or the ``"pallas"`` VMEM pair-tile kernel on both paths.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional, Tuple
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import cell_list as CL
 from repro.core import interactions as I
 from repro.core import particles as P
+from repro.core import simulation as SIM
 from repro.numerics import integrators as TI
 
 
@@ -65,9 +66,43 @@ def lj_pair_body(sigma: float, epsilon: float):
     return body
 
 
+def physics(cfg: MDConfig) -> SIM.PhysicsSpec:
+    """MD as a simulation-layer spec: velocity-Verlet around the LJ pair
+    body. ``advance`` is the first kick + drift + periodic wrap (before
+    migration so moved particles are re-owned); ``finish`` stores the new
+    forces and applies the second kick."""
+    dim = cfg.dim
+    lo, hi = (0.0,) * dim, (cfg.box,) * dim
+
+    def advance(ps, red, extras):
+        ps = TI.velocity_verlet_kick(ps, cfg.dt)
+        return TI.wrap_periodic(ps, lo, hi, (True,) * dim)
+
+    def finish(ctx):
+        ps = ctx.ps
+        f = ctx.pair["f"][: ps.capacity]
+        ps = ps.with_prop("f", jnp.where(ps.valid[:, None], f, 0.0))
+        ps = TI.velocity_verlet_kick2(ps, cfg.dt)
+        return ps, {}, 0
+
+    return SIM.PhysicsSpec(
+        name="md", box_lo=lo, box_hi=hi, periodic=(True,) * dim,
+        r_cut=cfg.r_cut, cell_cap=cfg.cell_cap,
+        pair_out={"f": "radial"},
+        make_body=lambda: lj_pair_body(cfg.sigma, cfg.epsilon),
+        pair_props=(), ghost_props=(),   # ghosts carry positions only
+        advance=advance, finish=finish,
+        backend=cfg.backend, interpret=cfg.interpret,
+        bucket_cap=512, ghost_cap=1024)
+
+
+# --------------------------------------------------------------------------
+# Serial-convenience wrappers (the 1-slab special case of the same engine)
+# --------------------------------------------------------------------------
+
 def lj_force_kernel(cfg: MDConfig):
     """jnp ``kernel(dx, r2, wi, wj) -> force`` derived from the same pair
-    body the Pallas engine runs (single-source physics)."""
+    body the engine runs (single-source physics)."""
     kern = I.as_jnp_kernel(lj_pair_body(cfg.sigma, cfg.epsilon),
                            {"f": "radial"}, cfg.r_cut)
     return lambda dx, r2, wi, wj: kern(dx, r2, wi, wj)["f"]
@@ -111,18 +146,15 @@ def compute_forces(ps: P.ParticleSet, cfg: MDConfig):
     return ps.with_prop("f", out["f"]), cl.overflow
 
 
-@partial(jax.jit, static_argnames=("cfg",))
 def md_step(ps: P.ParticleSet, cfg: MDConfig):
-    """One velocity-Verlet step (Listing 4.1 lines 54-73)."""
-    ps = TI.velocity_verlet_kick(ps, cfg.dt)
-    ps = TI.wrap_periodic(ps, (0.0,) * cfg.dim, (cfg.box,) * cfg.dim,
-                          (True,) * cfg.dim)
-    ps, overflow = compute_forces(ps, cfg)
-    ps = TI.velocity_verlet_kick2(ps, cfg.dt)
-    return ps, overflow
+    """One velocity-Verlet step (Listing 4.1 lines 54-73) through the
+    unified engine (serial = 1-slab path). Returns (ps, overflow)."""
+    step = SIM.make_sim_step(physics, cfg)
+    state, flags, _ = step(SIM.serial_state(ps, physics, cfg), {})
+    return state.ps, flags.any()
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@functools.partial(jax.jit, static_argnames=("cfg",))
 def energies(ps: P.ParticleSet, cfg: MDConfig):
     cl = CL.build_cell_list(ps, **_cl_kw(cfg))
     pot = I.apply_kernel_cells(ps, cl, lj_potential_kernel(cfg),

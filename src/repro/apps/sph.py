@@ -3,21 +3,21 @@ formulation: cubic-spline kernel, Tait equation of state (γ=7, c_sound
 coefficient 20), Monaghan artificial viscosity, dynamic boundary particles,
 Verlet time stepping with dynamic time-step (CFL + force criteria).
 
-This is the paper's dynamic-load-balancing showcase: the fluid column
-collapses and sloshes, so a static decomposition degrades;
-``run_distributed`` pairs the adaptive-slab ``map()``/``ghost_get()``
-mappings with the in-graph cost-balancer and the SAR trigger (core/dlb.py).
-
-The fused continuity+momentum physics is one pair body
-(:func:`sph_pair_body`) run by the unified cell-pair engine:
-``SPHConfig.backend`` selects ``"jnp"`` (oracle) or ``"pallas"`` (VMEM
-pair tiles, ``kernels/cell_pair``; interpret mode off-TPU via
-``SPHConfig.interpret=None`` auto-detection).
+The app is a *thin physics spec* for the simulation layer
+(core/simulation.py): the fused continuity+momentum physics is one pair
+body (:func:`sph_pair_body`), the integrator is the ``finish`` hook, and
+the per-step density/EOS state is carried as declared per-particle fields
+that migrate and ghost automatically (ghosts carry only ``v, rho, kind``
+— OpenFPM's property-subset ghost_get). ``make_sim_step(physics, cfg)``
+is the serial dam break; the same spec on a mesh is the paper's
+dynamic-load-balancing showcase (:func:`run_distributed` pairs it with
+the in-graph cost balancer and the SAR trigger, core/dlb.py).
+``SPHConfig.backend`` selects "jnp" (oracle) or "pallas" (VMEM pair
+tiles) on both paths.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -25,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cell_list as CL
+from repro.core import dlb
 from repro.core import interactions as I
 from repro.core import particles as P
+from repro.core import simulation as SIM
 
 FLUID, BOUND = 0, 1
 
@@ -121,9 +123,65 @@ def sph_pair_body(cfg: SPHConfig):
 
 def sph_kernel_factory(cfg: SPHConfig):
     """jnp ``kernel(dx, r2, wi, wj) -> {"a", "drho"}`` derived from the
-    same pair body the Pallas engine runs (single-source physics)."""
+    same pair body the engine runs (single-source physics)."""
     return I.as_jnp_kernel(sph_pair_body(cfg),
                            {"a": "radial", "drho": "scalar"}, cfg.r_cut)
+
+
+def physics(cfg: SPHConfig) -> SIM.PhysicsSpec:
+    """SPH as a simulation-layer spec. No ``advance`` (rates come first);
+    ``finish`` is the DualSPHysics Verlet scheme with the *global* dynamic
+    dt — ``red.max`` makes the CFL reduction a pmax on a mesh and an
+    identity serially, so one integrator serves both."""
+    dim = cfg.dim
+    lo = (0.0,) * dim
+    hi = tuple(float(b) for b in cfg.box)
+
+    def finish(ctx):
+        ps, red = ctx.ps, ctx.red
+        n = ps.capacity
+        grav = jnp.zeros((dim,), jnp.float32).at[-1].set(-cfg.g)
+        fluid = ps.props["kind"] == FLUID
+        a = jnp.where(fluid[:, None], ctx.pair["a"][:n] + grav, 0.0)
+        drho = ctx.pair["drho"][:n]
+        amax = red.max(jnp.max(jnp.where(ps.valid,
+                                         jnp.linalg.norm(a, axis=-1), 0.0)))
+        dt = cfg.cfl * jnp.minimum(
+            jnp.sqrt(cfg.h / jnp.maximum(amax, 1e-6)), cfg.h / cfg.c_sound)
+        euler = ctx.extras["euler"]
+        v, v_prev = ps.props["v"], ps.props["v_prev"]
+        rho, rho_prev = ps.props["rho"], ps.props["rho_prev"]
+        fl = fluid[:, None]
+        v_new = jnp.where(euler, v + dt * a, v_prev + 2.0 * dt * a)
+        rho_new = jnp.where(euler, rho + dt * drho,
+                            rho_prev + 2.0 * dt * drho)
+        x_new = ps.x + jnp.where(fl, dt * v + 0.5 * dt * dt * a, 0.0)
+        # clamp into box (boundary-penetration guard)
+        eps = cfg.dp * 0.5
+        x_new = jnp.clip(x_new, eps, jnp.asarray(cfg.box, jnp.float32) - eps)
+        rho_new = jnp.maximum(rho_new, 0.9 * cfg.rho0)  # DualSPHysics floor
+        vm = ps.valid[:, None]
+        ps = ps.replace(x=jnp.where(vm, x_new, ps.x))
+        ps = ps.with_prop("v", jnp.where(fl & vm, v_new, 0.0))
+        ps = ps.with_prop("v_prev", v)
+        ps = ps.with_prop("rho", jnp.where(ps.valid, rho_new, rho))
+        ps = ps.with_prop("rho_prev", rho)
+        ps = ps.with_prop("a", a).with_prop("drho", drho)
+        # per-shard load telemetry for the SAR / imbalance control plane
+        load = red.gather(jnp.sum(ps.valid))
+        return ps, {"dt": dt, "load": load}, 0
+
+    return SIM.PhysicsSpec(
+        name="sph", box_lo=lo, box_hi=hi, periodic=(False,) * dim,
+        r_cut=cfg.r_cut, cell_cap=cfg.cell_cap,
+        pair_out={"a": "radial", "drho": "scalar"},
+        make_body=lambda: sph_pair_body(cfg),
+        pair_props=("v", "rho"),
+        ghost_props=("v", "rho", "kind"),   # property-subset ghost_get
+        advance=None, finish=finish,
+        backend=cfg.backend, interpret=cfg.interpret,
+        extras_example=("euler",),
+        bucket_cap=2048, ghost_cap=2048)
 
 
 # --------------------------------------------------------------------------
@@ -216,40 +274,14 @@ def compute_rates(ps: P.ParticleSet, cfg: SPHConfig):
     return a, out["drho"], cl.overflow
 
 
-def dyn_dt(ps, a, cfg: SPHConfig):
-    amax = jnp.max(jnp.where(ps.valid, jnp.linalg.norm(a, axis=-1), 0.0))
-    dt_f = jnp.sqrt(cfg.h / jnp.maximum(amax, 1e-6))
-    dt_c = cfg.h / cfg.c_sound
-    return cfg.cfl * jnp.minimum(dt_f, dt_c)
-
-
-@partial(jax.jit, static_argnames=("cfg", "euler"))
 def sph_step(ps: P.ParticleSet, cfg: SPHConfig, euler: bool = False):
-    """Verlet step with dynamic dt (DualSPHysics scheme); ``euler=True`` is
-    the periodic stabilization step."""
-    a, drho, overflow = compute_rates(ps, cfg)
-    dt = dyn_dt(ps, a, cfg)
-    v, v_prev = ps.props["v"], ps.props["v_prev"]
-    rho, rho_prev = ps.props["rho"], ps.props["rho_prev"]
-    fluid = (ps.props["kind"] == FLUID)[:, None]
-    if euler:
-        v_new = v + dt * a
-        rho_new = rho + dt * drho
-    else:
-        v_new = v_prev + 2.0 * dt * a
-        rho_new = rho_prev + 2.0 * dt * drho
-    x_new = ps.x + jnp.where(fluid, dt * v + 0.5 * dt * dt * a, 0.0)
-    # clamp into box (boundary-penetration guard)
-    eps = cfg.dp * 0.5
-    x_new = jnp.clip(x_new, eps, jnp.asarray(cfg.box, jnp.float32) - eps)
-    rho_new = jnp.maximum(rho_new, 0.9 * cfg.rho0)  # DualSPHysics floor
-    ps = ps.replace(x=jnp.where(ps.valid[:, None], x_new, ps.x))
-    ps = ps.with_prop("v", jnp.where(fluid & ps.valid[:, None], v_new, 0.0))
-    ps = ps.with_prop("v_prev", v)
-    ps = ps.with_prop("rho", jnp.where(ps.valid, rho_new, rho))
-    ps = ps.with_prop("rho_prev", rho)
-    ps = ps.with_prop("a", a).with_prop("drho", drho)
-    return ps, dt, overflow
+    """Verlet step with dynamic dt (DualSPHysics scheme) through the
+    unified engine (serial = 1-slab path); ``euler=True`` is the periodic
+    stabilization step. Returns (ps, dt, overflow)."""
+    step = SIM.make_sim_step(physics, cfg)
+    state, flags, scal = step(SIM.serial_state(ps, physics, cfg),
+                              {"euler": jnp.asarray(euler)})
+    return state.ps, scal["dt"], flags.any()
 
 
 def run(cfg: SPHConfig, n_steps: int):
@@ -259,3 +291,52 @@ def run(cfg: SPHConfig, n_steps: int):
         ps, dt, _ = sph_step(ps, cfg, euler=(i % cfg.verlet_reset == 0))
         t += float(dt)
     return ps, t
+
+
+# --------------------------------------------------------------------------
+# Distributed driver: the paper's Table 3 DLB showcase. Same spec, same
+# engine — plus the SAR-triggered in-graph rebalance (paper §3.5).
+# --------------------------------------------------------------------------
+
+def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
+                    cap_factor: float = 3.0, axis_name: str = "shards",
+                    use_sar: bool = True, imb_threshold: float = 0.3,
+                    min_rebalance_gap: int = 10):
+    """Driver: returns (ps, t, n_rebalances, imbalance trace).
+
+    Rebalance trigger = SAR (degrading balance) OR imbalance threshold
+    (paper §3.5: 'automatically determined using SAR or specified by the
+    user program' — SAR alone cannot fire on a *constant* imbalance, since
+    the amortized-cost curve never rises)."""
+    import time as _time
+    ps0 = init_dam_break(cfg, capacity_factor=1.05)
+    state = SIM.distribute(ps0, physics, cfg, mesh, axis_name=axis_name,
+                           cap_factor=cap_factor)
+    step = SIM.make_sim_step(physics, cfg, mesh, axis_name=axis_name)
+    rebalance = SIM.make_rebalance(physics, cfg, mesh, axis_name=axis_name)
+    sar = dlb.SARController(rebalance_cost=0.02)
+    t = 0.0
+    n_reb = 0
+    last_reb = -10**9
+    imb_trace = []
+    for i in range(n_steps):
+        t0 = _time.perf_counter()
+        state, flags, scal = step(
+            state, {"euler": jnp.asarray(i % cfg.verlet_reset == 0)})
+        assert int(flags.any()) == 0, f"overflow at step {i}"
+        t += float(scal["dt"])
+        wall = _time.perf_counter() - t0
+        load = np.asarray(scal["load"], np.float64)
+        imb = float(load.max() / max(load.mean(), 1.0) - 1.0)
+        imb_trace.append(imb)
+        # SAR: imbalance-cost proxy = step wall time × imbalance fraction
+        fire_sar = use_sar and sar.observe(wall * (1 + imb), wall)
+        fire_thr = (imb > imb_threshold
+                    and i - last_reb >= min_rebalance_gap)
+        if fire_sar or fire_thr:
+            state, ovf = rebalance(state)
+            assert int(ovf) == 0
+            n_reb += 1
+            last_reb = i
+            sar.reset()
+    return state.ps, t, n_reb, imb_trace

@@ -7,12 +7,17 @@ Acceleration:       cell_list.py (cell + Verlet lists), interactions.py.
 Hybrid methods:     interp.py (M'4 particle-mesh interpolation),
                     remesh.py (threshold re-seeding / remeshing engine).
 Load balancing:     dlb.py (cost models, in-graph slab balancer, SAR trigger).
+Simulation layer:   simulation.py (DistributedParticles container +
+                    make_sim_step engine — one physics spec, every backend).
 """
 from . import cell_list, decomposition, dlb, domain, graph_partition, grid
 from . import hilbert, interactions, interp, mappings, particles, remesh
+from . import simulation
 
 from .domain import Box, BoundaryConditions, Domain, Ghost, make_domain, PERIODIC, NON_PERIODIC
 from .particles import ParticleSet, empty, from_positions, init_grid
 from .decomposition import Decomposition, decompose, rebalance
 from .cell_list import CellList, VerletList, build_cell_list, build_verlet, grid_shape_for
 from .mappings import GhostLayer, ghost_get_local, ghost_put_local, map_particles_local
+from .simulation import (DistributedParticles, PhysicsSpec, StepFlags,
+                         make_rebalance, make_sim_step)

@@ -74,6 +74,29 @@ def uniform_bounds(ndev: int, box_lo: float, box_hi: float) -> jax.Array:
     return jnp.linspace(box_lo, box_hi, ndev + 1, dtype=jnp.float32)
 
 
+def enforce_min_width(bounds: jax.Array, min_width: float) -> jax.Array:
+    """Project slab ``bounds`` onto {every slab >= min_width} while
+    preserving the partition of [lo, hi] — the ghost contract
+    (r_ghost <= slab width) as a *constraint on the balancer* rather than
+    a post-hoc failure. Exact identity when all slabs already satisfy it;
+    otherwise thin slabs are floored at ``min_width`` and the excess is
+    taken proportionally from the slack of the wide ones. Requires
+    ndev * min_width <= box length (else infeasible and the uniform
+    partition is returned). Pure jnp — callable inside jit/shard_map."""
+    ndev = bounds.shape[0] - 1
+    lo, hi = bounds[0], bounds[-1]
+    total = hi - lo
+    w = bounds[1:] - bounds[:-1]
+    excess = total - ndev * min_width
+    slack = jnp.maximum(w - min_width, 0.0)
+    scale = excess / jnp.maximum(jnp.sum(slack), 1e-30)
+    w_ok = min_width + slack * scale
+    w_uniform = jnp.full_like(w, total / ndev)
+    w_new = jnp.where(excess >= 0.0, w_ok, w_uniform)
+    inner = lo + jnp.cumsum(w_new)[:-1]
+    return jnp.concatenate([bounds[:1], inner, bounds[-1:]])
+
+
 # --------------------------------------------------------------------------
 # SAR heuristic (Stop-At-Rise) — when to rebalance
 # --------------------------------------------------------------------------

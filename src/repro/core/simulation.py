@@ -1,0 +1,432 @@
+"""Simulation layer — one particle container, every backend (DESIGN.md §9).
+
+OpenFPM's central claim (paper §3, §4.1) is that a simulation is written
+*once* against a distributed particle container (``vector_dist``) and the
+framework transparently handles decomposition, migration (``map()``) and
+ghost exchange — the user never writes a "distributed version" of their
+code. This module is that claim's rendering here:
+
+  * :class:`DistributedParticles` — the transparent container: a
+    :class:`~repro.core.particles.ParticleSet` plus the adaptive-slab
+    decomposition ``bounds`` it lives under. Serial is the 1-slab special
+    case of the same state (``bounds = [box_lo, box_hi]``), not a separate
+    code path.
+  * :class:`PhysicsSpec` — what an application declares: its domain, cutoff,
+    the pair body (the unified cell-pair engine protocol, core/interactions),
+    which per-particle fields exist, which of them ghosts carry
+    (OpenFPM's property-subset ``ghost_get<prop...>``), and two integrator
+    hooks (``advance`` before the pair pass, ``finish`` after it).
+  * :func:`make_sim_step` — the engine: composes ``advance`` → ``map()``
+    migration → ``ghost_get`` → cell list → unified cell-pair engine
+    (jnp | pallas) → ``finish`` into one jitted step. ``mesh=None``
+    degenerates to the serial path: the same hooks, the same pair engine,
+    the same cell-list plumbing, with the communication stages skipped —
+    so serial ≡ 1-device by construction, and every workload written as a
+    :class:`PhysicsSpec` shards for free.
+
+Declared fields migrate automatically: ``map()`` communicates the whole
+property pytree, so per-step scalars (SPH density/EOS state) and even
+per-contact history (DEM tangential springs, keyed by partner particle id)
+ride along without app-side plumbing. Ghosts carry only ``ghost_props``.
+
+Every capacity contract is surfaced, never silently dropped
+(:class:`StepFlags`): cell-list overflow, neighbor-list overflow, map()
+bucket overflow, ghost_get overflow, and the *ghost contract* — the
+in-graph check that ``r_ghost <= min slab width`` (the ±1-neighbor
+exchange covers the interaction range). Bounds are traced, so the check
+stays valid under in-graph dynamic load balancing
+(:func:`make_rebalance`, paper §3.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from . import cell_list as CL
+from . import dlb
+from . import interactions as I
+from . import mappings as M
+from . import runtime as RT
+from .particles import ParticleSet
+
+
+# --------------------------------------------------------------------------
+# The container
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistributedParticles:
+    """The transparently distributed particle container (``vector_dist``).
+
+    ``ps`` is the particle data (globally sharded along the mesh axis on a
+    distributed run; a plain single-device set otherwise). ``bounds`` is the
+    adaptive-slab decomposition along the slab axis: device d owns
+    ``bounds[d] <= x < bounds[d+1]``. Serial state is the 1-slab case
+    ``bounds = [box_lo, box_hi]`` — the same container, every backend.
+    """
+
+    ps: ParticleSet
+    bounds: jax.Array       # (n_slabs + 1,) float32
+
+    @property
+    def n_slabs(self) -> int:
+        return self.bounds.shape[0] - 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StepFlags:
+    """Per-step overflow/contract flags (all () int32; 0 = healthy).
+
+    Nonzero means a static capacity must be re-provisioned by the control
+    plane (the OpenFPM re-provision contract, DESIGN.md §2) — state stays
+    consistent for retained particles, nothing is silently dropped.
+    """
+
+    cell: jax.Array            # cell-list bucket excess over cell_cap
+    neighbor: jax.Array        # Verlet/contact-list excess over k slots
+    bucket: jax.Array          # map() per-destination bucket excess
+    ghost: jax.Array           # ghost_get per-side excess over ghost_cap
+    ghost_contract: jax.Array  # 1 ⇔ r_ghost > min slab width (±1-hop
+    #                            ghost exchange no longer covers r_cut)
+
+    def any(self) -> jax.Array:
+        return jnp.maximum(
+            jnp.maximum(jnp.maximum(self.cell, self.neighbor),
+                        jnp.maximum(self.bucket, self.ghost)),
+            self.ghost_contract)
+
+
+_Z32 = functools.partial(jnp.zeros, (), jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Reductions that degenerate: pmax/psum/... on a mesh, identity serially
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Reduce:
+    """Global reductions handed to physics hooks. On a distributed step they
+    are the mesh collectives; serially they are identities — so hooks write
+    e.g. the SPH global dynamic dt once (``red.max(amax)``) and it is
+    correct on every backend."""
+
+    axis_name: Optional[str] = None
+
+    @property
+    def distributed(self) -> bool:
+        return self.axis_name is not None
+
+    def max(self, x):
+        return RT.pmax(x, self.axis_name) if self.axis_name else x
+
+    def sum(self, x):
+        return RT.psum(x, self.axis_name) if self.axis_name else x
+
+    def mean(self, x):
+        return RT.pmean(x, self.axis_name) if self.axis_name else x
+
+    def gather(self, x):
+        """(ndev,)-stacked per-shard values (shape (1,) serially)."""
+        if self.axis_name:
+            return RT.all_gather(x, self.axis_name)
+        return jnp.asarray(x)[None]
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCtx:
+    """What a ``finish`` hook sees after the pair pass.
+
+    ``ps`` are the local particles (post-``advance``, post-migration);
+    ``combo`` is local+ghost (== ``ps`` serially) carrying ``ghost_props``;
+    ``cl`` the cell list over ``combo``; ``pair`` the cell-pair engine
+    outputs over ``combo`` rows (slice ``[:ps.capacity]`` for the local
+    part); ``red`` the backend-degenerate reductions; ``extras`` the
+    per-step traced inputs (e.g. SPH's ``euler`` flag)."""
+
+    ps: ParticleSet
+    combo: ParticleSet
+    cl: CL.CellList
+    pair: Dict[str, jax.Array]
+    red: Reduce
+    extras: Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# The physics declaration
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhysicsSpec:
+    """A workload, declared once, runnable on every backend.
+
+    A new physics is < 50 lines: a pair body (cell-pair engine protocol),
+    the field/ghost declarations, and the two integrator hooks
+    (DESIGN.md §9 walks through one).
+
+    Hooks:
+      advance(ps, red, extras) -> ps      pre-pair (e.g. MD kick+drift+wrap);
+                                          runs before migration so moved
+                                          particles are re-owned this step.
+      finish(ctx)  -> (ps, scalars, neighbor_overflow)
+                                          post-pair: integrate using
+                                          ``ctx.pair`` sums; return per-step
+                                          scalars (e.g. SPH dt) and the
+                                          overflow of any extra neighbor
+                                          structure it built (0 if none).
+    """
+
+    name: str
+    box_lo: Tuple[float, ...]
+    box_hi: Tuple[float, ...]
+    periodic: Tuple[bool, ...]
+    r_cut: float
+    cell_cap: int
+    pair_out: Dict[str, str]                 # name -> "radial" | "scalar"
+    make_body: Callable[[], Any]             # cell-pair engine pair body
+    pair_props: Tuple[str, ...] = ()         # props the pair body reads
+    ghost_props: Tuple[str, ...] = ()        # props ghosts carry (⊇ pair_props)
+    advance: Optional[Callable] = None
+    finish: Optional[Callable] = None
+    backend: str = "jnp"                     # "jnp" | "pallas"
+    interpret: Optional[bool] = None
+    extras_example: Tuple[str, ...] = ()     # names of per-step extras
+    bucket_cap: int = 512                    # map() per-destination bucket
+    ghost_cap: int = 1024                    # ghost_get per-side capacity
+
+
+def _grid_kw(spec: PhysicsSpec, padded: bool, slab_axis: int):
+    """Cell grid: the declared domain, or (distributed) the ghost-padded box
+    — slab axis extended by r_cut and non-periodic, because ghost images
+    arrive pre-shifted across the seam (mappings.ghost_get_local)."""
+    lo = list(float(v) for v in spec.box_lo)
+    hi = list(float(v) for v in spec.box_hi)
+    per = list(bool(v) for v in spec.periodic)
+    if padded:
+        lo[slab_axis] -= spec.r_cut
+        hi[slab_axis] += spec.r_cut
+        per[slab_axis] = False
+    gs = CL.grid_shape_for(lo, hi, spec.r_cut)
+    return dict(box_lo=tuple(lo), box_hi=tuple(hi), grid_shape=gs,
+                periodic=tuple(per), cell_cap=spec.cell_cap)
+
+
+def _finish(spec: PhysicsSpec, ctx: StepCtx):
+    if spec.finish is None:
+        return ctx.ps, {}, _Z32()
+    out = spec.finish(ctx)
+    ps, scalars, nb_ovf = out
+    return ps, scalars, jnp.asarray(nb_ovf, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
+                  slab_axis: int = 0, bucket_cap: Optional[int] = None,
+                  ghost_cap: Optional[int] = None):
+    """Build the jitted simulation step for ``physics(cfg)``.
+
+    Returns ``step(state, extras) -> (state, flags, scalars)`` over a
+    :class:`DistributedParticles` state. ``mesh=None`` builds the serial
+    path — the 1-device special case of the same composition; with a mesh
+    the identical hooks run inside ``shard_map`` with ``map()``/``ghost_get``
+    communication composed around the pair pass.
+
+    ``physics`` must be a module-level callable ``physics(cfg) ->``
+    :class:`PhysicsSpec` and ``cfg`` hashable (a frozen config dataclass):
+    the engine is cached on ``(physics, cfg, mesh, ...)``.
+    """
+    spec = physics(cfg)
+    body = spec.make_body()
+    rc = float(spec.r_cut)
+    pair_kw = dict(out=spec.pair_out, r_cut=rc, prop_names=spec.pair_props,
+                   backend=spec.backend, interpret=spec.interpret)
+
+    if mesh is None:
+        cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
+
+        def step(state: DistributedParticles, extras):
+            red = Reduce(None)
+            ps = state.ps
+            if spec.advance is not None:
+                ps = spec.advance(ps, red, extras)
+            cl = CL.build_cell_list(ps, **cl_kw)
+            pair = I.apply_pair_kernel(ps, cl, body, **pair_kw)
+            ps, scalars, nb_ovf = _finish(
+                spec, StepCtx(ps=ps, combo=ps, cl=cl, pair=pair, red=red,
+                              extras=extras))
+            flags = StepFlags(cell=jnp.asarray(cl.overflow, jnp.int32),
+                              neighbor=nb_ovf, bucket=_Z32(), ghost=_Z32(),
+                              ghost_contract=_Z32())
+            return dataclasses.replace(state, ps=ps), flags, scalars
+
+        return jax.jit(step)
+
+    b_cap = int(bucket_cap or spec.bucket_cap)
+    g_cap = int(ghost_cap or spec.ghost_cap)
+    cl_kw = _grid_kw(spec, padded=True, slab_axis=slab_axis)
+    box_len = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
+    per_slab = bool(spec.periodic[slab_axis])
+
+    def local_step(state: DistributedParticles, extras):
+        red = Reduce(axis_name)
+        ps, bounds = state.ps, state.bounds
+        if spec.advance is not None:
+            ps = spec.advance(ps, red, extras)
+        # map(): migrate to owners under the (possibly DLB-moved) bounds
+        ps, ovf_bucket = M.map_particles_local(ps, bounds, axis_name, b_cap,
+                                               slab_axis)
+        # ghost contract (ROADMAP): the ±1-neighbor exchange covers r_cut
+        # only while every slab is at least r_ghost wide. Bounds are traced
+        # (DLB moves them in-graph), so this must be an in-graph check.
+        contract = (jnp.min(bounds[1:] - bounds[:-1]) < rc).astype(jnp.int32)
+        ghosts, ovf_ghost = M.ghost_get_local(
+            ps, bounds, rc, axis_name, g_cap, periodic=per_slab,
+            box_len=box_len, slab_axis=slab_axis, prop_names=spec.ghost_props)
+        gp = ghosts.as_particles()
+        combo = ParticleSet(
+            x=jnp.concatenate([ps.x, gp.x]),
+            props={k: jnp.concatenate([ps.props[k], gp.props[k]])
+                   for k in spec.ghost_props},
+            valid=jnp.concatenate([ps.valid, gp.valid]))
+        cl = CL.build_cell_list(combo, **cl_kw)
+        pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+        ps, scalars, nb_ovf = _finish(
+            spec, StepCtx(ps=ps, combo=combo, cl=cl, pair=pair, red=red,
+                          extras=extras))
+        flags = StepFlags(
+            cell=RT.pmax(jnp.asarray(cl.overflow, jnp.int32), axis_name),
+            neighbor=RT.pmax(nb_ovf, axis_name),
+            bucket=jnp.asarray(ovf_bucket, jnp.int32),
+            ghost=jnp.asarray(ovf_ghost, jnp.int32),
+            ghost_contract=contract)
+        return dataclasses.replace(state, ps=ps), flags, scalars
+
+    state_spec = DistributedParticles(ps=P(axis_name), bounds=P())
+    stepped = RT.shard_map(local_step, mesh,
+                           in_specs=(state_spec, P()),
+                           out_specs=(state_spec, P(), P()),
+                           check_vma=False)
+    return jax.jit(stepped)
+
+
+@functools.lru_cache(maxsize=None)
+def make_rebalance(physics, cfg, mesh, *, axis_name: str = "shards",
+                   slab_axis: int = 0, bucket_cap: Optional[int] = None,
+                   nbins: int = 256, min_slab_width: Optional[float] = None):
+    """The DLB 'repartition + migrate' pair (paper §3.5), physics-generic:
+    cost-balanced slab bounds from the global particle histogram (psum'd
+    in-graph) followed by ``map()`` under the new decomposition. The new
+    bounds are projected onto slabs >= ``min_slab_width`` (default: the
+    spec's r_cut) so the balancer can never move the decomposition into
+    ghost-contract violation. Returns ``fn(state) -> (state, overflow)``."""
+    spec = physics(cfg)
+    ndev = int(mesh.shape[axis_name])
+    lo = float(spec.box_lo[slab_axis])
+    hi = float(spec.box_hi[slab_axis])
+    b_cap = int(bucket_cap or spec.bucket_cap)
+    # 0.1% margin keeps cumsum rounding from landing a hair under r_cut
+    min_w = float(spec.r_cut * 1.001 if min_slab_width is None
+                  else min_slab_width)
+
+    def local(state: DistributedParticles):
+        ps = state.ps
+        hist = dlb.histogram_cost(ps.x[:, slab_axis],
+                                  jnp.where(ps.valid, 1.0, 0.0),
+                                  lo, hi, nbins)
+        hist = RT.psum(hist, axis_name)
+        new_bounds = dlb.bounds_from_histogram(hist, ndev, lo, hi)
+        new_bounds = dlb.enforce_min_width(new_bounds, min_w)
+        ps, ovf = M.map_particles_local(ps, new_bounds, axis_name, b_cap,
+                                        slab_axis)
+        return DistributedParticles(ps=ps, bounds=new_bounds), ovf
+
+    state_spec = DistributedParticles(ps=P(axis_name), bounds=P())
+    fn = RT.shard_map(local, mesh, in_specs=(state_spec,),
+                      out_specs=(state_spec, P()), check_vma=False)
+    return jax.jit(fn)
+
+
+# --------------------------------------------------------------------------
+# State construction: serial and scattered
+# --------------------------------------------------------------------------
+
+def with_ids(ps: ParticleSet) -> ParticleSet:
+    """Ensure an int32 ``id`` prop (dense index among valid rows) — the
+    provenance key serial-vs-distributed comparisons and DEM contact
+    history match on."""
+    if "id" in ps.props:
+        return ps
+    val = np.asarray(ps.valid)
+    ids = np.cumsum(val) - 1
+    return ps.with_prop("id", jnp.asarray(np.where(val, ids, 0), np.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _serial_bounds(lo: float, hi: float) -> jax.Array:
+    return jnp.asarray([lo, hi], jnp.float32)
+
+
+def serial_state(ps: ParticleSet, physics, cfg,
+                 slab_axis: int = 0) -> DistributedParticles:
+    """The 1-slab (serial) container: same state type, trivial bounds."""
+    spec = physics(cfg)
+    return DistributedParticles(
+        ps=ps, bounds=_serial_bounds(float(spec.box_lo[slab_axis]),
+                                     float(spec.box_hi[slab_axis])))
+
+
+def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
+               axis_name: str = "shards", slab_axis: int = 0,
+               cap_per_dev: Optional[int] = None, cap_factor: float = 3.0,
+               bounds: Optional[jax.Array] = None) -> DistributedParticles:
+    """Host-side 'global map' (paper: distributed read + global map):
+    scatter every valid particle of ``ps0`` into its owning device's slot
+    block (device d owns slots [d·cap, (d+1)·cap)), add the ``id`` prop,
+    and shard the result over ``mesh``."""
+    spec = physics(cfg)
+    ndev = mesh.shape[axis_name]
+    ps0 = with_ids(ps0)
+    val0 = np.asarray(ps0.valid)
+    xs = np.asarray(ps0.x)[val0]
+    props = {k: np.asarray(v)[val0] for k, v in ps0.props.items()}
+    n = len(xs)
+    if cap_per_dev is None:
+        cap_per_dev = int(np.ceil(n / ndev * cap_factor))
+    if bounds is None:
+        bounds = dlb.uniform_bounds(ndev, float(spec.box_lo[slab_axis]),
+                                    float(spec.box_hi[slab_axis]))
+    owner = np.clip(
+        np.searchsorted(np.asarray(bounds), xs[:, slab_axis], "right") - 1,
+        0, ndev - 1)
+    cap = ndev * cap_per_dev
+    X = np.full((cap, xs.shape[1]), ParticleSet.FILL, np.float32)
+    PR = {k: np.zeros((cap,) + v.shape[1:], v.dtype)
+          for k, v in props.items()}
+    V = np.zeros(cap, bool)
+    for d in range(ndev):
+        rows = np.nonzero(owner == d)[0]
+        assert len(rows) <= cap_per_dev, "raise cap_per_dev"
+        b = d * cap_per_dev
+        X[b:b + len(rows)] = xs[rows]
+        for k in PR:
+            PR[k][b:b + len(rows)] = props[k][rows]
+        V[b:b + len(rows)] = True
+    ps = ParticleSet(x=jnp.asarray(X),
+                     props={k: jnp.asarray(v) for k, v in PR.items()},
+                     valid=jnp.asarray(V))
+    sh = NamedSharding(mesh, P(axis_name))
+    ps = jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
+    bounds = jax.device_put(jnp.asarray(bounds, jnp.float32),
+                            NamedSharding(mesh, P()))
+    return DistributedParticles(ps=ps, bounds=bounds)

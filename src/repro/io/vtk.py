@@ -1,12 +1,30 @@
 """Legacy-VTK ASCII writers (paper §3.7 ``write()``) — particle sets as
 POLYDATA vertices, Cartesian grids as STRUCTURED_POINTS. Directly loadable
-in ParaView, like OpenFPM's VTK output."""
+in ParaView, like OpenFPM's VTK output.
+
+Float formatting is *deterministic*: every value is rounded through
+float32 (the simulation dtype) and printed with a fixed-width scientific
+format, so a byte-identical state always produces a byte-identical file
+on every platform (regression-pinned against tests/data/golden_particles.vtk).
+Regenerated outputs land in ``artifacts/`` which is gitignored — they are
+products, not sources."""
 from __future__ import annotations
 
 import pathlib
 from typing import Dict, Optional
 
 import numpy as np
+
+
+def _fmt(v) -> str:
+    """Deterministic fixed-width float: float32-rounded, 5 significant
+    digits of scientific notation (plenty for visualization; stable text
+    for byte-level diffs)."""
+    return f"{float(np.float32(v)):.5e}"
+
+
+def _fmt_row(row) -> str:
+    return " ".join(_fmt(v) for v in row)
 
 
 def write_particles(path, x, props: Optional[Dict] = None,
@@ -23,7 +41,7 @@ def write_particles(path, x, props: Optional[Dict] = None,
         x = np.concatenate([x, np.zeros((n, 3 - dim))], axis=1)
     lines = ["# vtk DataFile Version 3.0", "repro particles", "ASCII",
              "DATASET POLYDATA", f"POINTS {n} float"]
-    lines += [" ".join(f"{v:.6g}" for v in row) for row in x]
+    lines += [_fmt_row(row) for row in x]
     lines += [f"VERTICES {n} {2 * n}"]
     lines += [f"1 {i}" for i in range(n)]
     if props:
@@ -32,14 +50,14 @@ def write_particles(path, x, props: Optional[Dict] = None,
             if arr.ndim == 1:
                 lines.append(f"SCALARS {name} float 1")
                 lines.append("LOOKUP_TABLE default")
-                lines += [f"{v:.6g}" for v in arr]
+                lines += [_fmt(v) for v in arr]
             elif arr.ndim == 2 and arr.shape[1] <= 3:
                 a = arr
                 if a.shape[1] < 3:
                     a = np.concatenate(
                         [a, np.zeros((n, 3 - a.shape[1]))], axis=1)
                 lines.append(f"VECTORS {name} float")
-                lines += [" ".join(f"{v:.6g}" for v in row) for row in a]
+                lines += [_fmt_row(row) for row in a]
     pathlib.Path(path).write_text("\n".join(lines) + "\n")
 
 
@@ -55,5 +73,5 @@ def write_grid(path, field, origin=(0, 0, 0), spacing=(1, 1, 1),
              f"POINT_DATA {int(np.prod(f.shape[:3 if f.ndim >= 3 else f.ndim]))}",
              f"SCALARS {name} float 1", "LOOKUP_TABLE default"]
     flat = f.reshape(-1) if f.ndim <= 3 else f.reshape(-1, f.shape[-1])[:, 0]
-    lines += [f"{v:.6g}" for v in np.asarray(flat, np.float64)]
+    lines += [_fmt(v) for v in np.asarray(flat, np.float64)]
     pathlib.Path(path).write_text("\n".join(lines) + "\n")

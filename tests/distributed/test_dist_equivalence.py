@@ -1,19 +1,23 @@
 """Serial-vs-distributed equivalence (paper §3.4: all computation is local
 once ghosts are populated — so the distributed trajectory must match the
-serial one). Workload fixtures are shared with
-benchmarks/bench_distributed.py via benchmarks/dist_common.py."""
+serial one). Every particle workload runs through the SAME code on both
+sides: the unified simulation layer (core/simulation.py) with mesh=None
+(serial = 1-slab) vs an 8-device mesh — the serial≡1-device invariant.
+Workload fixtures are shared with benchmarks/bench_distributed.py via
+benchmarks/dist_common.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from benchmarks import dist_common as DC
+from repro.apps import dem
 from repro.apps import gray_scott as GS
 from repro.apps import md
-from repro.apps import md_distributed as MDD
 from repro.apps import sph
-from repro.apps import sph_distributed as SD
+from repro.apps import vortex as V
 from repro.core import grid as G
+from repro.core import simulation as SIM
 
 NDEV = 8
 TOL = 1e-4
@@ -51,73 +55,139 @@ def test_gray_scott_distributed_matches_serial(mesh8):
     assert err <= TOL, err
 
 
+def _match_by_id(ps_d, ps_ref):
+    """(valid mask, distributed rows, serial rows aligned by id)."""
+    val = np.asarray(ps_d.valid)
+    ids = np.asarray(ps_d.props["id"])
+    val_s = np.asarray(ps_ref.valid)
+    ids_s = np.asarray(ps_ref.props["id"])[val_s]
+    order = np.argsort(ids_s)
+
+    def serial(prop_or_x):
+        a = np.asarray(prop_or_x)[val_s][order]
+        return a[ids[val]]
+
+    return val, serial
+
+
 def test_md_distributed_matches_serial(mesh8):
     """The paper's full pattern — map() + ghost_get() + local compute —
-    reproduces the serial trajectory particle-for-particle.
+    reproduces the serial trajectory particle-for-particle, with BOTH
+    sides stepped by the same make_sim_step engine.
 
     sigma=0.04 keeps r_cut = 3σ = 0.12 inside the 1/8 slab width, so the
     ±1-neighbor ghost exchange covers the full interaction range (the
-    contract the distributed step is built on); n_per_side=10 keeps the
+    contract the engine now checks in-graph); n_per_side=10 keeps the
     lattice spacing (0.1 = 2.5σ) inside r_cut so forces are non-trivial."""
     cfg = DC.md_config(n_per_side=10, sigma=0.04)
     ps_ref, _ = DC.md_serial_start(cfg)
     for _ in range(10):
         ps_ref, _ = md.md_step(ps_ref, cfg)
 
-    ps, bounds = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
-    step = MDD.make_distributed_step(mesh8, cfg, ps)
+    state = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
+    step = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS)
     for _ in range(10):
-        ps, ovf = step(ps, bounds)
-        assert int(ovf) == 0, int(ovf)
+        state, flags, _ = step(state, {})
+        assert int(flags.any()) == 0, jax.tree.map(int, flags)
 
-    x_d = np.asarray(ps.x)
-    v_d = np.asarray(ps.props["v"])
-    f_d = np.asarray(ps.props["f"])
+    ps = state.ps
     val = np.asarray(ps.valid)
     ids = np.asarray(ps.props["id"])
-    x_ref = np.asarray(ps_ref.x)
-    v_ref = np.asarray(ps_ref.props["v"])
     assert val.sum() == cfg.n_particles
+    f_d = np.asarray(ps.props["f"])
     # guard against a trivially-free-flight pass: LJ must actually engage
     assert np.abs(f_d[val]).max() > 1e-2, "no interactions exercised"
-    err_x = np.abs(x_d[val] - x_ref[ids[val]]).max()
-    err_v = np.abs(v_d[val] - v_ref[ids[val]]).max()
+    err_x = np.abs(np.asarray(ps.x)[val]
+                   - np.asarray(ps_ref.x)[ids[val]]).max()
+    err_v = np.abs(np.asarray(ps.props["v"])[val]
+                   - np.asarray(ps_ref.props["v"])[ids[val]]).max()
     assert err_x <= TOL, err_x
     assert err_v <= TOL, err_v
 
 
 def test_sph_distributed_matches_serial(mesh8):
     """Distributed dam break (ghost_get with property subsets + map() each
-    step, fixed uniform slabs) equals the serial integrator by particle id."""
+    step, fixed uniform slabs) equals the serial integrator by particle id
+    — one physics spec, one engine, two backends."""
     cfg = DC.sph_config()
     n_steps = 20
-    ps_d, bounds, ps_s = DC.sph_distributed_start(mesh8, cfg, NDEV)
-    step = SD.make_distributed_step(mesh8, cfg, ps_d)
+    state, ps_s = DC.sph_distributed_start(mesh8, cfg, NDEV)
+    step = SIM.make_sim_step(sph.physics, cfg, mesh8, axis_name=DC.AXIS)
     dts_d, dts_s = [], []
     for i in range(n_steps):
         euler = i % cfg.verlet_reset == 0
         ps_s, dt_s, ovf_s = sph.sph_step(ps_s, cfg, euler=euler)
         assert int(ovf_s) == 0
-        ps_d, dt_d, ovf_d, _ = step(ps_d, bounds, jnp.asarray(euler))
-        assert int(ovf_d) == 0
+        state, flags, scal = step(state, {"euler": jnp.asarray(euler)})
+        assert int(flags.any()) == 0, jax.tree.map(int, flags)
         dts_s.append(float(dt_s))
-        dts_d.append(float(dt_d))
+        dts_d.append(float(scal["dt"]))
 
     # the global dynamic dt (pmax over shards) must match the serial one
     assert np.allclose(dts_d, dts_s, rtol=1e-4), (dts_d, dts_s)
 
-    x_d = np.asarray(ps_d.x)
-    v_d = np.asarray(ps_d.props["v"])
-    rho_d = np.asarray(ps_d.props["rho"])
+    ps_d = state.ps
     val = np.asarray(ps_d.valid)
     ids = np.asarray(ps_d.props["id"])
     assert val.sum() == int(ps_s.count())
-    x_s = np.asarray(ps_s.x)
-    v_s = np.asarray(ps_s.props["v"])
-    rho_s = np.asarray(ps_s.props["rho"])
-    err_x = np.abs(x_d[val] - x_s[ids[val]]).max()
-    err_v = np.abs(v_d[val] - v_s[ids[val]]).max()
-    err_rho = np.abs(rho_d[val] - rho_s[ids[val]]).max() / cfg.rho0
+    err_x = np.abs(np.asarray(ps_d.x)[val]
+                   - np.asarray(ps_s.x)[ids[val]]).max()
+    err_v = np.abs(np.asarray(ps_d.props["v"])[val]
+                   - np.asarray(ps_s.props["v"])[ids[val]]).max()
+    err_rho = np.abs(np.asarray(ps_d.props["rho"])[val]
+                     - np.asarray(ps_s.props["rho"])[ids[val]]).max() / cfg.rho0
     assert err_x <= TOL, err_x
     assert err_v <= TOL, err_v
     assert err_rho <= TOL, err_rho
+
+
+def test_dem_distributed_matches_serial(mesh8):
+    """Distributed DEM — gained for free from the physics spec: Hertzian
+    normals through the pair engine over local+ghosts, tangential-spring
+    history carried as per-particle fields that migrate with map() and
+    re-match by partner id. Positions, velocities AND angular velocities
+    must match the serial engine by particle id."""
+    cfg = DC.dem_config()
+    ps_s = DC.dem_settled_start(cfg)
+    state = DC.dem_distributed_start(mesh8, cfg, ps_s)
+    step = SIM.make_sim_step(dem.physics, cfg, mesh8, axis_name=DC.AXIS)
+    for _ in range(15):
+        ps_s, flags_s = dem.dem_step(ps_s, cfg)
+        assert int(flags_s.any()) == 0
+        state, flags_d, _ = step(state, {})
+        assert int(flags_d.any()) == 0, jax.tree.map(int, flags_d)
+
+    ps_d = state.ps
+    val, serial = _match_by_id(ps_d, ps_s)
+    assert val.sum() == int(ps_s.count())
+    # contacts must actually be engaged (springs loaded)
+    assert np.abs(np.asarray(ps_d.props["f"])[val]).max() > 1.0
+    assert (np.asarray(ps_d.props["ct_id"])[val] >= 0).any(), \
+        "no tangential springs exercised"
+    err_x = np.abs(np.asarray(ps_d.x)[val] - serial(ps_s.x)).max()
+    err_v = np.abs(np.asarray(ps_d.props["v"])[val]
+                   - serial(ps_s.props["v"])).max()
+    err_w = np.abs(np.asarray(ps_d.props["w"])[val]
+                   - serial(ps_s.props["w"])).max()
+    assert err_x <= TOL, err_x
+    assert err_v <= TOL, err_v
+    assert err_w <= TOL, err_w
+
+
+def test_vortex_distributed_matches_serial(mesh8):
+    """Hybrid particle-mesh: the sharded-particle VIC step (per-slab
+    remesh seeding via the map() ownership rule, local M'4 M2P/P2M legs,
+    psum field rebuild) equals the serial vic_step."""
+    cfg = V.VortexConfig(shape=(32, 16, 16), lengths=(8.0, 4.0, 4.0),
+                         dt=0.02)
+    from repro.core import dlb
+    bounds = dlb.uniform_bounds(NDEV, 0.0, float(cfg.lengths[0]))
+    step = V.make_distributed_vic_step(mesh8, cfg, axis_name=DC.AXIS)
+    w_s = V.project_divfree(V.init_ring(cfg), cfg)
+    w_d = w_s
+    for _ in range(3):
+        w_s, ovf = V.vic_step(w_s, cfg)
+        assert int(ovf) == 0
+        w_d = step(w_d, bounds)
+    err = float(jnp.abs(w_s - w_d).max()) / (float(jnp.abs(w_s).max()) + 1e-9)
+    assert err <= TOL, err

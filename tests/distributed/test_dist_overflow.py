@@ -1,0 +1,113 @@
+"""Overflow surfacing through the unified engine (DESIGN.md §2: every
+static capacity is a *detected* contract, never a silent drop). For each
+pair app the distributed step must raise the matching StepFlags field when
+a capacity is deliberately starved: map() bucket_cap, ghost_get ghost_cap,
+cell-list cell_cap — plus the ghost *contract* flag (r_ghost vs min slab
+width, the ROADMAP open item, checked in-graph because bounds are traced
+under DLB)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import dist_common as DC
+from repro.apps import dem, md, sph
+from repro.core import simulation as SIM
+
+NDEV = 8
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return DC.make_submesh(NDEV)
+
+
+def _start(name, mesh):
+    """(physics, cfg, state, extras) for one pair app on ``mesh``."""
+    if name == "md":
+        # 10^3 lattice: denser than the ~r_cut cell size, so cell_cap=1
+        # genuinely overflows (an 8^3 lattice fits one particle per cell)
+        cfg = DC.md_config(n_per_side=10, sigma=0.04)
+        return (md.physics, cfg,
+                DC.md_distributed_start(mesh, cfg, NDEV, cap_per_dev=256),
+                {})
+    if name == "sph":
+        cfg = DC.sph_config()
+        state, _ = DC.sph_distributed_start(mesh, cfg, NDEV)
+        return sph.physics, cfg, state, {"euler": jnp.asarray(True)}
+    cfg = DC.dem_config()
+    state = DC.dem_distributed_start(
+        mesh, cfg, DC.dem_settled_start(cfg, n_settle=5))
+    return dem.physics, cfg, state, {}
+
+
+APPS = ("md", "sph", "dem")
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_bucket_overflow_propagates(mesh8, app):
+    """Starve map()'s per-destination buckets (bucket_cap=1) and force mass
+    migration by shifting every slab boundary half a slab — the bucket
+    overflow must surface from make_sim_step."""
+    physics, cfg, state, extras = _start(app, mesh8)
+    b = state.bounds
+    shifted = jnp.concatenate([b[:1], b[1:-1] + 0.5 * (b[1] - b[0]), b[-1:]])
+    state = dataclasses.replace(state, bounds=shifted)
+    step = SIM.make_sim_step(physics, cfg, mesh8, axis_name=DC.AXIS,
+                             bucket_cap=1)
+    _, flags, _ = step(state, extras)
+    assert int(flags.bucket) > 0
+    assert int(flags.any()) > 0
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_ghost_overflow_propagates(mesh8, app):
+    """Starve ghost_get (ghost_cap=1): every slab face has more than one
+    particle within r_ghost in these states."""
+    physics, cfg, state, extras = _start(app, mesh8)
+    step = SIM.make_sim_step(physics, cfg, mesh8, axis_name=DC.AXIS,
+                             ghost_cap=1)
+    _, flags, _ = step(state, extras)
+    assert int(flags.ghost) > 0
+
+
+@pytest.mark.parametrize("app", APPS)
+def test_cell_overflow_propagates(mesh8, app):
+    """Starve the cell list (cell_cap=1) — the per-shard overflow must be
+    pmax-reduced so every host sees it."""
+    physics, cfg, state, extras = _start(app, mesh8)
+    cfg1 = dataclasses.replace(cfg, cell_cap=1)
+    step = SIM.make_sim_step(physics, cfg1, mesh8, axis_name=DC.AXIS)
+    _, flags, _ = step(state, extras)
+    assert int(flags.cell) > 0
+
+
+def test_ghost_contract_flag_trips(mesh8):
+    """ROADMAP open item: r_ghost <= min slab width is now enforced
+    in-graph. σ=0.085 gives r_cut=0.255 > 1/8 slab width — the contract
+    flag must trip (a ±1-neighbor exchange cannot cover r_cut)."""
+    cfg = DC.md_config(n_per_side=8, sigma=0.085)
+    state = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
+    step = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS)
+    _, flags, _ = step(state, {})
+    assert int(flags.ghost_contract) == 1
+    assert int(flags.any()) > 0
+    # and the honest config does NOT trip it
+    cfg_ok = DC.md_config(n_per_side=8, sigma=0.04)
+    state = DC.md_distributed_start(mesh8, cfg_ok, NDEV, cap_per_dev=256)
+    step = SIM.make_sim_step(md.physics, cfg_ok, mesh8, axis_name=DC.AXIS)
+    _, flags, _ = step(state, {})
+    assert int(flags.ghost_contract) == 0
+
+
+def test_dem_neighbor_overflow_propagates(mesh8):
+    """DEM's extra structure — the full contact list built inside finish —
+    reports its slot overflow through StepFlags.neighbor."""
+    cfg = dataclasses.replace(DC.dem_config(), k_max=1)
+    state = DC.dem_distributed_start(
+        mesh8, cfg, DC.dem_settled_start(DC.dem_config(), n_settle=5))
+    step = SIM.make_sim_step(dem.physics, cfg, mesh8, axis_name=DC.AXIS)
+    _, flags, _ = step(state, {})
+    assert int(flags.neighbor) > 0

@@ -1,11 +1,12 @@
 """Paper Table 3 showcase: dam break under dynamic load balancing — SAR
-triggers rebalances and the fluid stays consistent (no overflow, finite)."""
+triggers rebalances and the fluid stays consistent (no overflow, finite).
+The driver (apps/sph.run_distributed) is the unified engine plus the
+physics-generic make_rebalance from the simulation layer."""
 import numpy as np
 import pytest
 
 from benchmarks import dist_common as DC
 from repro.apps import sph
-from repro.apps import sph_distributed as SD
 
 pytestmark = pytest.mark.slow
 
@@ -14,7 +15,7 @@ def test_distributed_sph_with_dlb():
     ndev = 4
     mesh = DC.make_submesh(ndev)
     cfg = DC.sph_config()
-    ps, t, n_reb, imb = SD.run_distributed(cfg, 150, mesh, ndev)
+    ps, t, n_reb, imb = sph.run_distributed(cfg, 150, mesh, ndev)
     x = np.asarray(ps.x)
     val = np.asarray(ps.valid)
     kind = np.asarray(ps.props["kind"])

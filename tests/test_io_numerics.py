@@ -71,6 +71,27 @@ def test_vtk_writers(tmp_path):
     assert "STRUCTURED_POINTS" in (tmp_path / "g.vtk").read_text()
 
 
+def test_vtk_particles_deterministic_golden(tmp_path):
+    """Float formatting is pinned byte-for-byte against the committed
+    golden sample (tests/data/) — identical state must always produce an
+    identical file, so regenerated artifacts never churn the repo
+    (artifacts/ itself is gitignored)."""
+    import pathlib
+    rng = np.random.default_rng(42)
+    x = rng.uniform(size=(8, 3)).astype(np.float32)
+    v = rng.normal(size=(8, 3)).astype(np.float32)
+    rho = rng.uniform(1.0, 2.0, size=8).astype(np.float32)
+    valid = np.array([True] * 6 + [False] * 2)
+    out = tmp_path / "p.vtk"
+    vtk.write_particles(out, x, {"v": v, "rho": rho}, valid=valid)
+    golden = pathlib.Path(__file__).parent / "data" / "golden_particles.vtk"
+    assert out.read_bytes() == golden.read_bytes()
+    # and re-writing the same state is byte-stable
+    out2 = tmp_path / "p2.vtk"
+    vtk.write_particles(out2, x, {"v": v, "rho": rho}, valid=valid)
+    assert out2.read_bytes() == out.read_bytes()
+
+
 # --------------------------------------------------------------------------
 # Poisson solvers (PetSc replacement, paper §4.4)
 # --------------------------------------------------------------------------

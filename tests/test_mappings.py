@@ -134,6 +134,27 @@ def test_distributed_equivalence_sph_and_gray_scott():
 
 
 @pytest.mark.distributed
+def test_distributed_equivalence_dem_and_vortex():
+    """The simulation layer's free wins: distributed DEM (id-keyed
+    tangential history over map()/ghost_get) and the sharded-particle
+    vortex remeshing step, each ≤1e-4 against the serial engine."""
+    run_distributed_pytest(
+        "tests/distributed/test_dist_equivalence.py"
+        "::test_dem_distributed_matches_serial",
+        "tests/distributed/test_dist_equivalence.py"
+        "::test_vortex_distributed_matches_serial",
+        min_passed=2)
+
+
+@pytest.mark.distributed
+def test_distributed_overflow_flags():
+    """bucket_cap / ghost_cap / cell-list / ghost-contract / contact-slot
+    overflow surfacing through make_sim_step for all three pair apps."""
+    run_distributed_pytest("tests/distributed/test_dist_overflow.py",
+                           min_passed=11)
+
+
+@pytest.mark.distributed
 @pytest.mark.slow
 def test_distributed_sph_with_dlb():
     """Paper Table 3 showcase: dam break under DLB — SAR triggers

@@ -68,12 +68,9 @@ def test_dem_avalanche_flows():
     from repro.apps import dem
     cfg = dem.DEMConfig(box=(2.0, 0.6, 1.0), fill=(0.8, 0.66, 0.5))
     ps = dem.init_block(cfg)
-    cs = dem.build_contacts(ps, cfg)
     for i in range(250):
-        ps, cs, rebuild, ovf = dem.dem_step(ps, cs, cfg)
-        assert int(ovf) == 0
-        if bool(rebuild):
-            cs = dem.build_contacts(ps, cfg, old=cs)
+        ps, flags = dem.dem_step(ps, cfg)
+        assert int(flags.any()) == 0
     v = np.asarray(ps.props["v"])[np.asarray(ps.valid)]
     x = np.asarray(ps.x)[np.asarray(ps.valid)]
     assert np.isfinite(v).all()

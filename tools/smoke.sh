@@ -9,9 +9,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1 pytest (single-device; distributed suite runs below) =="
 python -m pytest -x -q -m "not distributed" "$@"
 
-echo "== distributed suite (8 forced host devices, in-process harness) =="
+echo "== distributed suite (8 forced host devices, in-process harness;   =="
+echo "== includes the distributed-DEM serial-vs-sharded equivalence test =="
 REPRO_DISTRIBUTED=1 python -m pytest -x -q -p no:cacheprovider \
     tests/distributed
+# the DEM equivalence test must exist and be collected (fail loudly if it
+# is ever renamed away — the suite above would silently shrink otherwise)
+REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
+    tests/distributed/test_dist_equivalence.py::test_dem_distributed_matches_serial \
+    > /dev/null
 
 echo "== examples/vortex_ring.py (1 step) =="
 python examples/vortex_ring.py --steps 1
@@ -21,5 +27,8 @@ python examples/quickstart.py
 
 echo "== cell-pair engine backend parity (jnp vs pallas interpret) =="
 python benchmarks/backend_compare.py
+
+echo "== simulation engine vs frozen pre-refactor steps (ratio gate) =="
+python benchmarks/bench_sim_engine.py
 
 echo "smoke OK"

@@ -1,16 +1,37 @@
 """Paper Fig 9: vortex-in-cell weak scaling — single-node reference: time
 per step split into Poisson solve vs the OpenFPM parts (interpolation + FD),
-matching the paper's separation of PetSc vs OpenFPM time."""
-import jax
-import jax.numpy as jnp
+matching the paper's separation of PetSc vs OpenFPM time.
 
-from benchmarks.common import row, time_fn
-from repro.apps import vortex as V
-from repro.numerics import poisson as PS
-from repro.core import interp as IP
+Distributed row (8 forced host devices, ``--child`` subprocess like
+bench_distributed): the sharded-mesh VIC step (DistributedField + slab FFT
++ ghost_put halo-reduce P2M) against a FROZEN copy of the PR-4
+replicated-mesh step (full-mesh psum deposit, replicated Poisson) — the
+before/after for the mesh-sharding refactor. On shared-CPU host devices
+the sharded step trades redundant replicated compute for collectives, so
+the ratio here tracks regressions, not absolute speedup.
+"""
+import os
+import sys
+
+import pathlib
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.xla_env import ensure_forced_host_devices
 
 
-def run():
+def _serial_rows():
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import row, time_fn
+    from repro.apps import vortex as V
+    from repro.numerics import poisson as PS
+    from repro.core import interp as IP
+
     cfg = V.VortexConfig(shape=(48, 24, 24), lengths=(12.0, 5.57, 5.57))
     w = V.project_divfree(V.init_ring(cfg), cfg)
 
@@ -37,3 +58,103 @@ def run():
             f"{n / sec_m2p / 1e6:.2f}M interp/s (paper: 2M to 128^3 in "
             f"0.41 s = 4.9M/s 1-core)"),
     ]
+
+
+# --------------------------------------------------------------------------
+# Frozen PR-4 replicated-mesh step (DO NOT "fix" — it is the baseline)
+# --------------------------------------------------------------------------
+
+def _legacy_replicated_vic_step(mesh, cfg, axis_name="shards"):
+    """The pre-mesh-sharding distributed VIC step: replicated mesh fields,
+    per-slab particle ownership, full-mesh psum P2M rebuild."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.apps.vortex import rhs_field, velocity_from_vorticity
+    from repro.core import interp as IP
+    from repro.core import mappings as M
+    from repro.core import remesh as RM
+    from repro.core import runtime as RT
+
+    kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0),
+              box_hi=cfg.lengths, periodic=(True, True, True))
+
+    def local_step(w, bounds):
+        me = RT.axis_index(axis_name)
+        ps, _ = RM.seed_from_mesh(w, box_lo=kw["box_lo"], box_hi=kw["box_hi"],
+                                  periodic=kw["periodic"],
+                                  threshold=cfg.remesh_threshold, dim=3)
+        valid = ps.valid & (M.owner_of(ps.x[:, 0], bounds) == me)
+        x0, wp0 = ps.x, ps.props["w"]
+        u0 = velocity_from_vorticity(w, cfg)
+        r0 = rhs_field(w, u0, cfg)
+        up = IP.m2p(u0, x0, valid, **kw)
+        rp = IP.m2p(r0, x0, valid, **kw)
+        L = jnp.asarray(cfg.lengths, x0.dtype)
+        x1 = jnp.where(valid[:, None], jnp.mod(x0 + cfg.dt * up, L), x0)
+        wp1 = wp0 + cfg.dt * rp
+        w1 = RT.psum(IP.p2m(x1, wp1, valid, **kw), axis_name)
+        u1 = velocity_from_vorticity(w1, cfg)
+        r1 = rhs_field(w1, u1, cfg)
+        up1 = IP.m2p(u1, x1, valid, **kw)
+        rp1 = IP.m2p(r1, x1, valid, **kw)
+        xf = jnp.where(valid[:, None],
+                       jnp.mod(x0 + 0.5 * cfg.dt * (up + up1), L), x0)
+        wpf = wp0 + 0.5 * cfg.dt * (rp + rp1)
+        return RT.psum(IP.p2m(xf, wpf, valid, **kw), axis_name)
+
+    stepped = RT.shard_map(local_step, mesh, in_specs=(P(), P()),
+                           out_specs=P(), check_vma=False)
+    return jax.jit(stepped)
+
+
+def _dist_rows():
+    import jax
+
+    from benchmarks import dist_common as DC
+    from benchmarks.common import time_fn
+    from repro.apps import vortex as V
+    from repro.core import dlb
+    from repro.core import grid as G
+
+    ndev = 8
+    mesh = DC.make_submesh(ndev)
+    cfg = V.VortexConfig(shape=(64, 16, 16), lengths=(16.0, 4.0, 4.0),
+                         dt=0.02)
+    w = V.project_divfree(V.init_ring(cfg), cfg)
+
+    legacy = _legacy_replicated_vic_step(mesh, cfg, DC.AXIS)
+    bounds = dlb.uniform_bounds(ndev, 0.0, float(cfg.lengths[0]))
+    sec_l, _ = time_fn(legacy, w, bounds)
+
+    step = V.make_distributed_vic_step(mesh, cfg, axis_name=DC.AXIS)
+    f = G.distribute_field(w, mesh, DC.AXIS)
+    sec_s, (f2, ovf) = time_fn(step, f)
+    assert int(ovf) == 0
+    n = int(jax.numpy.prod(jax.numpy.asarray(cfg.shape)))
+    return [
+        f"vic_dist8_sharded_mesh,{sec_s * 1e6:.1f},"
+        f"replicated_psum_us={sec_l * 1e6:.1f};ratio={sec_s / sec_l:.3f};"
+        f"{n} nodes; sharded DistributedField + slab FFT + halo-reduce P2M"
+        f" vs frozen PR4 replicated-mesh baseline;"
+        f"caveat=forced-host-devices-shared-cpu"
+    ]
+
+
+def _child_main():
+    ensure_forced_host_devices(os.environ)
+    for r in _dist_rows():
+        print(r, flush=True)
+
+
+def run():
+    from benchmarks.xla_env import run_forced_host_child
+    return _serial_rows() + run_forced_host_child(__file__, "vic_dist8")
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for line in run():
+            print(line)

@@ -5,15 +5,21 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_md       — paper Table 2 (LJ MD strong scaling reference)
   bench_sph      — paper Table 3 (SPH time fractions)
   bench_stencil  — paper Table 4 / Fig 7 (Gray-Scott)
-  bench_vortex   — paper Fig 9 (vortex-in-cell, Poisson split)
+  bench_vortex   — paper Fig 9 (vortex-in-cell, Poisson split) + the
+                    vic_dist8_sharded_mesh row: sharded DistributedField
+                    step (slab FFT + halo-reduce P2M) vs the frozen PR-4
+                    replicated-psum baseline on 8 forced host devices
   bench_interp   — paper §4.4 M'4 P2M/M2P + remesh (m4_interp vs oracle)
-  bench_dem      — paper Fig 11 (DEM avalanche)
+  bench_dem      — paper Fig 11 (DEM avalanche): per-step rebuild + the
+                    skin-amortized cached-contact-list row
   bench_cmaes    — paper Fig 12 (PS-CMA-ES)
   bench_roofline — production-mesh roofline per dry-run cell
   backend_compare — unified cell-pair engine: jnp vs pallas(interpret)
                     timing + relative divergence for MD / SPH / DEM
   bench_distributed — MD weak scaling on 1/2/4/8 forced host devices
-                    (workloads shared with tests/distributed)
+                    (workloads shared with tests/distributed); rows carry
+                    the shared-CPU caveat and are mirrored with it into
+                    artifacts/bench_distributed.json
   bench_sim_engine — unified make_sim_step engine vs frozen pre-refactor
                     steps (MD+SPH, serial + 8-device): no step-time
                     regression (ratio gate 1.05)

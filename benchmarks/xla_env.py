@@ -29,3 +29,26 @@ def ensure_forced_host_devices(env) -> None:
         env["XLA_FLAGS"] = _FORCE_PAT.sub(FORCE_FLAG, flags)
     else:
         env["XLA_FLAGS"] = (flags + " " + FORCE_FLAG).strip()
+
+
+def run_forced_host_child(file: str, row_prefix: str, *,
+                          timeout: int = 1800) -> list:
+    """The shared parent half of the ``--child`` re-exec pattern: device
+    count is locked at first jax backend init, so multi-device benchmark
+    rows are produced by re-running ``file`` as a subprocess with the
+    forcing flag set, and relaying the stdout lines starting with
+    ``row_prefix``. Returns [] (with stderr relayed) on child failure."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    ensure_forced_host_devices(env)
+    r = subprocess.run([sys.executable, os.path.abspath(file), "--child"],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    rows = [ln for ln in r.stdout.splitlines() if ln.startswith(row_prefix)]
+    if r.returncode != 0 or not rows:
+        name = os.path.basename(file)
+        print(f"{name} child failed:\n{r.stderr[-2000:]}", file=sys.stderr)
+        return []
+    return rows

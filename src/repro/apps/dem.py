@@ -228,20 +228,70 @@ def wall_forces(ps: P.ParticleSet, cfg: DEMConfig):
     return f
 
 
+CACHE_KEYS = ("ct_nbr", "ct_nn", "ct_xb", "ct_ok")
+
+
+def empty_contact_cache(ps: P.ParticleSet, cfg: DEMConfig):
+    """A not-yet-valid contact-list cache for :func:`make_cached_stepper`
+    (``ct_ok=False`` forces a build on the first step)."""
+    cap = ps.capacity
+    return {"ct_nbr": jnp.full((cap, cfg.k_full), cap, jnp.int32),
+            "ct_nn": jnp.zeros((cap,), jnp.int32),
+            "ct_xb": ps.x,
+            "ct_ok": jnp.zeros((), bool)}
+
+
 def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
     """DEM as a simulation-layer spec. Normal forces come from the pair
     engine; ``finish`` rebuilds the contact list over local+ghosts, runs
     the tangential-history pass (id-matched springs), adds walls and
-    rotated gravity, and advances the leapfrog."""
+    rotated gravity, and advances the leapfrog.
+
+    Skin-amortized rebuild (serial path): when the caller threads a
+    contact-list cache through ``extras`` (:func:`make_cached_stepper`),
+    the full-list rebuild is skipped while no particle moved more than
+    skin/2 since the cached build — the cached list (built with the skin
+    margin ``r_cut = 2R + skin``) still covers every touching pair, and
+    the id-keyed tangential re-match is position-independent, so forces
+    are identical up to contact ordering. Distributed steps always
+    rebuild: ``map()``/``ghost_get`` reshuffle combo slots every step, so
+    cached slot indices would be stale by construction."""
     lo = (0.0, 0.0, 0.0)
     hi = tuple(float(b) for b in cfg.box)
 
-    def finish(ctx):
+    def contact_list(ctx):
+        """(nbr, overflow, cache_out) — cached or rebuilt."""
         ps, combo, cl = ctx.ps, ctx.combo, ctx.cl
         n = ps.capacity
-        vl = CL.build_verlet(combo, cl, cfg.r_cut, cfg.k_full, half=False)
+
+        if "ct_nbr" not in ctx.extras or ctx.red.distributed:
+            vl = CL.build_verlet(combo, cl, cfg.r_cut, cfg.k_full,
+                                 half=False)
+            return vl.nbr[:n], vl.overflow, {}
+
+        def build(_):
+            vl = CL.build_verlet(combo, cl, cfg.r_cut, cfg.k_full,
+                                 half=False)
+            return vl.nbr[:n], vl.n_nbr[:n], ps.x
+
+        def reuse(_):
+            return (ctx.extras["ct_nbr"], ctx.extras["ct_nn"],
+                    ctx.extras["ct_xb"])
+
+        stale = (~ctx.extras["ct_ok"]) | CL.moved_beyond(
+            ps.x, ctx.extras["ct_xb"], ps.valid, cfg.skin)
+        nbr, n_nbr, x_build = jax.lax.cond(stale, build, reuse, None)
+        overflow = jnp.maximum(jnp.max(n_nbr) - cfg.k_full, 0)
+        cache = {"ct_nbr": nbr, "ct_nn": n_nbr, "ct_xb": x_build,
+                 "ct_ok": jnp.ones((), bool)}
+        return nbr, overflow, cache
+
+    def finish(ctx):
+        ps, combo = ctx.ps, ctx.combo
+        n = ps.capacity
+        nbr, nb_ovf, cache = contact_list(ctx)
         f_t, torque, ct_id, ct_ut = tangential_forces(ps, combo,
-                                                      vl.nbr[:n], cfg)
+                                                      nbr, cfg)
         f = (ctx.pair["f"][:n] + f_t + wall_forces(ps, cfg)
              + cfg.m * gravity_vec(cfg)[None, :])
         # leapfrog (paper eq. 13)
@@ -256,7 +306,7 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
         ps = ps.with_prop("w", jnp.where(vm, w, 0.0))
         ps = ps.with_prop("f", f).with_prop("t", torque)
         ps = ps.with_prop("ct_id", ct_id).with_prop("ct_ut", ct_ut)
-        return ps, {}, vl.overflow
+        return ps, cache, nb_ovf
 
     return SIM.PhysicsSpec(
         name="dem", box_lo=lo, box_hi=hi,
@@ -274,10 +324,33 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
 def dem_step(ps: P.ParticleSet, cfg: DEMConfig):
     """One leapfrog step through the unified engine (serial = 1-slab path).
     Returns (ps, flags) — check ``flags.any()`` for cell/contact-slot
-    overflow (nonzero means raise ``cell_cap`` / ``k_max``)."""
+    overflow (nonzero means raise ``cell_cap`` / ``k_max``). Rebuilds the
+    contact list every step; :func:`make_cached_stepper` amortizes it."""
     step = SIM.make_sim_step(physics, cfg)
     state, flags, _ = step(SIM.serial_state(ps, physics, cfg), {})
     return state.ps, flags
+
+
+def make_cached_stepper(cfg: DEMConfig):
+    """Serial stepper with the skin-amortized contact-list rebuild: the
+    full combo contact list is carried across engine steps and rebuilt
+    (one in-graph ``lax.cond``) only when some particle moved more than
+    skin/2 since the cached build — the classic Verlet amortization the
+    per-step rebuild gave up (ROADMAP). Serial only: distributed steps
+    migrate/re-ghost every step, which invalidates cached combo slots.
+
+    Returns ``step(ps, cache=None) -> (ps, flags, cache)``; thread the
+    returned cache into the next call (``None`` starts cold).
+    """
+    engine = SIM.make_sim_step(physics, cfg)
+
+    def step(ps: P.ParticleSet, cache=None):
+        cache = empty_contact_cache(ps, cfg) if cache is None else cache
+        state, flags, scalars = engine(SIM.serial_state(ps, physics, cfg),
+                                       cache)
+        return state.ps, flags, {k: scalars[k] for k in CACHE_KEYS}
+
+    return step
 
 
 def run(cfg: DEMConfig, n_steps: int):

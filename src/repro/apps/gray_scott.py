@@ -116,23 +116,24 @@ def run(cfg: GSConfig, n_steps: int, seed: int = 0):
 
 def run_distributed(cfg: GSConfig, n_steps: int, mesh=None,
                     axis_name="shards", seed: int = 0):
-    """Slab-distributed run: leading axis sharded, halo width 1.
+    """Slab-distributed run on the ``grid.DistributedField`` container:
+    both fields live sharded (leading axis, halo width 1) with the slab
+    geometry carried in the type — the mesh mirror of the particle layer's
+    ``DistributedParticles``.
 
     ``mesh=None`` builds a 1-D mesh over all visible devices via the
     version-portable runtime shim (core/runtime.py)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import runtime as RT
     if mesh is None:
         mesh = RT.make_mesh((RT.device_count(),), (axis_name,))
-    step = G.make_stencil_step(mesh, axis_name, gs_step_padded(cfg), halo=1,
-                               periodic=True, n_fields=2)
+    step = G.make_field_step(mesh, axis_name, gs_step_padded(cfg), halo=1,
+                             periodic=True, n_fields=2)
     u, v = init_fields(cfg, seed)
-    sh = NamedSharding(mesh, P(axis_name))
-    u = jax.device_put(u, sh)
-    v = jax.device_put(v, sh)
+    fu = G.distribute_field(u, mesh, axis_name)
+    fv = G.distribute_field(v, mesh, axis_name)
     for _ in range(n_steps):
-        u, v = step(u, v)
-    return u, v
+        fu, fv = step(fu, fv)
+    return fu.data, fv.data
 
 
 def pattern_energy(v) -> float:

@@ -48,6 +48,11 @@ class VortexConfig:
     remesh_threshold: float = 0.0     # |ω| node re-seed cutoff (0 = all nodes)
     interp_cb: int = 4                # mesh nodes per interpolation cell/axis
     interp_cell_cap: int = 0          # particle slots per cell (0 = auto)
+    # distributed mesh phase: ghost rows per side for the M2P gather blocks
+    # and the P2M deposit blocks (M'4 support needs 2; the rest absorbs
+    # per-step advection across the slab face — overflow is surfaced when
+    # a particle outruns it)
+    mesh_halo: int = 3
 
 
 def _axes(cfg):
@@ -246,79 +251,137 @@ def run(cfg: VortexConfig, n_steps: int):
 
 
 # --------------------------------------------------------------------------
-# Distributed particle phase: remeshing on sharded particles
+# Distributed phase: sharded mesh fields AND sharded particles
 # --------------------------------------------------------------------------
 
 def make_distributed_vic_step(mesh, cfg: VortexConfig,
                               axis_name: str = "shards"):
-    """Sharded-particle VIC step through the simulation layer's slab
-    machinery (core/simulation / core/mappings).
+    """Fully sharded VIC step: the mesh half lives in a
+    ``grid.DistributedField`` (slab along the long axis) exactly as the
+    particle half lives in ``DistributedParticles`` — no replicated
+    vorticity/velocity arrays and no full-mesh ``psum`` anywhere.
 
-    The mesh fields are replicated (they are small compared to the
-    particle set at production resolution the long axis would shard too —
-    see ROADMAP); the *particle* phase is sharded: each device re-seeds
-    only the remesh nodes it owns under the slab ``bounds``
-    (``mappings.owner_of`` — the same ownership rule ``map()`` uses), runs
-    the M'4 M2P legs and the RK2 advection locally, and the P2M leg
-    rebuilds the global field as a psum of per-slab scatters. Migration is
-    subsumed by remeshing: particles advected across a slab boundary
-    deposit locally onto the replicated mesh, and next step's re-seed
-    re-bins ownership — remeshing works on sharded particles.
+    Per stage, on each shard's local slab block:
+      * re-seed particles from the LOCAL block only (``RM.seed_from_block``
+        — the per-slab remesh; ownership is the slab geometry carried in
+        the field's type);
+      * Poisson solve via the slab-decomposed FFT
+        (``poisson.fft_poisson_slab_local`` — one all_to_all transpose);
+      * curl / RHS as halo-1 ghost_get stencils
+        (``grid.apply_stencil_local``, the make_stencil_step engine);
+      * M'4 M2P against ``mesh_halo``-padded ghost_get blocks
+        (``IP.m2p_block``);
+      * M'4 P2M into a ``local + mesh_halo`` block followed by the
+        ``ghost_put`` halo-reduce (``grid.halo_reduce``) — the O(halo)
+        neighbor exchange that replaces the old O(full-mesh) psum.
 
-    Returns ``step(w, bounds) -> w`` (jnp interpolation path; the Pallas
-    bucketed kernels are a single-device VMEM optimization)."""
+    Returns ``step(f: grid.DistributedField) -> (f, overflow)`` where
+    overflow (replicated int32) counts re-seed surplus plus particles
+    whose M'4 support outran ``mesh_halo`` (re-provision ``mesh_halo``).
+    jnp interpolation path; the Pallas bucketed kernels stay a
+    single-device VMEM optimization (their block legs are
+    ``kernels.m4_interp.ops.p2m_block``/``m2p_fused_block``)."""
     if cfg.use_pallas:
         raise NotImplementedError(
             "distributed VIC uses the jnp interpolation oracle; "
             "use_pallas is a single-device VMEM optimization")
     from jax.sharding import PartitionSpec as P
-    from repro.core import mappings as M
+    from repro.core import grid as G
     from repro.core import runtime as RT
 
+    ndev = int(mesh.shape[axis_name])
+    n0, n1, _ = cfg.shape
+    if n0 % ndev or n1 % ndev:
+        raise ValueError(
+            f"shape {cfg.shape}: axes 0 and 1 must divide over {ndev} "
+            "shards (slab rows + FFT transpose)")
+    n0l = n0 // ndev
+    H = int(cfg.mesh_halo)
+    if not 2 <= H <= n0l:
+        raise ValueError(
+            f"mesh_halo={H} must be in [2, {n0l}] (M'4 support; single-hop "
+            "ghost exchange)")
     kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0),
               box_hi=cfg.lengths, periodic=(True, True, True))
+    hs = [L / n for n, L in zip(cfg.shape, cfg.lengths)]
+    curl_st = G.apply_stencil_local(lambda p: curl(p, hs), 1, axis_name)
+    rhs_st = G.apply_stencil_local(
+        lambda wp, up: rhs_field(wp, up, cfg), 1, axis_name)
 
-    def local_step(w, bounds):
+    def local_step(f: G.DistributedField):
         me = RT.axis_index(axis_name)
-        ps, _ = RM.seed_from_mesh(w, box_lo=kw["box_lo"], box_hi=kw["box_hi"],
-                                  periodic=kw["periodic"],
-                                  threshold=cfg.remesh_threshold, dim=3)
-        # slab ownership of the re-seeded particles (the map() rule)
-        valid = ps.valid & (M.owner_of(ps.x[:, 0], bounds) == me)
-        x0, wp0 = ps.x, ps.props["w"]
+        w = f.data                                    # (n0l, n1, n2, 3)
+        row_lo = f.node_bounds[me]
+        row0 = row_lo - H                             # padded-block origin
+        ps, seed_ovf = RM.seed_from_block(
+            w, row_lo, threshold=cfg.remesh_threshold, **kw)
+        x0, wp0, valid = ps.x, ps.props["w"], ps.valid
+        ovf = seed_ovf
+
+        def eval_fields(wf):
+            """ψ solve + curl + RHS, all on local blocks."""
+            psi = PS.fft_poisson_slab_local(-wf, cfg.lengths, axis_name)
+            (u,) = curl_st(psi)
+            (r,) = rhs_st(wf, u)
+            return u, r
+
+        def gather(fld, x):
+            """M2P against a ghost_get-padded block."""
+            pad = G.halo_pad(fld, H, axis_name, periodic=True)
+            return IP.m2p_block(pad, x, valid, row0, **kw)
+
+        def deposit(x, wp):
+            """P2M into the local+halo block, then ghost_put halo-reduce."""
+            blk, drop = IP.p2m_block(x, wp, valid, row0,
+                                     block_rows=n0l + 2 * H, **kw)
+            return G.halo_reduce(blk, H, axis_name, periodic=True), drop
+
         # stage 1
-        u0 = velocity_from_vorticity(w, cfg)
-        r0 = rhs_field(w, u0, cfg)
-        up = IP.m2p(u0, x0, valid, **kw)
-        rp = IP.m2p(r0, x0, valid, **kw)
+        u0, r0 = eval_fields(w)
+        up, d0 = gather(u0, x0)
+        rp, d1 = gather(r0, x0)
         L = jnp.asarray(cfg.lengths, x0.dtype)
         x1 = jnp.where(valid[:, None], jnp.mod(x0 + cfg.dt * up, L), x0)
         wp1 = wp0 + cfg.dt * rp
-        w1 = RT.psum(IP.p2m(x1, wp1, valid, **kw), axis_name)
+        w1, d2 = deposit(x1, wp1)
         # stage 2 at the predicted state
-        u1 = velocity_from_vorticity(w1, cfg)
-        r1 = rhs_field(w1, u1, cfg)
-        up1 = IP.m2p(u1, x1, valid, **kw)
-        rp1 = IP.m2p(r1, x1, valid, **kw)
+        u1, r1 = eval_fields(w1)
+        up1, d3 = gather(u1, x1)
+        rp1, d4 = gather(r1, x1)
         xf = jnp.where(valid[:, None],
                        jnp.mod(x0 + 0.5 * cfg.dt * (up + up1), L), x0)
         wpf = wp0 + 0.5 * cfg.dt * (rp + rp1)
-        return RT.psum(IP.p2m(xf, wpf, valid, **kw), axis_name)
+        wf, d5 = deposit(xf, wpf)
+        ovf = ovf + d0 + d1 + d2 + d3 + d4 + d5
+        return (dataclasses.replace(f, data=wf),
+                RT.psum(ovf, axis_name))
 
-    stepped = RT.shard_map(local_step, mesh, in_specs=(P(), P()),
-                           out_specs=P(), check_vma=False)
+    stepped = RT.shard_map(local_step, mesh,
+                           in_specs=(G.field_spec(axis_name),),
+                           out_specs=(G.field_spec(axis_name), P()),
+                           check_vma=False)
     return jax.jit(stepped)
 
 
 def run_distributed(cfg: VortexConfig, n_steps: int, mesh,
                     axis_name: str = "shards"):
-    """Distributed driver mirroring :func:`run` (uniform slab bounds)."""
-    from repro.core import dlb
-    ndev = mesh.shape[axis_name]
-    bounds = dlb.uniform_bounds(ndev, 0.0, float(cfg.lengths[0]))
+    """Distributed driver mirroring :func:`run`: the vorticity field lives
+    sharded in a DistributedField for the whole run."""
+    from repro.core import grid as G
     step = make_distributed_vic_step(mesh, cfg, axis_name)
     w = project_divfree(init_ring(cfg), cfg)
     z0 = float(centroid_z(w, cfg))
+    f = G.distribute_field(w, mesh, axis_name)
+    # accumulate the overflow on device and sync ONCE after the loop, so
+    # steps keep dispatching asynchronously (same rationale as the serial
+    # driver's jnp path skipping its per-step host sync)
+    total_ovf = jnp.zeros((), jnp.int32)
     for _ in range(n_steps):
-        w = step(w, bounds)
-    return w, z0, float(centroid_z(w, cfg))
+        f, ovf = step(f)
+        total_ovf = total_ovf + ovf
+    if int(total_ovf) != 0:
+        raise RuntimeError(
+            f"interpolation halo overflow ({int(total_ovf)} deposits/gathers "
+            f"outran the halo over {n_steps} steps); raise "
+            f"VortexConfig.mesh_halo (= {cfg.mesh_halo})")
+    return f.data, z0, float(centroid_z(f.data, cfg))

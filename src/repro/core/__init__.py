@@ -1,6 +1,8 @@
 """repro.core — OpenFPM's abstractions in JAX.
 
-Data abstractions:  ParticleSet (particles.py), distributed grids (grid.py).
+Data abstractions:  ParticleSet (particles.py), DistributedField — the
+                    slab-sharded mesh container with ghost_get/ghost_put
+                    halo mappings (grid.py).
 Decomposition:      domain.py, decomposition.py, graph_partition.py, hilbert.py.
 Mappings:           mappings.py (map / ghost_get / ghost_put).
 Acceleration:       cell_list.py (cell + Verlet lists), interactions.py.
@@ -19,5 +21,8 @@ from .particles import ParticleSet, empty, from_positions, init_grid
 from .decomposition import Decomposition, decompose, rebalance
 from .cell_list import CellList, VerletList, build_cell_list, build_verlet, grid_shape_for
 from .mappings import GhostLayer, ghost_get_local, ghost_put_local, map_particles_local
+from .grid import (DistributedField, GridOps, distribute_field, halo_pad,
+                   halo_reduce, make_field_step, make_stencil_step,
+                   serial_field)
 from .simulation import (DistributedParticles, PhysicsSpec, StepFlags,
                          make_rebalance, make_sim_step)

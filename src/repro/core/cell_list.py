@@ -227,8 +227,15 @@ def _min_image(dx: jax.Array, cl: CellList) -> jax.Array:
     return jnp.where(per, jnp.where(jnp.abs(dx) < 0.6e30, wrapped, dx), dx)
 
 
+def moved_beyond(x: jax.Array, x_build: jax.Array, valid: jax.Array,
+                 skin: float) -> jax.Array:
+    """Verlet skin criterion on raw positions: True when any valid particle
+    moved more than skin/2 since ``x_build``."""
+    d = x - x_build
+    moved2 = jnp.sum(jnp.where(valid[:, None], d, 0.0) ** 2, axis=-1)
+    return jnp.max(moved2) > (0.5 * skin) ** 2
+
+
 def needs_rebuild(ps: ParticleSet, vl: VerletList, skin: float) -> jax.Array:
     """Verlet skin criterion: rebuild when any particle moved > skin/2."""
-    d = ps.x - vl.x_build
-    moved2 = jnp.sum(jnp.where(ps.valid[:, None], d, 0.0) ** 2, axis=-1)
-    return jnp.max(moved2) > (0.5 * skin) ** 2
+    return moved_beyond(ps.x, vl.x_build, ps.valid, skin)

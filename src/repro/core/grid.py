@@ -1,15 +1,31 @@
-"""DistributedGrid — Cartesian mesh with transparent halo exchange.
+"""DistributedField — Cartesian mesh container with transparent halo exchange.
 
 OpenFPM's ``grid_dist`` (paper §3.1): a regular Cartesian mesh decomposed
 across processors, with ghost layers sized by the stencil radius populated by
-``ghost_get``. TPU rendering (DESIGN.md §2): the mesh is a plain jnp array
-sharded along its leading space axis over a mesh axis; the halo exchange is a
-pair of ``ppermute`` shifts executed inside shard_map. Stencil application is
+``ghost_get``. TPU rendering (DESIGN.md §2, §10): the mesh is a jnp array
+sharded along its leading space axis over a mesh axis, wrapped — together
+with the slab geometry (``node_bounds``: which global rows each shard owns)
+— in :class:`DistributedField`, the grid mirror of
+``simulation.DistributedParticles`` (serial is the 1-slab case of the same
+type). The two mappings are:
+
+  * ``ghost_get``  → :func:`halo_pad` — a pair of ``ppermute`` shifts
+    populating ``halo`` rows from the slab neighbors;
+  * ``ghost_put``  → :func:`halo_reduce` — the reverse: contributions that
+    local computation (e.g. an M'4 P2M scatter) deposited into the halo
+    rows are ``ppermute``-shifted back and summed into the owner's edge
+    rows. This replaces the O(full-mesh) ``psum`` rebuild a replicated
+    deposit needs with an O(halo) neighbor exchange.
+
+Stencil application is
 
     padded = halo_pad(local_block)      # communication (ghost_get)
     new    = stencil_fn(padded)[h:-h]   # local computation
 
-— the same strict communication/computation split as the paper.
+— the same strict communication/computation split as the paper. Physics
+hooks get both mappings backend-degenerate through :class:`GridOps` (the
+grid mirror of ``simulation.Reduce``): serially they are the single-device
+pad/wrap with identical semantics.
 
 The interior/boundary split for compute-comm overlap (paper §3.6) falls out
 of XLA's scheduler: the ppermute and the interior stencil have no data
@@ -17,8 +33,9 @@ dependence, so the latency-hiding scheduler overlaps them.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -82,35 +99,226 @@ def pad_axis(field: jax.Array, axis: int, halo: int, *, periodic: bool = True,
     return jnp.moveaxis(padded, 0, axis)
 
 
+# --------------------------------------------------------------------------
+# ghost_put for grids: the halo reduce
+# --------------------------------------------------------------------------
+
+def halo_reduce(padded: jax.Array, halo: int, axis_name: str, *,
+                periodic: bool = True) -> jax.Array:
+    """The grid ``ghost_put`` (inside shard_map): fold the ``halo`` leading
+    and trailing rows of a locally accumulated padded block back into their
+    owners and return the owned interior block.
+
+    ``padded`` is laid out like a :func:`halo_pad` result — rows
+    ``[0, halo)`` belong to the left slab neighbor's top edge, rows
+    ``[-halo, end)`` to the right neighbor's bottom edge. Contributions are
+    summed (the P2M merge op); non-periodic edges drop the wrap-link rows.
+    Dual to halo_pad: a scatter that deposited into ghost rows lands on the
+    owning shard exactly where a ghost_get would have read from.
+
+    Like halo_pad this is the single-hop exchange: ``halo`` must not exceed
+    the local row count (the grid ghost contract).
+    """
+    if halo == 0:
+        return padded
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
+    lo_rows = padded[:halo]       # owned by my LEFT neighbor
+    hi_rows = padded[-halo:]      # owned by my RIGHT neighbor
+    core = padded[halo:-halo]
+    right, left = RT.shift_perms(ndev)
+    # my low rows travel left; what I receive came from my right neighbor
+    from_right = RT.ppermute(lo_rows, axis_name, left)
+    from_left = RT.ppermute(hi_rows, axis_name, right)
+    if not periodic:
+        from_left = jnp.where(me == 0, jnp.zeros_like(from_left), from_left)
+        from_right = jnp.where(me == ndev - 1, jnp.zeros_like(from_right),
+                               from_right)
+    core = core.at[:halo].add(from_left)
+    return core.at[-halo:].add(from_right)
+
+
+def halo_reduce_local(padded: jax.Array, halo: int, *,
+                      periodic: bool = True) -> jax.Array:
+    """Single-device halo reduce (no collectives) with identical semantics —
+    the 1-slab degenerate of :func:`halo_reduce`: periodic pad rows wrap-add
+    into the opposite edge, non-periodic pad rows are dropped."""
+    if halo == 0:
+        return padded
+    core = padded[halo:-halo]
+    if periodic:
+        core = core.at[-halo:].add(padded[:halo])
+        core = core.at[:halo].add(padded[-halo:])
+    return core
+
+
+# --------------------------------------------------------------------------
+# The container: slab geometry carried in the type
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DistributedField:
+    """The transparently distributed mesh container (``grid_dist``), the
+    grid mirror of ``simulation.DistributedParticles``.
+
+    ``data`` is the mesh field, sharded along its leading space axis on a
+    distributed run (inside shard_map: the local slab block). ``node_bounds``
+    is the slab geometry: shard d owns global rows
+    ``node_bounds[d] <= r < node_bounds[d+1]``. Serial state is the 1-slab
+    case ``node_bounds = [0, n]`` — the same container, every backend.
+    """
+
+    data: jax.Array
+    node_bounds: jax.Array     # (n_slabs + 1,) int32
+
+    @property
+    def n_slabs(self) -> int:
+        return self.node_bounds.shape[0] - 1
+
+
+def field_spec(axis_name: str) -> "DistributedField":
+    """shard_map PartitionSpec pytree for a DistributedField."""
+    return DistributedField(data=P(axis_name), node_bounds=P())
+
+
+def serial_field(arr: jax.Array) -> DistributedField:
+    """The 1-slab (serial) container: same type, trivial bounds."""
+    return DistributedField(
+        data=arr, node_bounds=jnp.asarray([0, arr.shape[0]], jnp.int32))
+
+
+def distribute_field(arr: jax.Array, mesh: Mesh,
+                     axis_name: str) -> DistributedField:
+    """Shard a full mesh array along its leading axis over ``mesh`` and
+    record the (uniform) slab geometry in the container."""
+    ndev = int(mesh.shape[axis_name])
+    n = arr.shape[0]
+    if n % ndev:
+        raise ValueError(f"leading axis {n} not divisible by {ndev} shards")
+    data = jax.device_put(arr, NamedSharding(mesh, P(axis_name)))
+    bounds = jax.device_put(
+        jnp.asarray(np.arange(ndev + 1) * (n // ndev), jnp.int32),
+        NamedSharding(mesh, P()))
+    return DistributedField(data=data, node_bounds=bounds)
+
+
+# --------------------------------------------------------------------------
+# Backend-degenerate grid mappings for physics hooks (mirror of Reduce)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridOps:
+    """ghost_get/ghost_put handed to physics hooks. On a distributed step
+    they are the slab-neighbor collectives (:func:`halo_pad` /
+    :func:`halo_reduce`); serially they are the single-device pad/wrap with
+    identical semantics — so a hook writes its mesh communication once and
+    it is correct on every backend (the grid mirror of
+    ``simulation.Reduce``)."""
+
+    axis_name: Optional[str] = None
+    periodic: bool = True
+    fill: Optional[float] = 0.0     # None = non-periodic edge replication
+
+    @property
+    def distributed(self) -> bool:
+        return self.axis_name is not None
+
+    def ghost_get(self, field: jax.Array, halo: int) -> jax.Array:
+        """Pad the leading axis with ``halo`` rows from the slab neighbors
+        (serial: the wrap/edge/fill rows of the same semantics)."""
+        if self.axis_name is None:
+            return halo_pad_local(field, halo, periodic=self.periodic,
+                                  fill=self.fill)
+        return halo_pad(field, halo, self.axis_name, periodic=self.periodic,
+                        fill=self.fill)
+
+    def ghost_put(self, padded: jax.Array, halo: int) -> jax.Array:
+        """Halo-reduce a padded contribution block back to its owners."""
+        if self.axis_name is None:
+            return halo_reduce_local(padded, halo, periodic=self.periodic)
+        return halo_reduce(padded, halo, self.axis_name,
+                           periodic=self.periodic)
+
+    def first_row(self, n_local: int) -> jax.Array:
+        """Global index of the local block's first owned row (0 serially;
+        uniform slabs distributed — jax shards leading axes uniformly)."""
+        if self.axis_name is None:
+            return jnp.zeros((), jnp.int32)
+        return (RT.axis_index(self.axis_name) * n_local).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Stencil steps
+# --------------------------------------------------------------------------
+
+def apply_stencil_local(stencil_fn: Callable, halo: int,
+                        axis_name: Optional[str] = None, *,
+                        periodic: bool = True, fill: float = 0.0):
+    """The local engine of :func:`make_stencil_step`, reusable inside an
+    enclosing shard_map (``axis_name`` set) or serially (``None``): pad each
+    field by ``halo`` on the leading axis, apply ``stencil_fn`` to the
+    padded blocks, trim outputs of padded shape back to the interior.
+    Returns ``run(*fields) -> tuple(new_fields)``."""
+
+    def pad(f):
+        if axis_name is None:
+            return halo_pad_local(f, halo, periodic=periodic, fill=fill)
+        return halo_pad(f, halo, axis_name, periodic=periodic, fill=fill)
+
+    def run(*fields):
+        out = stencil_fn(*(pad(f) for f in fields))
+        if not isinstance(out, tuple):
+            out = (out,)
+        trimmed = []
+        for o, f in zip(out, fields):
+            if halo and o.shape[0] == f.shape[0] + 2 * halo:
+                o = o[halo:-halo]
+            trimmed.append(o)
+        return tuple(trimmed)
+
+    return run
+
+
 def make_stencil_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
                       halo: int, *, periodic: bool = True, fill: float = 0.0,
                       n_fields: int = 1):
-    """Build a jitted distributed stencil step.
+    """Build a jitted distributed stencil step over raw sharded arrays.
 
     ``stencil_fn(*padded_fields) -> tuple(new_fields)`` receives blocks padded
     by ``halo`` along the leading (sharded) axis and must return arrays of the
     padded shape (the wrapper slices the interior) or of the interior shape.
     """
     spec = P(axis_name)
-
-    def local_step(*fields):
-        padded = tuple(
-            halo_pad(f, halo, axis_name, periodic=periodic, fill=fill)
-            for f in fields)
-        out = stencil_fn(*padded)
-        if not isinstance(out, tuple):
-            out = (out,)
-        trimmed = []
-        for o, f in zip(out, fields):
-            if o.shape[0] == f.shape[0] + 2 * halo:
-                o = o[halo:-halo]
-            trimmed.append(o)
-        return tuple(trimmed)
-
+    local_step = apply_stencil_local(stencil_fn, halo, axis_name,
+                                     periodic=periodic, fill=fill)
     mapped = RT.shard_map(
         local_step, mesh,
         in_specs=tuple(spec for _ in range(n_fields)),
         out_specs=tuple(spec for _ in range(n_fields)),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def make_field_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
+                    halo: int, *, periodic: bool = True, fill: float = 0.0,
+                    n_fields: int = 1):
+    """:func:`make_stencil_step` over :class:`DistributedField` containers:
+    ``step(*fields) -> tuple(fields)`` with the slab geometry carried
+    through unchanged."""
+    local = apply_stencil_local(stencil_fn, halo, axis_name,
+                                periodic=periodic, fill=fill)
+
+    def local_step(*fields: DistributedField):
+        out = local(*(f.data for f in fields))
+        return tuple(dataclasses.replace(f, data=o)
+                     for f, o in zip(fields, out))
+
+    fspec = field_spec(axis_name)
+    mapped = RT.shard_map(
+        local_step, mesh,
+        in_specs=tuple(fspec for _ in range(n_fields)),
+        out_specs=tuple(fspec for _ in range(n_fields)),
         check_vma=False)
     return jax.jit(mapped)
 

@@ -87,6 +87,105 @@ def p2m(x: jax.Array, value: jax.Array, valid: jax.Array, *,
     return out
 
 
+# --------------------------------------------------------------------------
+# Local-block interpolation: the slab-distributed P2M/M2P legs
+# --------------------------------------------------------------------------
+# A slab shard owns rows [r0, r0+n_local) of the global leading axis plus a
+# halo. These variants scatter/gather against such a block: the leading axis
+# is addressed relative to a traced ``row0`` (so the same trace serves every
+# shard), transverse axes keep the full global extent and semantics. A valid
+# particle whose M'4 support leaves the block is dropped WHOLE and counted —
+# never clamped into the edge (which would silently corrupt it); nonzero
+# counts mean the halo must be re-provisioned (the repo-wide contract).
+
+def _block_base_frac(x, row0, n_block, shape, box_lo, box_hi, periodic):
+    """base/frac with the leading axis re-origined at global row ``row0``
+    (traced): the fractional part matches the global indexing exactly
+    (integer shifts), the global periodic seam folds via the mod. When the
+    block is wider than the global axis (the serial 1-slab case: owned rows
+    + both halos), a folded row whose support would fall off the low edge
+    is lifted by one period into the high halo — the two placements land on
+    the same global rows once the halo wraps, so either is exact."""
+    base, frac = _base_and_frac(x, shape, box_lo, box_hi, periodic)
+    n0 = shape[0]
+    rel0 = base[:, 0] - row0
+    if periodic[0]:
+        rel0 = jnp.mod(rel0, n0)
+        rel0 = jnp.where((rel0 < 1) & (rel0 + n0 <= n_block - 3),
+                         rel0 + n0, rel0)
+    return base.at[:, 0].set(rel0), frac
+
+
+def _block_ok(base0_rel, n_block):
+    """Full M'4 support (rows base-1..base+2) inside [0, n_block)."""
+    return (base0_rel >= 1) & (base0_rel <= n_block - 3)
+
+
+@partial(jax.jit, static_argnames=("block_rows", "shape", "box_lo", "box_hi",
+                                   "periodic"))
+def p2m_block(x: jax.Array, value: jax.Array, valid: jax.Array,
+              row0: jax.Array, *, block_rows: int,
+              shape: Tuple[int, ...], box_lo, box_hi, periodic):
+    """Particle→mesh onto a local slab block (rows [row0, row0+block_rows)
+    of the global mesh — normally owned rows ± a deposit halo).
+
+    ``shape``/``box_lo``/``box_hi``/``periodic`` describe the GLOBAL mesh
+    (same arguments as :func:`p2m`); ``row0`` is traced. Returns
+    ``(block, dropped)`` where ``block`` has leading dim ``block_rows`` and
+    ``dropped`` counts valid particles whose support left the block.
+    """
+    dim = len(shape)
+    base, frac = _block_base_frac(x, row0, block_rows, shape, box_lo, box_hi,
+                                  periodic)
+    ok = valid & _block_ok(base[:, 0], block_rows)
+    vec = value.ndim == 2
+    out_shape = (block_rows,) + shape[1:] + ((value.shape[1],) if vec else ())
+    out = jnp.zeros(out_shape, value.dtype)
+    vm = jnp.where(ok, 1.0, 0.0).astype(value.dtype)
+    for off in _stencil_offsets(dim):
+        idx = base + jnp.asarray(off, jnp.int32)
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        w = (w * vm).astype(value.dtype)
+        contrib = value * (w[:, None] if vec else w)
+        wrapped = _wrap_index(idx[:, 1:], shape[1:], periodic[1:])
+        out = out.at[(idx[:, 0],) + wrapped].add(contrib, mode="drop")
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return out, dropped
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
+def m2p_block(block: jax.Array, x: jax.Array, valid: jax.Array,
+              row0: jax.Array, *, shape: Tuple[int, ...], box_lo, box_hi,
+              periodic):
+    """Mesh→particle from a local slab block (a :func:`~repro.core.grid.
+    halo_pad`-padded field whose row 0 is global row ``row0``). Arguments
+    mirror :func:`m2p` with the global mesh geometry. Returns
+    ``(values, dropped)``; dropped particles read 0.
+    """
+    dim = len(shape)
+    n_block = block.shape[0]
+    base, frac = _block_base_frac(x, row0, n_block, shape, box_lo, box_hi,
+                                  periodic)
+    ok = valid & _block_ok(base[:, 0], n_block)
+    vec = block.ndim == dim + 1
+    out = jnp.zeros(x.shape[:1] + ((block.shape[-1],) if vec else ()),
+                    block.dtype)
+    safe0 = jnp.clip(base[:, 0], 1, max(n_block - 3, 1))
+    for off in _stencil_offsets(dim):
+        idx = base.at[:, 0].set(safe0) + jnp.asarray(off, jnp.int32)
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        wrapped = _wrap_index(idx[:, 1:], shape[1:], periodic[1:])
+        v = block[(idx[:, 0],) + wrapped]
+        out = out + v * (w[:, None] if vec else w).astype(block.dtype)
+    vm = ok.reshape(ok.shape + (1,) * (out.ndim - 1))
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return jnp.where(vm, out, 0), dropped
+
+
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
 def m2p(field: jax.Array, x: jax.Array, valid: jax.Array, *,
         shape: Tuple[int, ...], box_lo, box_hi, periodic) -> jax.Array:

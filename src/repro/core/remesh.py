@@ -85,6 +85,35 @@ def seed_from_mesh(field: jax.Array, *, box_lo, box_hi, periodic,
     return ParticleSet(x=x, props={"w": w}, valid=valid), overflow
 
 
+def seed_from_block(block: jax.Array, row0: jax.Array, *, shape, box_lo,
+                    box_hi, periodic, threshold: float = 0.0,
+                    capacity: int = 0) -> Tuple[ParticleSet, jax.Array]:
+    """Per-slab re-seed: :func:`seed_from_mesh` over a LOCAL slab block.
+
+    ``block`` holds rows [row0, row0 + n_local) of the global mesh described
+    by ``shape``/``box_lo``/``box_hi``/``periodic`` (the same arguments as
+    :func:`seed_from_mesh`); ``row0`` is traced, so one trace serves every
+    shard of a distributed field. Seeded particles carry GLOBAL coordinates.
+    The thresholding/compaction semantics are per-block (each shard re-seeds
+    only the nodes it owns — no replicated mesh anywhere).
+    """
+    dim = len(shape)
+    lo, h = _node_spacing(shape, box_lo, box_hi, periodic)
+    n_local = block.shape[0]
+    # a local box with the *global* spacing on every axis: axis 0 spans
+    # n_local rows (periodic spacing n·h/n ≡ h), transverse axes unchanged
+    local_lo = (0.0,) + tuple(float(v) for v in np.asarray(box_lo)[1:])
+    local_hi = (float(n_local * h[0]),) + tuple(
+        float(v) for v in np.asarray(box_hi)[1:])
+    ps, overflow = seed_from_mesh(
+        block, box_lo=local_lo, box_hi=local_hi,
+        periodic=(True,) + tuple(periodic[1:]), threshold=threshold,
+        capacity=capacity, dim=dim)
+    x0 = ps.x[:, 0] + (lo[0] + row0 * h[0]).astype(ps.x.dtype)
+    x = jnp.where(ps.valid[:, None], ps.x.at[:, 0].set(x0), ps.x)
+    return ps.replace(x=x), overflow
+
+
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
                                    "threshold", "capacity", "use_pallas",
                                    "cb", "cell_cap", "interpret"))

@@ -50,6 +50,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import cell_list as CL
 from . import dlb
+from . import grid as G
 from . import interactions as I
 from . import mappings as M
 from . import runtime as RT
@@ -70,10 +71,18 @@ class DistributedParticles:
     adaptive-slab decomposition along the slab axis: device d owns
     ``bounds[d] <= x < bounds[d+1]``. Serial state is the 1-slab case
     ``bounds = [box_lo, box_hi]`` — the same container, every backend.
+
+    ``fields`` holds the mesh state a hybrid particle-mesh physics declares
+    (``PhysicsSpec.mesh_props``): each entry is a mesh array whose leading
+    axis is the slab axis in mesh rows, sharded alongside the particles on
+    a distributed run (full arrays serially — the ``grid.DistributedField``
+    pattern riding inside the particle container). Hooks see the local
+    blocks plus ``grid.GridOps`` for ghost_get/ghost_put.
     """
 
     ps: ParticleSet
     bounds: jax.Array       # (n_slabs + 1,) float32
+    fields: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
 
     @property
     def n_slabs(self) -> int:
@@ -149,7 +158,14 @@ class StepCtx:
     ``cl`` the cell list over ``combo``; ``pair`` the cell-pair engine
     outputs over ``combo`` rows (slice ``[:ps.capacity]`` for the local
     part); ``red`` the backend-degenerate reductions; ``extras`` the
-    per-step traced inputs (e.g. SPH's ``euler`` flag)."""
+    per-step traced inputs (e.g. SPH's ``euler`` flag).
+
+    ``fields`` are the declared mesh fields (``PhysicsSpec.mesh_props``) as
+    local slab blocks (full arrays serially), and ``grid`` the
+    backend-degenerate mesh mappings (``grid.GridOps``): ``ghost_get`` to
+    pad a block from the slab neighbors, ``ghost_put`` to halo-reduce
+    deposited contributions home — so a hybrid physics writes its mesh
+    communication once, like it writes its reductions once via ``red``."""
 
     ps: ParticleSet
     combo: ParticleSet
@@ -157,6 +173,8 @@ class StepCtx:
     pair: Dict[str, jax.Array]
     red: Reduce
     extras: Dict[str, Any]
+    fields: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    grid: G.GridOps = G.GridOps()
 
 
 # --------------------------------------------------------------------------
@@ -175,12 +193,22 @@ class PhysicsSpec:
       advance(ps, red, extras) -> ps      pre-pair (e.g. MD kick+drift+wrap);
                                           runs before migration so moved
                                           particles are re-owned this step.
-      finish(ctx)  -> (ps, scalars, neighbor_overflow)
+      finish(ctx)  -> (ps, scalars, neighbor_overflow[, fields])
                                           post-pair: integrate using
                                           ``ctx.pair`` sums; return per-step
                                           scalars (e.g. SPH dt) and the
                                           overflow of any extra neighbor
                                           structure it built (0 if none).
+                                          A 4th element updates the declared
+                                          mesh fields (local interior
+                                          blocks, same shapes as
+                                          ``ctx.fields``).
+
+    ``mesh_props`` declares mesh state carried in
+    ``DistributedParticles.fields`` (leading axis = slab axis in mesh
+    rows); it lives and communicates alongside the particle fields —
+    sharded on a distributed run, whole serially — and reaches ``finish``
+    as ``ctx.fields`` + ``ctx.grid`` (ghost_get/ghost_put).
     """
 
     name: str
@@ -200,6 +228,7 @@ class PhysicsSpec:
     extras_example: Tuple[str, ...] = ()     # names of per-step extras
     bucket_cap: int = 512                    # map() per-destination bucket
     ghost_cap: int = 1024                    # ghost_get per-side capacity
+    mesh_props: Tuple[str, ...] = ()         # mesh fields in state.fields
 
 
 def _grid_kw(spec: PhysicsSpec, padded: bool, slab_axis: int):
@@ -220,10 +249,14 @@ def _grid_kw(spec: PhysicsSpec, padded: bool, slab_axis: int):
 
 def _finish(spec: PhysicsSpec, ctx: StepCtx):
     if spec.finish is None:
-        return ctx.ps, {}, _Z32()
+        return ctx.ps, {}, _Z32(), ctx.fields
     out = spec.finish(ctx)
-    ps, scalars, nb_ovf = out
-    return ps, scalars, jnp.asarray(nb_ovf, jnp.int32)
+    if len(out) == 4:
+        ps, scalars, nb_ovf, fields = out
+    else:
+        ps, scalars, nb_ovf = out
+        fields = ctx.fields
+    return ps, scalars, jnp.asarray(nb_ovf, jnp.int32), fields
 
 
 # --------------------------------------------------------------------------
@@ -252,23 +285,27 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     pair_kw = dict(out=spec.pair_out, r_cut=rc, prop_names=spec.pair_props,
                    backend=spec.backend, interpret=spec.interpret)
 
+    mesh_periodic = bool(spec.periodic[slab_axis])
+
     if mesh is None:
         cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
 
         def step(state: DistributedParticles, extras):
             red = Reduce(None)
+            grid = G.GridOps(None, periodic=mesh_periodic)
             ps = state.ps
             if spec.advance is not None:
                 ps = spec.advance(ps, red, extras)
             cl = CL.build_cell_list(ps, **cl_kw)
             pair = I.apply_pair_kernel(ps, cl, body, **pair_kw)
-            ps, scalars, nb_ovf = _finish(
+            ps, scalars, nb_ovf, fields = _finish(
                 spec, StepCtx(ps=ps, combo=ps, cl=cl, pair=pair, red=red,
-                              extras=extras))
+                              extras=extras, fields=state.fields, grid=grid))
             flags = StepFlags(cell=jnp.asarray(cl.overflow, jnp.int32),
                               neighbor=nb_ovf, bucket=_Z32(), ghost=_Z32(),
                               ghost_contract=_Z32())
-            return dataclasses.replace(state, ps=ps), flags, scalars
+            return (dataclasses.replace(state, ps=ps, fields=fields), flags,
+                    scalars)
 
         return jax.jit(step)
 
@@ -280,6 +317,7 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
 
     def local_step(state: DistributedParticles, extras):
         red = Reduce(axis_name)
+        grid = G.GridOps(axis_name, periodic=per_slab)
         ps, bounds = state.ps, state.bounds
         if spec.advance is not None:
             ps = spec.advance(ps, red, extras)
@@ -301,23 +339,32 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
             valid=jnp.concatenate([ps.valid, gp.valid]))
         cl = CL.build_cell_list(combo, **cl_kw)
         pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
-        ps, scalars, nb_ovf = _finish(
+        ps, scalars, nb_ovf, fields = _finish(
             spec, StepCtx(ps=ps, combo=combo, cl=cl, pair=pair, red=red,
-                          extras=extras))
+                          extras=extras, fields=state.fields, grid=grid))
         flags = StepFlags(
             cell=RT.pmax(jnp.asarray(cl.overflow, jnp.int32), axis_name),
             neighbor=RT.pmax(nb_ovf, axis_name),
             bucket=jnp.asarray(ovf_bucket, jnp.int32),
             ghost=jnp.asarray(ovf_ghost, jnp.int32),
             ghost_contract=contract)
-        return dataclasses.replace(state, ps=ps), flags, scalars
+        return (dataclasses.replace(state, ps=ps, fields=fields), flags,
+                scalars)
 
-    state_spec = DistributedParticles(ps=P(axis_name), bounds=P())
+    state_spec = _state_spec(spec, axis_name)
     stepped = RT.shard_map(local_step, mesh,
                            in_specs=(state_spec, P()),
                            out_specs=(state_spec, P(), P()),
                            check_vma=False)
     return jax.jit(stepped)
+
+
+def _state_spec(spec: PhysicsSpec, axis_name: str) -> DistributedParticles:
+    """shard_map specs for the container: particles and declared mesh
+    fields shard their leading dim, bounds replicate."""
+    return DistributedParticles(
+        ps=P(axis_name), bounds=P(),
+        fields={k: P(axis_name) for k in spec.mesh_props})
 
 
 @functools.lru_cache(maxsize=None)
@@ -349,9 +396,12 @@ def make_rebalance(physics, cfg, mesh, *, axis_name: str = "shards",
         new_bounds = dlb.enforce_min_width(new_bounds, min_w)
         ps, ovf = M.map_particles_local(ps, new_bounds, axis_name, b_cap,
                                         slab_axis)
-        return DistributedParticles(ps=ps, bounds=new_bounds), ovf
+        # mesh fields stay put: DLB moves the PARTICLE slab bounds only —
+        # the mesh decomposition is the uniform row split of the arrays
+        return (DistributedParticles(ps=ps, bounds=new_bounds,
+                                     fields=state.fields), ovf)
 
-    state_spec = DistributedParticles(ps=P(axis_name), bounds=P())
+    state_spec = _state_spec(spec, axis_name)
     fn = RT.shard_map(local, mesh, in_specs=(state_spec,),
                       out_specs=(state_spec, P()), check_vma=False)
     return jax.jit(fn)
@@ -377,23 +427,28 @@ def _serial_bounds(lo: float, hi: float) -> jax.Array:
     return jnp.asarray([lo, hi], jnp.float32)
 
 
-def serial_state(ps: ParticleSet, physics, cfg,
-                 slab_axis: int = 0) -> DistributedParticles:
+def serial_state(ps: ParticleSet, physics, cfg, slab_axis: int = 0,
+                 fields: Optional[Dict[str, jax.Array]] = None
+                 ) -> DistributedParticles:
     """The 1-slab (serial) container: same state type, trivial bounds."""
     spec = physics(cfg)
     return DistributedParticles(
         ps=ps, bounds=_serial_bounds(float(spec.box_lo[slab_axis]),
-                                     float(spec.box_hi[slab_axis])))
+                                     float(spec.box_hi[slab_axis])),
+        fields=dict(fields or {}))
 
 
 def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
                axis_name: str = "shards", slab_axis: int = 0,
                cap_per_dev: Optional[int] = None, cap_factor: float = 3.0,
-               bounds: Optional[jax.Array] = None) -> DistributedParticles:
+               bounds: Optional[jax.Array] = None,
+               fields: Optional[Dict[str, jax.Array]] = None
+               ) -> DistributedParticles:
     """Host-side 'global map' (paper: distributed read + global map):
     scatter every valid particle of ``ps0`` into its owning device's slot
     block (device d owns slots [d·cap, (d+1)·cap)), add the ``id`` prop,
-    and shard the result over ``mesh``."""
+    and shard the result over ``mesh``. ``fields`` (full mesh arrays,
+    leading axis = slab axis rows) are sharded alongside."""
     spec = physics(cfg)
     ndev = mesh.shape[axis_name]
     ps0 = with_ids(ps0)
@@ -429,4 +484,11 @@ def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
     ps = jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
     bounds = jax.device_put(jnp.asarray(bounds, jnp.float32),
                             NamedSharding(mesh, P()))
-    return DistributedParticles(ps=ps, bounds=bounds)
+    for k, v in (fields or {}).items():
+        if v.shape[0] % ndev:
+            raise ValueError(
+                f"mesh field {k!r}: leading axis {v.shape[0]} not divisible "
+                f"by {ndev} shards (GridOps.first_row assumes uniform slabs)")
+    sharded_fields = {k: jax.device_put(v, sh)
+                      for k, v in (fields or {}).items()}
+    return DistributedParticles(ps=ps, bounds=bounds, fields=sharded_fields)

@@ -150,6 +150,81 @@ def m2p_fused_bucketed(buckets: InterpBuckets, fields, valid, *, shape,
     return tuple(out)
 
 
+# --------------------------------------------------------------------------
+# Local-block legs (slab-distributed P2M/M2P, DESIGN.md §10)
+# --------------------------------------------------------------------------
+# A slab shard deposits into / gathers from a block of ``block_rows`` global
+# rows starting at traced ``row0`` (owned rows ± halo) instead of the global
+# mesh. The Pallas kernels are torus kernels, so the block is embedded in a
+# local torus: rows padded up to a multiple of ``cb``, positions re-origined
+# at the block start. Particles whose M'4 support leaves the block are
+# masked to the trash bucket and counted (same drop-and-surface contract as
+# ``core.interp.p2m_block`` — the oracle these are tested against); for
+# kept particles the torus wrap never engages, so results match the oracle.
+
+def _block_frame(x, valid, row0, block_rows, shape, box_lo, box_hi,
+                 periodic, cb):
+    """(x_local, ok, padded_rows, local box) for a block embedded in a
+    cb-aligned local torus."""
+    from repro.core import interp as IP
+    lo, h = IP._node_spacing(shape, box_lo, box_hi, periodic)
+    base, frac = IP._block_base_frac(x, row0, block_rows, shape, box_lo,
+                                     box_hi, periodic)
+    ok = valid & IP._block_ok(base[:, 0], block_rows)
+    rows_k = -(-block_rows // cb) * cb
+    # local coordinate rebuilt from the folded relative row + exact frac —
+    # the kernel re-derives the same (base, frac) the oracle committed to
+    x0_rel = (base[:, 0].astype(x.dtype) + frac[:, 0]) \
+        * jnp.asarray(h[0], x.dtype)
+    x_loc = x.at[:, 0].set(x0_rel)
+    x_loc = jnp.where(ok[:, None], x_loc,
+                      jnp.full_like(x_loc, ParticleSet.FILL))
+    local_lo = (0.0,) + tuple(float(v) for v in np.asarray(box_lo)[1:])
+    local_hi = (float(rows_k * h[0]),) + tuple(
+        float(v) for v in np.asarray(box_hi)[1:])
+    return x_loc, ok, rows_k, local_lo, local_hi
+
+
+def p2m_block(x, value, valid, row0, *, block_rows: int, shape, box_lo,
+              box_hi, periodic, cb: int = DEFAULT_CB, cell_cap: int = 0,
+              interpret=None):
+    """Pallas P2M onto a local slab block — drop-in for
+    ``core.interp.p2m_block`` (periodic global axes only). Returns
+    ``(block, overflow)``; overflow sums dropped-support particles and
+    bucket-capacity drops."""
+    x_loc, ok, rows_k, lo_l, hi_l = _block_frame(
+        x, valid, row0, block_rows, shape, box_lo, box_hi, periodic, cb)
+    kw = dict(shape=(rows_k,) + tuple(shape[1:]), box_lo=lo_l, box_hi=hi_l,
+              periodic=tuple(periodic), cb=cb)
+    b = bucket_particles(x_loc, ok, cell_cap=cell_cap, **kw)
+    vec = value.ndim == 2
+    vmask = ok[:, None] if vec else ok
+    out = p2m_bucketed(b, jnp.where(vmask, value, 0), interpret=interpret,
+                       **kw)
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return out[:block_rows], b.overflow + dropped
+
+
+def m2p_fused_block(blocks, x, valid, row0, *, shape, box_lo, box_hi,
+                    periodic, cb: int = DEFAULT_CB, cell_cap: int = 0,
+                    interpret=None):
+    """Fused Pallas M2P from local slab blocks (each ``(block_rows, ...)``,
+    all the same rows) — the block counterpart of :func:`m2p_fused`.
+    Returns ``(tuple(values), overflow)``; dropped particles read 0."""
+    blocks = tuple(blocks)
+    block_rows = blocks[0].shape[0]
+    x_loc, ok, rows_k, lo_l, hi_l = _block_frame(
+        x, valid, row0, block_rows, shape, box_lo, box_hi, periodic, cb)
+    kw = dict(shape=(rows_k,) + tuple(shape[1:]), box_lo=lo_l, box_hi=hi_l,
+              periodic=tuple(periodic), cb=cb)
+    pad = [(0, rows_k - block_rows)] + [(0, 0)]
+    fields = tuple(jnp.pad(f, pad + [(0, 0)] * (f.ndim - 2)) for f in blocks)
+    b = bucket_particles(x_loc, ok, cell_cap=cell_cap, **kw)
+    out = m2p_fused_bucketed(b, fields, ok, interpret=interpret, **kw)
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return out, b.overflow + dropped
+
+
 def p2m(x, value, valid, *, shape, box_lo, box_hi, periodic,
         cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
         return_overflow: bool = False):

@@ -175,19 +175,29 @@ def test_dem_distributed_matches_serial(mesh8):
 
 
 def test_vortex_distributed_matches_serial(mesh8):
-    """Hybrid particle-mesh: the sharded-particle VIC step (per-slab
-    remesh seeding via the map() ownership rule, local M'4 M2P/P2M legs,
-    psum field rebuild) equals the serial vic_step."""
+    """Hybrid particle-mesh with BOTH halves sharded: the VIC step runs on
+    a grid.DistributedField (per-slab re-seed from the local block,
+    slab-decomposed FFT Poisson, ghost_get stencils, M'4 legs against
+    local+halo blocks, ghost_put halo-reduce deposit — no replicated
+    vorticity/velocity arrays, no full-mesh psum) and equals the serial
+    vic_step."""
+    from repro.core import grid as G
     cfg = V.VortexConfig(shape=(32, 16, 16), lengths=(8.0, 4.0, 4.0),
                          dt=0.02)
-    from repro.core import dlb
-    bounds = dlb.uniform_bounds(NDEV, 0.0, float(cfg.lengths[0]))
     step = V.make_distributed_vic_step(mesh8, cfg, axis_name=DC.AXIS)
     w_s = V.project_divfree(V.init_ring(cfg), cfg)
-    w_d = w_s
+    f = G.distribute_field(w_s, mesh8, DC.AXIS)
+    # the mesh field is genuinely sharded: 1/NDEV of the rows per device
+    local_rows = {s.data.shape[0] for s in f.data.addressable_shards}
+    assert local_rows == {cfg.shape[0] // NDEV}
     for _ in range(3):
         w_s, ovf = V.vic_step(w_s, cfg)
         assert int(ovf) == 0
-        w_d = step(w_d, bounds)
-    err = float(jnp.abs(w_s - w_d).max()) / (float(jnp.abs(w_s).max()) + 1e-9)
+        f, ovf_d = step(f)
+        assert int(ovf_d) == 0
+    err = (float(jnp.abs(w_s - f.data).max())
+           / (float(jnp.abs(w_s).max()) + 1e-9))
     assert err <= TOL, err
+    # the stepped field is still sharded (no gather crept into the step)
+    local_rows = {s.data.shape[0] for s in f.data.addressable_shards}
+    assert local_rows == {cfg.shape[0] // NDEV}

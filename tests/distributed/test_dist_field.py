@@ -1,0 +1,287 @@
+"""The distributed mesh layer (DESIGN.md §10): DistributedField container,
+ghost_get/ghost_put duality (halo_pad / halo_reduce), the halo-reduce P2M
+against the old full-mesh psum deposit, the slab-decomposed FFT Poisson
+solve, and mesh fields riding through make_sim_step — all on 8 forced host
+devices against serial / numpy oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from benchmarks import dist_common as DC
+from repro.core import grid as G
+from repro.core import interactions as I
+from repro.core import interp as IP
+from repro.core import runtime as RT
+from repro.core import simulation as SIM
+from repro.core.particles import ParticleSet, from_positions
+from repro.numerics import poisson as PS
+
+NDEV = 8
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return DC.make_submesh(NDEV)
+
+
+def _sharded(mesh, arr):
+    return jax.device_put(arr, NamedSharding(mesh, P(DC.AXIS)))
+
+
+# --------------------------------------------------------------------------
+# ghost_get: halo_pad vs a numpy oracle, including non-periodic fill=None
+# --------------------------------------------------------------------------
+
+def _np_halo_oracle(f, halo, periodic, fill):
+    """Per-shard padded blocks from a global numpy edge/wrap/fill pad."""
+    if periodic:
+        g = np.concatenate([f[-halo:], f, f[:halo]])
+    elif fill is None:
+        g = np.concatenate([f[:1].repeat(halo, 0), f, f[-1:].repeat(halo, 0)])
+    else:
+        pad = np.full((halo,) + f.shape[1:], fill, f.dtype)
+        g = np.concatenate([pad, f, pad])
+    nl = f.shape[0] // NDEV
+    return np.stack([g[d * nl:(d + 1) * nl + 2 * halo]
+                     for d in range(NDEV)])
+
+
+@pytest.mark.parametrize("periodic,fill", [(True, 0.0), (False, 0.0),
+                                           (False, None), (False, 1.5)])
+def test_halo_pad_matches_numpy_oracle(mesh8, periodic, fill):
+    """Pin halo_pad semantics — in particular the non-periodic ``fill=None``
+    edge replication, which must replicate the GLOBAL boundary rows (built
+    from the local block only on the edge ranks that own them)."""
+    halo = 2
+    rng = np.random.default_rng(3)
+    f = rng.normal(size=(32, 5)).astype(np.float32)
+
+    def local(blk):
+        return G.halo_pad(blk, halo, DC.AXIS, periodic=periodic, fill=fill)
+
+    fn = jax.jit(RT.shard_map(local, mesh8, in_specs=(P(DC.AXIS),),
+                              out_specs=P(DC.AXIS), check_vma=False))
+    out = np.asarray(fn(_sharded(mesh8, jnp.asarray(f))))
+    got = out.reshape(NDEV, -1, 5)
+    exp = _np_halo_oracle(f, halo, periodic, fill)
+    assert np.array_equal(got, exp), np.abs(got - exp).max()
+
+
+def test_halo_pad_local_is_the_1slab_case():
+    """GridOps serial degeneracy: the single-device pad equals the global
+    oracle with one slab."""
+    rng = np.random.default_rng(4)
+    f = rng.normal(size=(16, 3)).astype(np.float32)
+    for periodic, fill in [(True, 0.0), (False, None), (False, 2.0)]:
+        ops = G.GridOps(None, periodic=periodic, fill=fill)
+        got = np.asarray(G.halo_pad_local(jnp.asarray(f), 2,
+                                          periodic=periodic, fill=fill))
+        if periodic:
+            exp = np.concatenate([f[-2:], f, f[:2]])
+        elif fill is None:   # edge replication rides through GridOps too
+            exp = np.concatenate([f[:1].repeat(2, 0), f, f[-1:].repeat(2, 0)])
+        else:
+            pad = np.full((2, 3), fill, np.float32)
+            exp = np.concatenate([pad, f, pad])
+        assert np.array_equal(got, exp)
+        # the ops wrapper routes to the same function
+        assert np.array_equal(np.asarray(ops.ghost_get(jnp.asarray(f), 2)),
+                              exp)
+
+
+# --------------------------------------------------------------------------
+# ghost_put: the halo-reduce P2M vs the old full-mesh psum deposit
+# --------------------------------------------------------------------------
+
+def _deposit_fixture(seed=0, n=512):
+    """Particles across the whole box — including rows straddling every
+    slab face, so deposits cross shard boundaries in both directions."""
+    shape, lengths = (32, 8, 8), (8.0, 4.0, 4.0)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1, size=(n, 3)).astype(np.float32) * np.asarray(
+        lengths, np.float32)
+    # pin a band of particles right onto each slab face
+    faces = np.arange(1, NDEV) * (lengths[0] / NDEV)
+    x[:len(faces) * 8, 0] = np.repeat(faces, 8) + np.tile(
+        np.linspace(-0.3, 0.3, 8), len(faces)).astype(np.float32)
+    w = rng.normal(size=(n, 3)).astype(np.float32)
+    kw = dict(shape=shape, box_lo=(0.0, 0.0, 0.0), box_hi=lengths,
+              periodic=(True, True, True))
+    return jnp.asarray(x), jnp.asarray(w), kw
+
+
+def test_p2m_halo_reduce_matches_full_psum(mesh8):
+    """The tentpole equivalence: P2M via local-block deposit + ghost_put
+    halo-reduce must match (a) the old replicated-mesh full-psum deposit
+    and (b) the serial global P2M, ≤1e-6 — including the particles that
+    deposit across slab boundaries."""
+    x, w, kw = _deposit_fixture()
+    n0 = kw["shape"][0]
+    n0l = n0 // NDEV
+    H = 2
+    h0 = kw["box_hi"][0] / n0
+    serial = IP.p2m(x, w, jnp.ones(x.shape[0], bool), **kw)
+
+    def local(xs, ws):
+        me = RT.axis_index(DC.AXIS)
+        # each shard owns the particles of its slab (the map() ownership)
+        row = jnp.floor(xs[:, 0] / h0).astype(jnp.int32)
+        mine = (row // n0l) == me
+        row0 = me * n0l - H
+        blk, drop = IP.p2m_block(xs, ws, mine, row0,
+                                 block_rows=n0l + 2 * H, **kw)
+        reduced = G.halo_reduce(blk, H, DC.AXIS, periodic=True)
+        # the old path: scatter into a replicated global mesh, then psum
+        psummed = RT.psum(IP.p2m(xs, ws, mine, **kw), DC.AXIS)
+        return reduced, psummed, RT.psum(drop, DC.AXIS)
+
+    fn = jax.jit(RT.shard_map(local, mesh8, in_specs=(P(), P()),
+                              out_specs=(P(DC.AXIS), P(), P()),
+                              check_vma=False))
+    reduced, psummed, drop = fn(x, w)
+    assert int(drop) == 0
+    err_new_old = float(jnp.abs(reduced - psummed).max())
+    err_new_serial = float(jnp.abs(reduced - serial).max())
+    assert err_new_old <= 1e-6, err_new_old
+    assert err_new_serial <= 1e-6, err_new_serial
+
+
+def test_m2p_block_matches_global_gather(mesh8):
+    """The gather leg: M2P from a ghost_get-padded block equals the global
+    M2P for slab-owned particles."""
+    x, _, kw = _deposit_fixture(seed=1)
+    n0 = kw["shape"][0]
+    n0l = n0 // NDEV
+    H = 2
+    h0 = kw["box_hi"][0] / n0
+    rng = np.random.default_rng(7)
+    field = jnp.asarray(rng.normal(size=kw["shape"] + (3,)).astype(np.float32))
+    serial = IP.m2p(field, x, jnp.ones(x.shape[0], bool), **kw)
+
+    def local(blk, xs):
+        me = RT.axis_index(DC.AXIS)
+        row = jnp.floor(xs[:, 0] / h0).astype(jnp.int32)
+        mine = (row // n0l) == me
+        pad = G.halo_pad(blk, H, DC.AXIS, periodic=True)
+        vals, drop = IP.m2p_block(pad, xs, mine, me * n0l - H, **kw)
+        # stitch shards back: sum is exact since ownership partitions
+        return RT.psum(jnp.where(mine[:, None], vals, 0.0), DC.AXIS), \
+            RT.psum(drop, DC.AXIS)
+
+    fn = jax.jit(RT.shard_map(local, mesh8, in_specs=(P(DC.AXIS), P()),
+                              out_specs=(P(), P()), check_vma=False))
+    got, drop = fn(_sharded(mesh8, field), x)
+    assert int(drop) == 0
+    err = float(jnp.abs(got - serial).max())
+    assert err <= 1e-5, err
+
+
+# --------------------------------------------------------------------------
+# Slab-decomposed FFT Poisson
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("components", [0, 3])
+def test_slab_fft_poisson_matches_serial(mesh8, components):
+    shape, lengths = (32, 16, 16), (8.0, 4.0, 4.0)
+    rng = np.random.default_rng(11)
+    full = shape + ((components,) if components else ())
+    rhs = jnp.asarray(rng.normal(size=full).astype(np.float32))
+    ref = PS.fft_poisson(rhs, lengths)
+    solve = PS.make_fft_poisson_slab(mesh8, DC.AXIS, lengths)
+    got = solve(_sharded(mesh8, rhs))
+    err = float(jnp.abs(ref - got).max())
+    assert err <= 1e-5, err
+
+
+def test_slab_fft_poisson_1dev_degenerates_to_serial():
+    mesh1 = DC.make_submesh(1)
+    shape, lengths = (16, 8, 8), (4.0, 2.0, 2.0)
+    rng = np.random.default_rng(12)
+    rhs = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    solve = PS.make_fft_poisson_slab(mesh1, DC.AXIS, lengths)
+    assert np.array_equal(np.asarray(solve(rhs)),
+                          np.asarray(PS.fft_poisson(rhs, lengths)))
+
+
+# --------------------------------------------------------------------------
+# Mesh fields riding the simulation layer (PhysicsSpec.mesh_props)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ToyCfg:
+    shape: tuple = (32, 8, 8)
+    box: tuple = (8.0, 4.0, 4.0)
+    dt: float = 0.08
+    diff: float = 0.05
+    n: int = 256
+
+
+def toy_physics(cfg: ToyCfg):
+    """Hybrid toy: non-interacting particles drift +x (crossing slab
+    faces, so map() migrates them) while depositing unit mass onto a mesh
+    field that diffuses — deposit needs ghost_put, diffusion ghost_get."""
+    kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0), box_hi=cfg.box,
+              periodic=(True, True, True))
+    H = 2
+    h0 = cfg.box[0] / cfg.shape[0]
+
+    def body(dx, r2, ok, wi, wj):
+        return {"f": I.Radial(jnp.zeros_like(r2))}
+
+    def advance(ps, red, extras):
+        x = ps.x.at[:, 0].add(cfg.dt)
+        x = jnp.mod(x, jnp.asarray(cfg.box, x.dtype))
+        return ps.replace(x=jnp.where(ps.valid[:, None], x, ps.x))
+
+    def finish(ctx):
+        rho = ctx.fields["rho"]
+        n_local = rho.shape[0]
+        row0 = ctx.grid.first_row(n_local) - H
+        mass = jnp.where(ctx.ps.valid, 1.0, 0.0)
+        blk, drop = IP.p2m_block(ctx.ps.x, mass, ctx.ps.valid, row0,
+                                 block_rows=n_local + 2 * H, **kw)
+        deposit = ctx.grid.ghost_put(blk, H)
+        pad = ctx.grid.ghost_get(rho, 1)
+        lap = (jnp.roll(pad, 1, 0) + jnp.roll(pad, -1, 0) - 2 * pad)[1:-1]
+        rho = rho + cfg.diff * lap + deposit
+        return ctx.ps, {}, ctx.red.max(drop), {"rho": rho}
+
+    return SIM.PhysicsSpec(
+        name="toy_mesh", box_lo=(0.0, 0.0, 0.0), box_hi=cfg.box,
+        periodic=(True, True, True), r_cut=0.5, cell_cap=64,
+        pair_out={"f": "radial"}, make_body=lambda: body,
+        advance=advance, finish=finish, mesh_props=("rho",))
+
+
+def test_mesh_fields_ride_make_sim_step(mesh8):
+    """A PhysicsSpec-declared mesh field lives in the container, shards
+    with the particles, and communicates via ctx.grid — serial ≡ 8-device
+    by construction."""
+    cfg = ToyCfg()
+    rng = np.random.default_rng(21)
+    x = rng.uniform(0, 1, (cfg.n, 3)).astype(np.float32) * np.asarray(
+        cfg.box, np.float32)
+    ps0 = SIM.with_ids(from_positions(jnp.asarray(x)))
+    rho0 = jnp.zeros(cfg.shape, jnp.float32)
+
+    state_s = SIM.serial_state(ps0, toy_physics, cfg, fields={"rho": rho0})
+    step_s = SIM.make_sim_step(toy_physics, cfg)
+    state_d = SIM.distribute(ps0, toy_physics, cfg, mesh8, axis_name=DC.AXIS,
+                             fields={"rho": rho0})
+    step_d = SIM.make_sim_step(toy_physics, cfg, mesh8, axis_name=DC.AXIS)
+
+    for _ in range(6):
+        state_s, flags_s, _ = step_s(state_s, {})
+        state_d, flags_d, _ = step_d(state_d, {})
+        assert int(flags_s.any()) == 0
+        assert int(flags_d.any()) == 0, jax.tree.map(int, flags_d)
+
+    rho_s = np.asarray(state_s.fields["rho"])
+    rho_d = np.asarray(state_d.fields["rho"])
+    assert rho_s.sum() > cfg.n * 5  # deposits actually landed
+    err = np.abs(rho_s - rho_d).max() / (np.abs(rho_s).max() + 1e-9)
+    assert err <= 1e-5, err

@@ -329,3 +329,83 @@ def test_remesh_conserves_total_vorticity():
     np.testing.assert_allclose(float(mesh.sum()), float(w.sum()), rtol=1e-5)
     np.testing.assert_allclose(float(jnp.sum(ps.props["w"])),
                                float(w.sum()), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Local-block interpolation + serial grid ghost_put (DESIGN.md §10):
+# serial is the 1-slab case of the same block machinery
+# --------------------------------------------------------------------------
+
+def _block_interp_case(seed=5, n=300):
+    shape = (16, 8, 8)
+    kw = dict(shape=shape, box_lo=(0., 0., 0.), box_hi=(2., 1., 1.),
+              periodic=(True, True, True))
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    x = jax.random.uniform(ks[0], (n, 3)) * jnp.asarray(kw["box_hi"])
+    val = jax.random.normal(ks[1], (n, 3))
+    valid = jax.random.uniform(ks[2], (n,)) > 0.2
+    return kw, x, val, valid
+
+
+def test_p2m_block_serial_1slab_equals_global():
+    """p2m onto the whole axis as one block + halo_reduce_local == the
+    global p2m — the serial degenerate of the distributed deposit."""
+    from repro.core import grid as G
+    kw, x, val, valid = _block_interp_case()
+    H = 2
+    n0 = kw["shape"][0]
+    blk, drop = IP.p2m_block(x, val, valid, jnp.asarray(-H, jnp.int32),
+                             block_rows=n0 + 2 * H, **kw)
+    assert int(drop) == 0
+    got = G.halo_reduce_local(blk, H, periodic=True)
+    ref = IP.p2m(x, val, valid, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_m2p_block_serial_1slab_equals_global():
+    from repro.core import grid as G
+    kw, x, _, valid = _block_interp_case(seed=6)
+    H = 2
+    field = jax.random.normal(jax.random.PRNGKey(9), kw["shape"] + (3,))
+    pad = G.halo_pad_local(field, H, periodic=True)
+    got, drop = IP.m2p_block(pad, x, valid, jnp.asarray(-H, jnp.int32), **kw)
+    assert int(drop) == 0
+    ref = IP.m2p(field, x, valid, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_halo_reduce_local_inverts_pad_mass():
+    """ghost_put ∘ ghost_get adds each pad row back onto its owner: total
+    mass of pad + interior is conserved, and a zero-halo block is identity."""
+    from repro.core import grid as G
+    f = jax.random.normal(jax.random.PRNGKey(3), (12, 4))
+    pad = G.halo_pad_local(f, 2, periodic=True)
+    red = G.halo_reduce_local(pad, 2, periodic=True)
+    np.testing.assert_allclose(float(red.sum()), float(pad.sum()), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(G.halo_reduce_local(f, 0)),
+                               np.asarray(f))
+    # non-periodic: the pad rows are discarded, interior survives intact
+    pad_np = G.halo_pad_local(f, 2, periodic=False, fill=7.0)
+    np.testing.assert_allclose(
+        np.asarray(G.halo_reduce_local(pad_np, 2, periodic=False)),
+        np.asarray(f))
+
+
+def test_seed_from_block_is_a_slab_of_seed_from_mesh():
+    """Per-slab re-seed: block seeding with a traced row offset reproduces
+    the corresponding rows of the global re-seed, in global coordinates."""
+    from repro.core import remesh as RM
+    kw = dict(box_lo=(0., 0.), box_hi=(2., 1.), periodic=(True, True))
+    field = jax.random.normal(jax.random.PRNGKey(4), (16, 8))
+    ps_all, _ = RM.seed_from_mesh(field, dim=2, **kw)
+    row0 = 4
+    ps_blk, ovf = RM.seed_from_block(field[row0:row0 + 4],
+                                     jnp.asarray(row0, jnp.int32),
+                                     shape=(16, 8), **kw)
+    assert int(ovf) == 0
+    sel = slice(row0 * 8, (row0 + 4) * 8)   # C-order rows of the slab
+    np.testing.assert_allclose(np.asarray(ps_blk.x),
+                               np.asarray(ps_all.x[sel]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ps_blk.props["w"]),
+                               np.asarray(ps_all.props["w"][sel]), atol=0)

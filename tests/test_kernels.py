@@ -225,6 +225,72 @@ def test_m4_m2p_matches_oracle(dim, seed, edge):
                                np.asarray(g_ref) / scale, atol=1e-5)
 
 
+def _block_case(seed, ndev=4, H=2):
+    """A slab view of the 3-D _interp_case: block rows of shard ``me`` of
+    ``ndev``, particles owned by the slab (the distributed-VIC layout)."""
+    from repro.core import interp as IP
+    kw, x, val, valid, fk = _interp_case(3, seed)
+    n0 = kw["shape"][0]
+    n0l = n0 // ndev
+    h0 = kw["box_hi"][0] / n0
+    me = 1
+    row = jnp.floor(x[:, 0] / h0).astype(jnp.int32)
+    mine = valid & ((row // n0l) == me)
+    row0 = jnp.asarray(me * n0l - H, jnp.int32)
+    return kw, x, val, mine, fk, n0l, H, row0, IP
+
+
+@pytest.mark.parametrize("seed", [11, 12])
+def test_m4_p2m_block_matches_block_oracle(seed):
+    """The kernel subsystem's local-block deposit leg vs the core.interp
+    block oracle (and its drop count)."""
+    kw, x, val, mine, _, n0l, H, row0, IP = _block_case(seed)
+    blk_ref, drop_ref = IP.p2m_block(x, val, mine, row0,
+                                     block_rows=n0l + 2 * H, **kw)
+    blk_k, ovf_k = M4.p2m_block(x, val, mine, row0, block_rows=n0l + 2 * H,
+                                cell_cap=256, interpret=True, **kw)
+    assert int(drop_ref) == 0 and int(ovf_k) == 0
+    scale = float(jnp.abs(blk_ref).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(blk_k) / scale,
+                               np.asarray(blk_ref) / scale, atol=1e-5)
+
+
+def test_m4_m2p_block_matches_block_oracle():
+    kw, x, _, mine, fk, n0l, H, row0, IP = _block_case(13)
+    u = jax.random.normal(fk, kw["shape"] + (3,))
+    r = jax.random.normal(jax.random.fold_in(fk, 1), kw["shape"])
+    # the ghost_get-padded slab blocks the distributed step would hold
+    rows = jnp.arange(-H, n0l + H) + (row0 + H)
+    u_blk = u[jnp.mod(rows, kw["shape"][0])]
+    r_blk = r[jnp.mod(rows, kw["shape"][0])]
+    ur, dru = IP.m2p_block(u_blk, x, mine, row0, **kw)
+    rr, drr = IP.m2p_block(r_blk, x, mine, row0, **kw)
+    (uk, rk), ovf = M4.m2p_fused_block((u_blk, r_blk), x, mine, row0,
+                                       cell_cap=256, interpret=True, **kw)
+    assert int(dru) == 0 and int(drr) == 0 and int(ovf) == 0
+    for got, ref in ((uk, ur), (rk, rr)):
+        scale = float(jnp.abs(ref).max()) + 1e-6
+        np.testing.assert_allclose(np.asarray(got) / scale,
+                                   np.asarray(ref) / scale, atol=1e-5)
+
+
+def test_m4_block_overflow_surfaced():
+    """A particle whose M'4 support outruns the block is dropped WHOLE and
+    counted — never clamped into the block edge."""
+    kw, x, val, mine, _, n0l, H, row0, IP = _block_case(14)
+    # a particle two slabs away claims to be mine
+    far = mine.at[0].set(True)
+    x = x.at[0, 0].set(0.01)
+    blk, drop = IP.p2m_block(x, val, far, row0, block_rows=n0l + 2 * H, **kw)
+    assert int(drop) >= 1
+    blk_k, ovf_k = M4.p2m_block(x, val, far, row0, block_rows=n0l + 2 * H,
+                                cell_cap=256, interpret=True, **kw)
+    assert int(ovf_k) >= 1
+    scale = float(jnp.abs(blk).max()) + 1e-6
+    np.testing.assert_allclose(np.asarray(blk_k) / scale,
+                               np.asarray(blk) / scale, atol=1e-5)
+
+
 def test_m4_m2p_fused_matches_per_field_oracle():
     """One fused pass over (vector u, scalar r) == two oracle gathers."""
     kw, x, _, valid, fk = _interp_case(3, 7)

@@ -147,6 +147,16 @@ def test_distributed_equivalence_dem_and_vortex():
 
 
 @pytest.mark.distributed
+def test_distributed_mesh_field_layer():
+    """The distributed mesh layer (DESIGN.md §10): halo_pad vs numpy
+    oracles (incl. non-periodic edge replication), the ghost_put
+    halo-reduce P2M vs the full-psum deposit, the slab-decomposed FFT
+    Poisson vs the serial solver, and mesh fields riding make_sim_step."""
+    run_distributed_pytest("tests/distributed/test_dist_field.py",
+                           min_passed=11)
+
+
+@pytest.mark.distributed
 def test_distributed_overflow_flags():
     """bucket_cap / ghost_cap / cell-list / ghost-contract / contact-slot
     overflow surfacing through make_sim_step for all three pair apps."""

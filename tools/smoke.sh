@@ -13,10 +13,16 @@ echo "== distributed suite (8 forced host devices, in-process harness;   =="
 echo "== includes the distributed-DEM serial-vs-sharded equivalence test =="
 REPRO_DISTRIBUTED=1 python -m pytest -x -q -p no:cacheprovider \
     tests/distributed
-# the DEM equivalence test must exist and be collected (fail loudly if it
-# is ever renamed away — the suite above would silently shrink otherwise)
+# key equivalence tests must exist and be collected (fail loudly if any is
+# ever renamed away — the suite above would silently shrink otherwise):
+# DEM, the fully-sharded-mesh vortex step, the DistributedField gray-scott
+# port, and the ghost_put halo-reduce-vs-psum P2M oracle
 REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
     tests/distributed/test_dist_equivalence.py::test_dem_distributed_matches_serial \
+    tests/distributed/test_dist_equivalence.py::test_vortex_distributed_matches_serial \
+    tests/distributed/test_dist_equivalence.py::test_gray_scott_distributed_matches_serial \
+    tests/distributed/test_dist_field.py::test_p2m_halo_reduce_matches_full_psum \
+    tests/distributed/test_dist_field.py::test_slab_fft_poisson_matches_serial \
     > /dev/null
 
 echo "== examples/vortex_ring.py (1 step) =="

@@ -1,0 +1,187 @@
+"""Fleet throughput — batched ensemble step vs a python loop of single
+runs (the claim behind fleet/batch.py: one compiled vmapped step beats
+per-sim dispatch), plus the batch axis sharded over 8 forced host devices.
+
+Rows (``name,us_per_call,derived``; us_per_call = one batched step / one
+full sweep of the loop — both advance every member once):
+
+  fleet_md_b32_batched — ONE ``make_fleet_step`` call, 32 members
+  fleet_md_b32_loop    — 32 jitted single-sim ``make_sim_step`` calls
+  fleet_dist8_b32      — the batched step with 32 members sharded over 8
+                          forced host devices (4 members/device; --child
+                          re-exec, shared-CPU caveat attached)
+
+The standalone gate (tools/smoke.sh) holds the batched/loop speedup at
+``>= GATE``. Rows + the run's FleetMetrics snapshot are mirrored into
+``artifacts/bench_fleet.json`` under the repro-fleet-metrics/v1 schema —
+the same schema the serving driver emits, so one dashboard reads both.
+"""
+import json
+import os
+import pathlib
+import sys
+import time
+
+BATCH = 32
+# Ensemble-sized members: 8 particles, one-cell-ish grid. The fleet's win
+# is amortizing per-call dispatch over the batch, so the member must be
+# small enough that dispatch is a visible fraction of a single step —
+# exactly the regime ensembles live in (big members saturate the device
+# alone and a loop is already optimal; measured on this host, a 64-
+# particle member is compute-bound at ratio ~1 while 8 particles give ~4x).
+N_PER_SIDE = 2
+SIGMA = 0.25
+CELL_CAP = 8
+N_TIME = 20
+GATE = 2.0                # batched must beat the loop by this factor
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _workload():
+    import jax
+    import jax.numpy as jnp
+    from repro.apps import md
+    from repro.core import simulation as SIM
+
+    cfg = md.MDConfig(n_per_side=N_PER_SIDE, sigma=SIGMA, cell_cap=CELL_CAP)
+
+    def make_state(seed):
+        ps = md.init_particles(cfg)
+        v = 0.05 * jax.random.normal(jax.random.PRNGKey(seed), ps.x.shape)
+        ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+        return SIM.serial_state(ps, md.physics, cfg)
+
+    return cfg, [make_state(s) for s in range(BATCH)]
+
+
+def _time_steps(advance, state):
+    """Median wall seconds of ``advance`` (state -> state), synced."""
+    import jax
+    state = advance(state)                      # compile + warmup
+    jax.block_until_ready(jax.tree.leaves(state)[0])
+    times = []
+    for _ in range(N_TIME):
+        t0 = time.perf_counter()
+        state = advance(state)
+        jax.block_until_ready(jax.tree.leaves(state)[0])
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _bench_serial():
+    from repro.apps import md
+    from repro.core import simulation as SIM
+    from repro.fleet import batch as FB
+    from repro.fleet.metrics import FleetMetrics
+
+    cfg, states = _workload()
+    metrics = FleetMetrics(n_slots=BATCH)
+
+    ens = FB.stack_members(states)
+    fstep = FB.make_fleet_step(md.physics, cfg)
+
+    def batched(e):
+        e2, _, _ = fstep(e, {})
+        return e2
+
+    t_b = _time_steps(batched, ens)
+    metrics.observe_step(t_b, BATCH)
+
+    sstep = SIM.make_sim_step(md.physics, cfg)
+
+    def loop(sts):
+        return [sstep(s, {})[0] for s in sts]
+
+    t_l = _time_steps(loop, list(states))
+
+    ratio = t_l / t_b
+    n = cfg.n_particles
+    rows = [
+        f"fleet_md_b{BATCH}_batched,{t_b * 1e6:.1f},"
+        f"sims_per_sec={BATCH / t_b:.0f};n_per_member={n}"
+        f";speedup_vs_loop={ratio:.2f};gate>={GATE:.1f}",
+        f"fleet_md_b{BATCH}_loop,{t_l * 1e6:.1f},"
+        f"sims_per_sec={BATCH / t_l:.0f};n_per_member={n}",
+    ]
+    return rows, metrics, ratio
+
+
+def _child_main():
+    from benchmarks.xla_env import ensure_forced_host_devices
+    ensure_forced_host_devices(os.environ)
+
+    import jax
+    from benchmarks import dist_common as DC
+    from repro.apps import md
+    from repro.fleet import batch as FB
+
+    cfg, states = _workload()
+    mesh = DC.make_submesh(8)
+    ens = FB.shard_ensemble(FB.stack_members(states), mesh, DC.AXIS)
+    fstep = FB.make_fleet_step(md.physics, cfg, mesh, axis_name=DC.AXIS)
+
+    def batched(e):
+        e2, _, _ = fstep(e, {})
+        return e2
+
+    t = _time_steps(batched, ens)
+    print(f"fleet_dist8_b{BATCH},{t * 1e6:.1f},"
+          f"sims_per_sec={BATCH / t:.0f};members_per_dev={BATCH // 8}"
+          f";n_per_member={cfg.n_particles}", flush=True)
+
+
+CAVEAT = ("8 forced host devices share one CPU: the dist8 row tracks "
+          "regressions only, not scaling — re-baseline on real multi-chip "
+          "hardware (ROADMAP)")
+
+
+def _write_json(rows, metrics):
+    from repro.fleet import metrics as FM
+    snap = metrics.snapshot()
+    snap["device_config"] = ("host CPU; dist8 row under XLA "
+                             "--xla_force_host_platform_device_count=8")
+    FM.emit(_ROOT / "artifacts" / "bench_fleet.json", snap,
+            rows=[dict(zip(("name", "us_per_call", "derived"),
+                           ln.split(",", 2))) for ln in rows],
+            caveat=CAVEAT)
+
+
+def run():
+    """Parent entry (benchmarks/run.py): serial rows + relayed child row."""
+    from benchmarks.xla_env import run_forced_host_child
+    rows, metrics, _ = _bench_serial()
+    child = run_forced_host_child(__file__, "fleet_dist8")
+    rows += [f"{ln};caveat=forced-host-devices-shared-cpu" for ln in child]
+    _write_json(rows, metrics)
+    return rows
+
+
+def main() -> int:
+    """Standalone gate: the batched step must hold its speedup."""
+    from benchmarks.xla_env import run_forced_host_child
+    rows, metrics, ratio = _bench_serial()
+    child = run_forced_host_child(__file__, "fleet_dist8")
+    rows += [f"{ln};caveat=forced-host-devices-shared-cpu" for ln in child]
+    _write_json(rows, metrics)
+    for line in rows:
+        print(line)
+    status = "OK" if ratio >= GATE else "FAIL"
+    print(f"batched-vs-loop speedup at batch {BATCH}: {ratio:.2f}x "
+          f"(gate >= {GATE:.1f}x) [{status}]")
+    if ratio < GATE:
+        print(f"fleet batched step lost its speedup ({ratio:.2f}x < "
+              f"{GATE:.1f}x)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        sys.exit(main())

@@ -23,6 +23,11 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_sim_engine — unified make_sim_step engine vs frozen pre-refactor
                     steps (MD+SPH, serial + 8-device): no step-time
                     regression (ratio gate 1.05)
+  bench_fleet    — batched ensemble step vs python-loop of single runs
+                    (sims/sec; speedup gate 2.0 at batch 32) + the batch
+                    axis sharded over 8 forced host devices; rows mirror
+                    into artifacts/bench_fleet.json under the
+                    repro-fleet-metrics/v1 schema
 """
 import sys
 import pathlib
@@ -33,14 +38,15 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 def main() -> None:
     from benchmarks import (backend_compare, bench_cmaes, bench_dem,
-                            bench_distributed, bench_interp, bench_md,
-                            bench_membw, bench_roofline, bench_sim_engine,
-                            bench_sph, bench_stencil, bench_vortex)
+                            bench_distributed, bench_fleet, bench_interp,
+                            bench_md, bench_membw, bench_roofline,
+                            bench_sim_engine, bench_sph, bench_stencil,
+                            bench_vortex)
     print("name,us_per_call,derived")
     for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
                 bench_vortex, bench_interp, bench_dem, bench_cmaes,
                 backend_compare, bench_distributed, bench_sim_engine,
-                bench_roofline):
+                bench_fleet, bench_roofline):
         for line in mod.run():
             print(line, flush=True)
 

@@ -13,14 +13,33 @@ the global optimum) on a multimodal multi-funnel test function, PS-CMA-ES
 vs. independent restarts, at a fixed evaluation budget. (The CEC2005 f15
 composition function is approximated by shifted Rastrigin — the dominant
 component of f15 — noted in DESIGN.md.)
+
+Two engines share this file:
+
+  * the original **numpy** loop (``cma_generation`` / ``ps_cma_es``) — the
+    float64 reference, kept as the test oracle;
+  * the **jax batched engine** (``cma_update`` / ``ps_cma_es_jax``) — the
+    population runs as one fleet: a stacked :class:`CMAStateJ` advanced by
+    ONE jitted ``vmap`` of the generation update, PS-coupling (migration)
+    expressed through the same :class:`~repro.core.simulation.Reduce`
+    abstractions as a simulation, and the population axis optionally
+    sharded across a device mesh exactly like ``fleet/batch.py`` shards an
+    ensemble. ``cma_update`` takes the sample block ``z`` explicitly so
+    the oracle test can feed both engines identical draws.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core import runtime as RT
+from repro.core import simulation as SIM
 
 
 def rastrigin(x: np.ndarray) -> np.ndarray:
@@ -69,8 +88,13 @@ def cma_generation(st: CMAState, f: Callable, rng: np.random.Generator,
                / ((n + 2) ** 2 + mu_eff))
     chi_n = math.sqrt(n) * (1 - 1 / (4 * n) + 1 / (21 * n * n))
 
-    # eigendecomposition (C is kept symmetric)
+    # eigendecomposition (C is kept symmetric); canonical eigenvector signs
+    # (largest-|component| positive) so the sampled y is a deterministic
+    # function of (C, z) — LAPACK's sign choice is arbitrary and differs
+    # across precisions/backends, which would make the jax engine
+    # incomparable against this reference
     D2, B = np.linalg.eigh(st.C)
+    B = B * np.sign(B[np.argmax(np.abs(B), axis=0), np.arange(n)])
     D = np.sqrt(np.maximum(D2, 1e-20))
     z = rng.standard_normal((lam, n))
     y = z @ np.diag(D) @ B.T
@@ -155,5 +179,260 @@ def success_rate(f, dim, n_runs, max_evals, *, n_particles=4, swarm=True,
     for r in range(n_runs):
         bf, _, _ = ps_cma_es(f, dim, n_particles, max_evals,
                              seed=seed0 + r, swarm=swarm)
+        ok += bf < f_target
+    return ok / n_runs
+
+
+# ==========================================================================
+# jax batched engine — the population as one fleet
+# ==========================================================================
+
+def rastrigin_j(x: jax.Array) -> jax.Array:
+    """:func:`rastrigin` in jnp (jittable / vmappable objective)."""
+    z = x - 1.23
+    return 10.0 * z.shape[-1] + jnp.sum(
+        z * z - 10.0 * jnp.cos(2 * jnp.pi * z), axis=-1)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CMAStateJ:
+    """One CMA-ES instance as a pytree of arrays (stack ``B`` of them and
+    the leading axis is the swarm — the CMA mirror of ``EnsembleState``)."""
+
+    mean: jax.Array      # (n,)
+    sigma: jax.Array     # ()
+    C: jax.Array         # (n, n)
+    p_sigma: jax.Array   # (n,)
+    p_c: jax.Array       # (n,)
+    best_f: jax.Array    # ()
+    best_x: jax.Array    # (n,)
+    evals: jax.Array     # () int32
+    gen: jax.Array       # () int32
+
+
+@functools.lru_cache(maxsize=None)
+def cma_consts(n: int, lam: Optional[int] = None):
+    """Hansen's strategy constants for dimension ``n`` (static python
+    floats; the weights come back as a tuple so the whole thing caches)."""
+    lam = lam or 4 + int(3 * np.log(n))
+    mu = lam // 2
+    w = np.log(mu + 0.5) - np.log(np.arange(1, mu + 1))
+    w = w / w.sum()
+    mu_eff = 1.0 / np.sum(w ** 2)
+    c_sigma = (mu_eff + 2) / (n + mu_eff + 5)
+    d_sigma = 1 + 2 * max(0.0, math.sqrt((mu_eff - 1) / (n + 1)) - 1) + c_sigma
+    c_c = (4 + mu_eff / n) / (n + 4 + 2 * mu_eff / n)
+    c_1 = 2 / ((n + 1.3) ** 2 + mu_eff)
+    c_mu = min(1 - c_1, 2 * (mu_eff - 2 + 1 / mu_eff)
+               / ((n + 2) ** 2 + mu_eff))
+    chi_n = math.sqrt(n) * (1 - 1 / (4 * n) + 1 / (21 * n * n))
+    return dict(lam=lam, mu=mu, w=tuple(float(x) for x in w),
+                mu_eff=float(mu_eff), c_sigma=float(c_sigma),
+                d_sigma=float(d_sigma), c_c=float(c_c), c_1=float(c_1),
+                c_mu=float(c_mu), chi_n=float(chi_n))
+
+
+def cma_init_j(key, dim: int, lo=-5.0, hi=5.0, sigma0: float = 2.0
+               ) -> CMAStateJ:
+    mean = jax.random.uniform(key, (dim,), minval=lo, maxval=hi)
+    return CMAStateJ(mean=mean, sigma=jnp.asarray(sigma0),
+                     C=jnp.eye(dim), p_sigma=jnp.zeros(dim),
+                     p_c=jnp.zeros(dim), best_f=jnp.asarray(jnp.inf),
+                     best_x=mean, evals=jnp.asarray(0, jnp.int32),
+                     gen=jnp.asarray(0, jnp.int32))
+
+
+def cma_update(st: CMAStateJ, z: jax.Array, f: Callable) -> CMAStateJ:
+    """One CMA-ES generation given the sample block ``z`` of shape
+    ``(lam, n)`` explicitly — the same math as :func:`cma_generation`, in
+    jnp. Taking ``z`` (instead of a key) lets the oracle test drive the
+    numpy and jax engines with identical draws; it also composes with
+    ``vmap`` (batch the state and the block)."""
+    n = st.mean.shape[-1]
+    lam = z.shape[0]
+    c = cma_consts(n, lam)
+    mu, w = c["mu"], jnp.asarray(c["w"])
+
+    D2, B = jnp.linalg.eigh(st.C)
+    # canonical eigenvector signs, mirroring cma_generation (see there)
+    B = B * jnp.sign(jnp.take_along_axis(
+        B, jnp.argmax(jnp.abs(B), axis=0)[None], axis=0))[0]
+    D = jnp.sqrt(jnp.maximum(D2, 1e-20))
+    y = z @ jnp.diag(D) @ B.T
+    xs = st.mean + st.sigma * y
+    fs = f(xs)
+    order = jnp.argsort(fs)
+    xs, y, fs = xs[order], y[order], fs[order]
+
+    y_w = w @ y[:mu]
+    mean = st.mean + st.sigma * y_w
+    C_inv_sqrt = B @ jnp.diag(1.0 / D) @ B.T
+    p_sigma = ((1 - c["c_sigma"]) * st.p_sigma
+               + math.sqrt(c["c_sigma"] * (2 - c["c_sigma"]) * c["mu_eff"])
+               * (C_inv_sqrt @ y_w))
+    ps_norm = jnp.linalg.norm(p_sigma)
+    sigma = st.sigma * jnp.exp(
+        (c["c_sigma"] / c["d_sigma"]) * (ps_norm / c["chi_n"] - 1))
+    sigma = jnp.clip(sigma, 1e-12, 1e4)
+    h_sigma = jnp.where(
+        ps_norm / jnp.sqrt(1 - (1 - c["c_sigma"])
+                           ** (2.0 * (st.gen + 1)))
+        < (1.4 + 2 / (n + 1)) * c["chi_n"], 1.0, 0.0)
+    p_c = ((1 - c["c_c"]) * st.p_c
+           + h_sigma * math.sqrt(c["c_c"] * (2 - c["c_c"]) * c["mu_eff"])
+           * y_w)
+    rank_mu = jnp.einsum("i,ij,ik->jk", w, y[:mu], y[:mu])
+    C = ((1 - c["c_1"] - c["c_mu"]) * st.C
+         + c["c_1"] * (jnp.outer(p_c, p_c)
+                       + (1 - h_sigma) * c["c_c"] * (2 - c["c_c"]) * st.C)
+         + c["c_mu"] * rank_mu)
+    C = 0.5 * (C + C.T)
+
+    better = fs[0] < st.best_f
+    best_f = jnp.where(better, fs[0], st.best_f)
+    best_x = jnp.where(better, xs[0], st.best_x)
+    return CMAStateJ(mean=mean, sigma=sigma, C=C, p_sigma=p_sigma, p_c=p_c,
+                     best_f=best_f, best_x=best_x,
+                     evals=st.evals + lam, gen=st.gen + 1)
+
+
+def cma_generation_j(st: CMAStateJ, key, f: Callable,
+                     lam: Optional[int] = None) -> CMAStateJ:
+    """Key-threaded generation: draw ``z`` and :func:`cma_update`."""
+    n = st.mean.shape[-1]
+    lam = cma_consts(n, lam)["lam"]
+    z = jax.random.normal(key, (lam, n))
+    return cma_update(st, z, f)
+
+
+def restart_collapsed(st: CMAStateJ, key, lo=-5.0, hi=5.0,
+                      sigma0: float = 2.0, tol: float = 1e-10) -> CMAStateJ:
+    """Restart a sigma-collapsed instance in place (best-so-far survives),
+    the jnp.where rendering of the numpy loop's restart branch."""
+    dead = st.sigma < tol
+    fresh = cma_init_j(key, st.mean.shape[-1], lo, hi, sigma0)
+
+    def sel(new, old):
+        return jnp.where(dead, new, old)
+
+    return CMAStateJ(mean=sel(fresh.mean, st.mean),
+                     sigma=sel(fresh.sigma, st.sigma),
+                     C=sel(fresh.C, st.C),
+                     p_sigma=sel(fresh.p_sigma, st.p_sigma),
+                     p_c=sel(fresh.p_c, st.p_c),
+                     best_f=st.best_f, best_x=st.best_x,
+                     evals=st.evals, gen=sel(fresh.gen, st.gen))
+
+
+def migrate(pop: CMAStateJ, red: SIM.Reduce) -> CMAStateJ:
+    """PS-coupling through the simulation-layer reductions: the globally
+    best mean migrates into the globally worst instance (sigma re-excited,
+    covariance reset) — :func:`ps_cma_es`'s swarm step as a pure batched
+    rewrite. ``pop`` leaves carry the local population axis; with a mesh
+    ``red`` spans shards (each device owns ``B/ndev`` instances), serially
+    it is the identity — one code path, like every other physics hook."""
+    bf = pop.best_f                       # (B_local,)
+    n = pop.mean.shape[-1]
+    loc_best = jnp.argmin(bf)
+    # per-shard champions, gathered: (ndev,) / (ndev, n)
+    g_f = red.gather(bf[loc_best])
+    g_x = red.gather(pop.best_x[loc_best])
+    shard_best = jnp.argmin(g_f)
+    best_f, best_x = g_f[shard_best], g_x[shard_best]
+    # the worst instance lives on the shard holding the global max
+    loc_worst = jnp.argmax(bf)
+    g_worst = red.gather(bf[loc_worst])
+    shard_worst = jnp.argmax(g_worst)
+    worst_f = g_worst[shard_worst]
+    me = RT.axis_index(red.axis_name) if red.axis_name else 0
+    hit = ((jnp.arange(bf.shape[0]) == loc_worst)
+           & (me == shard_worst) & (worst_f > best_f))
+
+    def sel(new, old):
+        m = hit.reshape(hit.shape + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return dataclasses.replace(
+        pop,
+        mean=sel(best_x[None], pop.mean),
+        sigma=sel(jnp.maximum(pop.sigma, 0.5), pop.sigma),
+        C=sel(jnp.eye(n)[None], pop.C),
+        p_sigma=sel(jnp.zeros(n)[None], pop.p_sigma),
+        p_c=sel(jnp.zeros(n)[None], pop.p_c))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_round(f: Callable, dim: int, lam: Optional[int], swarm: bool,
+                mesh=None, axis_name: str = "fleet"):
+    """ONE jitted round: vmapped generation + collapse restart, and (fused
+    in, gated by a traced flag) the migration — so the whole swarm loop is
+    two device calls per generation at most, one compile total."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(pop, keys, do_migrate):
+        gen_keys, restart_keys = keys[:, 0], keys[:, 1]
+        pop = jax.vmap(lambda s, k: cma_generation_j(s, k, f, lam)
+                       )(pop, gen_keys)
+        pop = jax.vmap(restart_collapsed)(pop, restart_keys)
+        if swarm:
+            red = SIM.Reduce(axis_name if mesh is not None else None)
+            migrated = migrate(pop, red)
+            pop = jax.tree.map(
+                lambda a, b: jnp.where(
+                    do_migrate.reshape((1,) * a.ndim), a, b),
+                migrated, pop)
+        return pop
+
+    if mesh is not None:
+        body = RT.shard_map(body, mesh,
+                            in_specs=(P(axis_name), P(axis_name), P()),
+                            out_specs=P(axis_name), check_vma=False)
+    return jax.jit(body)
+
+
+def ps_cma_es_jax(f: Callable, dim: int, n_particles: int, max_evals: int,
+                  seed: int = 0, migrate_every: int = 20, swarm: bool = True,
+                  lam: Optional[int] = None, mesh=None,
+                  axis_name: str = "fleet") -> Tuple[float, np.ndarray, int]:
+    """:func:`ps_cma_es` on the batched engine: the population is a stacked
+    :class:`CMAStateJ` advanced by one compiled round per generation
+    (generation + restart + mask-gated migration). With ``mesh`` the
+    population axis is sharded (``n_particles % ndev == 0``) and the
+    PS-coupling runs through the mesh collectives."""
+    lam_c = cma_consts(dim, lam)["lam"]
+    key = jax.random.PRNGKey(seed)
+    key, *init = jax.random.split(key, n_particles + 1)
+    pop = jax.vmap(lambda k: cma_init_j(k, dim))(jnp.stack(init))
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ndev = int(mesh.shape[axis_name])
+        if n_particles % ndev:
+            raise ValueError(f"population {n_particles} not divisible by "
+                             f"{ndev} devices on axis {axis_name!r}")
+        sh = NamedSharding(mesh, P(axis_name))
+        pop = jax.device_put(pop, jax.tree.map(lambda _: sh, pop))
+    round_fn = _make_round(f, dim, lam, swarm, mesh, axis_name)
+
+    total, gen = 0, 0
+    while total < max_evals:
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n_particles * 2
+                                ).reshape(n_particles, 2, -1)
+        gen += 1
+        do_mig = jnp.asarray(swarm and gen % migrate_every == 0)
+        pop = round_fn(pop, keys, do_mig)
+        total += n_particles * lam_c
+    bf = np.asarray(pop.best_f)
+    i = int(np.argmin(bf))
+    return float(bf[i]), np.asarray(pop.best_x)[i], total
+
+
+def success_rate_jax(f, dim, n_runs, max_evals, *, n_particles=4, swarm=True,
+                     f_target=1e-2, seed0=0, mesh=None) -> float:
+    ok = 0
+    for r in range(n_runs):
+        bf, _, _ = ps_cma_es_jax(f, dim, n_particles, max_evals,
+                                 seed=seed0 + r, swarm=swarm, mesh=mesh)
         ok += bf < f_target
     return ok / n_runs

@@ -364,14 +364,42 @@ def make_distributed_vic_step(mesh, cfg: VortexConfig,
 
 
 def run_distributed(cfg: VortexConfig, n_steps: int, mesh,
-                    axis_name: str = "shards"):
+                    axis_name: str = "shards", *,
+                    auto_reprovision: bool = False,
+                    _make_step=None):
     """Distributed driver mirroring :func:`run`: the vorticity field lives
-    sharded in a DistributedField for the whole run."""
+    sharded in a DistributedField for the whole run.
+
+    ``auto_reprovision=True`` adds the control plane: on surfaced halo
+    overflow the step is redone from the pre-step field with
+    ``mesh_halo`` doubled (clamped to the slab height — the geometric
+    ceiling of a single-hop ghost exchange), the :func:`step_reprovision`
+    / ``interp_cell_cap`` contract applied to the halo capacity. It costs
+    a per-step host sync; the default keeps the accumulate-and-raise path
+    so steps dispatch asynchronously. ``_make_step`` is the step factory
+    (injectable for testing the control loop without a real overflow)."""
     from repro.core import grid as G
-    step = make_distributed_vic_step(mesh, cfg, axis_name)
+    make_step = _make_step or make_distributed_vic_step
+    step = make_step(mesh, cfg, axis_name)
     w = project_divfree(init_ring(cfg), cfg)
     z0 = float(centroid_z(w, cfg))
     f = G.distribute_field(w, mesh, axis_name)
+    if auto_reprovision:
+        n0l = cfg.shape[0] // int(mesh.shape[axis_name])
+        for _ in range(n_steps):
+            f2, ovf = step(f)
+            while int(ovf) > 0:
+                new_halo = min(2 * cfg.mesh_halo, n0l)
+                if new_halo == cfg.mesh_halo:
+                    raise RuntimeError(
+                        f"halo overflow persists at the geometric ceiling "
+                        f"mesh_halo={cfg.mesh_halo} (slab height {n0l}); "
+                        "the decomposition is too fine for this flow")
+                cfg = dataclasses.replace(cfg, mesh_halo=new_halo)
+                step = make_step(mesh, cfg, axis_name)
+                f2, ovf = step(f)   # redo from the PRE-step field
+            f = f2
+        return f.data, z0, float(centroid_z(f.data, cfg)), cfg
     # accumulate the overflow on device and sync ONCE after the loop, so
     # steps keep dispatching asynchronously (same rationale as the serial
     # driver's jnp path skipping its per-step host sync)

@@ -264,6 +264,44 @@ def _finish(spec: PhysicsSpec, ctx: StepCtx):
 # --------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
+def make_serial_step_fn(physics, cfg, *, slab_axis: int = 0):
+    """The serial (1-slab) step composition, UN-jitted.
+
+    ``make_sim_step(physics, cfg)`` is exactly ``jax.jit`` of this
+    function; the fleet engine (``repro.fleet.batch``) ``vmap``s it over a
+    batch axis instead — serial single-sim is the batch=1 degenerate case
+    of the same composition. Cached on ``(physics, cfg, slab_axis)`` like
+    the engine itself.
+    """
+    spec = physics(cfg)
+    body = spec.make_body()
+    pair_kw = dict(out=spec.pair_out, r_cut=float(spec.r_cut),
+                   prop_names=spec.pair_props,
+                   backend=spec.backend, interpret=spec.interpret)
+    mesh_periodic = bool(spec.periodic[slab_axis])
+    cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
+
+    def step(state: DistributedParticles, extras):
+        red = Reduce(None)
+        grid = G.GridOps(None, periodic=mesh_periodic)
+        ps = state.ps
+        if spec.advance is not None:
+            ps = spec.advance(ps, red, extras)
+        cl = CL.build_cell_list(ps, **cl_kw)
+        pair = I.apply_pair_kernel(ps, cl, body, **pair_kw)
+        ps, scalars, nb_ovf, fields = _finish(
+            spec, StepCtx(ps=ps, combo=ps, cl=cl, pair=pair, red=red,
+                          extras=extras, fields=state.fields, grid=grid))
+        flags = StepFlags(cell=jnp.asarray(cl.overflow, jnp.int32),
+                          neighbor=nb_ovf, bucket=_Z32(), ghost=_Z32(),
+                          ghost_contract=_Z32())
+        return (dataclasses.replace(state, ps=ps, fields=fields), flags,
+                scalars)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
 def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
                   slab_axis: int = 0, bucket_cap: Optional[int] = None,
                   ghost_cap: Optional[int] = None):
@@ -279,35 +317,15 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     :class:`PhysicsSpec` and ``cfg`` hashable (a frozen config dataclass):
     the engine is cached on ``(physics, cfg, mesh, ...)``.
     """
+    if mesh is None:
+        return jax.jit(make_serial_step_fn(physics, cfg,
+                                           slab_axis=slab_axis))
+
     spec = physics(cfg)
     body = spec.make_body()
     rc = float(spec.r_cut)
     pair_kw = dict(out=spec.pair_out, r_cut=rc, prop_names=spec.pair_props,
                    backend=spec.backend, interpret=spec.interpret)
-
-    mesh_periodic = bool(spec.periodic[slab_axis])
-
-    if mesh is None:
-        cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
-
-        def step(state: DistributedParticles, extras):
-            red = Reduce(None)
-            grid = G.GridOps(None, periodic=mesh_periodic)
-            ps = state.ps
-            if spec.advance is not None:
-                ps = spec.advance(ps, red, extras)
-            cl = CL.build_cell_list(ps, **cl_kw)
-            pair = I.apply_pair_kernel(ps, cl, body, **pair_kw)
-            ps, scalars, nb_ovf, fields = _finish(
-                spec, StepCtx(ps=ps, combo=ps, cl=cl, pair=pair, red=red,
-                              extras=extras, fields=state.fields, grid=grid))
-            flags = StepFlags(cell=jnp.asarray(cl.overflow, jnp.int32),
-                              neighbor=nb_ovf, bucket=_Z32(), ghost=_Z32(),
-                              ghost_contract=_Z32())
-            return (dataclasses.replace(state, ps=ps, fields=fields), flags,
-                    scalars)
-
-        return jax.jit(step)
 
     b_cap = int(bucket_cap or spec.bucket_cap)
     g_cap = int(ghost_cap or spec.ghost_cap)

@@ -1,0 +1,29 @@
+"""Fleet engine — batched ensemble simulation and steady-state serving.
+
+"Millions of users" for a simulation framework means ensembles: parameter
+sweeps, Monte-Carlo repetitions, interactive sessions — many independent
+fixed-capacity simulations, not one giant run. The fleet layer turns the
+pure simulation engine (core/simulation.py) into a throughput machine:
+
+  * :mod:`repro.fleet.batch`   — the :class:`EnsembleState` container and
+    :func:`make_fleet_step`: ``vmap`` of the serial engine step over a
+    batch axis, optionally sharded across a device mesh. Serial single-sim
+    is the batch=1 degenerate case.
+  * :mod:`repro.fleet.server`  — the steady-state serving driver: bounded
+    request queue in, slot allocator over ONE compiled batched step
+    (join/leave via the active mask, never a recompile), streaming results
+    out through the async checkpoint writer.
+  * :mod:`repro.fleet.metrics` — throughput counters (steps/sec, sims/sec,
+    queue depth, slot occupancy, per-step wall time) behind one JSON
+    schema shared by the server, benchmarks and future dashboards.
+"""
+from repro.fleet.batch import (EnsembleState, make_fleet_step, member_at,
+                               set_member, stack_members)
+from repro.fleet.metrics import FleetMetrics
+from repro.fleet.server import FleetServer, SimRequest, SimResult
+
+__all__ = [
+    "EnsembleState", "make_fleet_step", "member_at", "set_member",
+    "stack_members", "FleetMetrics", "FleetServer", "SimRequest",
+    "SimResult",
+]

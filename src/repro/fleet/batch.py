@@ -1,0 +1,187 @@
+"""Batched ensemble simulation — the fleet container and its step.
+
+The simulation engine (core/simulation.py) is pure and fixed-capacity, so
+a *batch* of independent simulations is just one more leading axis:
+:class:`EnsembleState` stacks ``B`` :class:`~repro.core.simulation.
+DistributedParticles` members leaf-wise, and :func:`make_fleet_step`
+``vmap``s the UN-jitted serial step (``simulation.make_serial_step_fn``)
+over that axis — one compiled step advances the whole fleet. Serial
+single-sim is the batch=1 degenerate case of the same composition.
+
+Per-member semantics are preserved:
+  * per-member physics *parameters* ride in ``EnsembleState.params`` — a
+    pytree of ``(B, ...)`` arrays merged into each member's traced
+    ``extras``, so a spec that reads e.g. ``extras["gravity"]`` runs every
+    member under its own value without recompiling;
+  * per-member :class:`~repro.core.simulation.StepFlags` — the batched
+    step returns flags with ``(B,)`` leaves, so one member overflowing its
+    capacity contract is visible (and re-provisionable) without poisoning
+    its siblings;
+  * the ``active`` mask gates state updates member-wise: inactive slots
+    pass through untouched with zeroed flags/scalars, which is what lets
+    the serving driver (fleet/server.py) join/leave simulations against
+    ONE compiled step.
+
+With a device mesh the batch axis is sharded via the runtime shim
+(core/runtime.py): each device owns ``B/ndev`` members and runs the same
+vmapped serial body under ``shard_map`` — fleet parallelism composes
+*outside* the member, the dual of the slab decomposition inside one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import runtime as RT
+from repro.core import simulation as SIM
+
+
+# --------------------------------------------------------------------------
+# The container
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnsembleState:
+    """A batch of simulations: every leaf of ``member`` carries a leading
+    batch axis ``B`` (slot-major; slot = one simulation). ``params`` holds
+    per-member traced physics parameters (pytree of ``(B, ...)`` arrays)
+    merged into each member's ``extras``; ``active`` is the ``(B,)`` slot
+    occupancy mask of the fleet — the batch-axis mirror of
+    ``ParticleSet.valid``."""
+
+    member: SIM.DistributedParticles
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    active: jax.Array = None  # (B,) bool
+
+    @property
+    def batch(self) -> int:
+        return self.active.shape[0]
+
+
+def stack_members(states: Sequence[SIM.DistributedParticles],
+                  params: Optional[Dict[str, Any]] = None,
+                  active: Optional[jax.Array] = None) -> EnsembleState:
+    """Stack per-simulation states (identical capacities / pytree
+    structure) into one :class:`EnsembleState`."""
+    if not states:
+        raise ValueError("empty ensemble")
+    member = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    B = len(states)
+    if active is None:
+        active = jnp.ones((B,), bool)
+    return EnsembleState(member=member, params=dict(params or {}),
+                         active=jnp.asarray(active))
+
+
+def member_at(ens: EnsembleState, i) -> SIM.DistributedParticles:
+    """Member ``i``'s state (index may be traced — one compile serves every
+    slot)."""
+    return jax.tree.map(lambda a: a[i], ens.member)
+
+
+def set_member(ens: EnsembleState, i, state: SIM.DistributedParticles,
+               active=True) -> EnsembleState:
+    """Functionally write member ``i`` (join/replace a slot). Index and
+    occupancy may be traced — the serving driver jits this once and reuses
+    it for every join/leave."""
+    member = jax.tree.map(lambda a, s: a.at[i].set(s), ens.member, state)
+    return dataclasses.replace(
+        ens, member=member,
+        active=ens.active.at[i].set(jnp.asarray(active, bool)))
+
+
+def shard_ensemble(ens: EnsembleState, mesh, axis_name: str = "fleet"
+                   ) -> EnsembleState:
+    """Place every leaf batch-axis-sharded over ``mesh`` (host-side; the
+    sharded fleet step keeps it there). ``B`` must divide the mesh."""
+    ndev = int(mesh.shape[axis_name])
+    if ens.batch % ndev:
+        raise ValueError(f"batch {ens.batch} not divisible by {ndev} "
+                         f"devices on axis {axis_name!r}")
+    sh = NamedSharding(mesh, P(axis_name))
+    return jax.device_put(ens, jax.tree.map(lambda _: sh, ens))
+
+
+# --------------------------------------------------------------------------
+# The batched step
+# --------------------------------------------------------------------------
+
+def _mask_tail(active: jax.Array):
+    """Member-wise select with the mask broadcast over trailing dims."""
+    def sel(new, old):
+        m = active.reshape(active.shape + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+    return sel
+
+
+def broadcast_extras(extras: Dict[str, Any], batch: int) -> Dict[str, Any]:
+    """Lift shared per-step extras (e.g. SPH's ``euler`` flag, same for
+    every member) to the fleet convention: every extras entry carries a
+    leading ``(B,)`` batch axis."""
+    return {k: jnp.broadcast_to(jnp.asarray(v)[None],
+                                (batch,) + jnp.shape(v))
+            for k, v in extras.items()}
+
+
+@functools.lru_cache(maxsize=None)
+def make_fleet_step(physics, cfg, mesh=None, *, axis_name: str = "fleet",
+                    slab_axis: int = 0, donate: bool = False):
+    """Build the jitted batched step for a fleet of ``physics(cfg)`` sims.
+
+    Returns ``fleet_step(ens, extras) -> (ens, flags, scalars)`` over an
+    :class:`EnsembleState`:
+
+      * every ``extras`` entry carries a leading ``(B,)`` batch axis —
+        member ``b`` sees row ``b`` (use :func:`broadcast_extras` to lift
+        values shared by the whole fleet); ``ens.params`` entries are
+        merged the same way and override ``extras`` keys;
+      * ``flags`` is a :class:`~repro.core.simulation.StepFlags` whose
+        leaves are ``(B,)`` — per-member overflow, zeroed on inactive
+        slots;
+      * ``scalars`` leaves gain a leading ``(B,)`` axis, zeroed on
+        inactive slots.
+
+    ``mesh=None`` runs the whole batch on one device; with a 1-D mesh the
+    batch axis is sharded (``B % ndev == 0``) and each device steps its
+    own members — no cross-member communication exists, so the sharded
+    step is embarrassingly parallel by construction. ``donate=True``
+    donates the ensemble buffers to the step (the serving driver's
+    steady-state mode)."""
+    step_fn = SIM.make_serial_step_fn(physics, cfg, slab_axis=slab_axis)
+
+    def body(ens: EnsembleState, extras):
+        def member_step(member, params, ex):
+            return step_fn(member, {**ex, **params})
+
+        stepped, flags, scalars = jax.vmap(member_step)(ens.member,
+                                                        ens.params, extras)
+        sel = _mask_tail(ens.active)
+        member = jax.tree.map(sel, stepped, ens.member)
+        flags = jax.tree.map(lambda f: jnp.where(ens.active, f, 0), flags)
+        scalars = jax.tree.map(sel, scalars,
+                               jax.tree.map(jnp.zeros_like, scalars))
+        return dataclasses.replace(ens, member=member), flags, scalars
+
+    if mesh is None:
+        fleet_step = body
+    else:
+        ndev = int(mesh.shape[axis_name])
+        sharded = RT.shard_map(body, mesh,
+                               in_specs=(P(axis_name), P(axis_name)),
+                               out_specs=(P(axis_name), P(axis_name),
+                                          P(axis_name)),
+                               check_vma=False)
+
+        def fleet_step(ens: EnsembleState, extras):
+            if ens.batch % ndev:
+                raise ValueError(f"batch {ens.batch} not divisible by "
+                                 f"{ndev} devices")
+            return sharded(ens, extras)
+
+    return jax.jit(fleet_step, donate_argnums=(0,) if donate else ())

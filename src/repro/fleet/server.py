@@ -1,0 +1,253 @@
+"""Steady-state serving driver: a bounded request queue feeding a slot
+allocator over ONE compiled batched step.
+
+The throughput contract (what makes this a *server*, not a script):
+
+  * **join/leave never recompiles.** The fleet step, the slot write
+    (``set_member``) and the slot read (``member_at``) are three jitted
+    functions compiled once; a request joining slot ``i`` is a traced
+    index write plus an ``active``-mask flip. The test suite asserts the
+    jit cache stays at one entry across arbitrary churn.
+  * **donated buffers.** The ensemble is threaded through the step and
+    the slot write with buffer donation — steady state allocates nothing
+    per step beyond XLA scratch.
+  * **bounded admission.** ``submit`` blocks (or raises ``queue.Full``)
+    once ``queue_cap`` requests are waiting — backpressure instead of
+    unbounded memory growth.
+  * **streaming results.** Completed members stream out through the async
+    checkpoint writer (io/checkpoint.py, ``block=False``); ``close()`` /
+    the context manager joins the writer so a crash-free exit never
+    leaves a ``.tmp`` directory behind.
+
+Per-member per-step inputs (e.g. SPH's ``euler`` flag, which depends on
+each member's *own* step count) come from each request's ``extras_fn``;
+the server stacks them into ``(B,)`` arrays each step — new values, same
+shapes, so the compiled step is reused.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import simulation as SIM
+from repro.fleet import batch as FB
+from repro.fleet.metrics import FleetMetrics
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One simulation to run: an initial serial (1-slab) state, a step
+    budget, and optional per-step inputs. ``extras_fn(i)`` returns the
+    member's traced extras for its local step ``i`` (scalars; stacked
+    across the batch by the server); ``params`` are per-member physics
+    parameters constant over the run."""
+
+    rid: Any
+    state: SIM.DistributedParticles
+    n_steps: int
+    extras_fn: Optional[Callable[[int], Dict[str, Any]]] = None
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SimResult:
+    """What comes back: the final member state, how far it ran, and the
+    per-flag maxima observed over its run (nonzero = the member needs a
+    capacity re-provision; siblings are unaffected)."""
+
+    rid: Any
+    state: SIM.DistributedParticles
+    steps_done: int
+    flags_max: Dict[str, int]
+    wall_s: float
+
+
+_FLAG_NAMES = ("cell", "neighbor", "bucket", "ghost", "ghost_contract")
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: Any
+    extras_fn: Optional[Callable[[int], Dict[str, Any]]]
+    n_steps: int
+    steps_done: int = 0
+    t_join: float = 0.0
+    flags_max: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _FLAG_NAMES})
+
+
+class FleetServer:
+    """Steady-state ensemble server over :func:`fleet.batch.make_fleet_step`.
+
+    ``template`` seeds every empty slot (any valid member state — inactive
+    slots still flow through the vmapped step, masked out). ``physics``
+    declares the per-member params structure via the template request's
+    ``params`` keys; every request must supply the same keys (shapes are
+    per-member rows of ``param_template``).
+    """
+
+    def __init__(self, physics, cfg, n_slots: int,
+                 template: SIM.DistributedParticles, *, mesh=None,
+                 axis_name: str = "fleet", queue_cap: int = 64,
+                 out_dir=None, param_template: Optional[Dict[str, Any]] = None,
+                 default_extras: Optional[Dict[str, Any]] = None):
+        self.physics, self.cfg = physics, cfg
+        self.n_slots = int(n_slots)
+        self.mesh, self.axis_name = mesh, axis_name
+        self.out_dir = out_dir
+        self.default_extras = dict(default_extras or {})
+        self._queue: "queue.Queue[SimRequest]" = queue.Queue(maxsize=queue_cap)
+        self._slots: Dict[int, Optional[_Slot]] = {
+            i: None for i in range(self.n_slots)}
+        self._results: List[SimResult] = []
+        self.metrics = FleetMetrics(n_slots=self.n_slots)
+
+        params = {k: jnp.stack([jnp.asarray(v)] * self.n_slots)
+                  for k, v in (param_template or {}).items()}
+        ens = FB.stack_members([template] * self.n_slots, params=params,
+                               active=jnp.zeros((self.n_slots,), bool))
+        if mesh is not None:
+            ens = FB.shard_ensemble(ens, mesh, axis_name)
+        self._ens = ens
+
+        self._step = FB.make_fleet_step(physics, cfg, mesh,
+                                        axis_name=axis_name, donate=True)
+        # slot write/read: traced index => one compile each for any slot.
+        # The write donates the old ensemble (steady-state, zero-copy-ish);
+        # the read must NOT donate — the ensemble lives on.
+        self._write = jax.jit(
+            lambda ens, i, st, act, pr: dataclasses.replace(
+                FB.set_member(ens, i, st, act),
+                params=jax.tree.map(lambda a, v: a.at[i].set(v),
+                                    ens.params, pr)),
+            donate_argnums=(0,))
+        self._read = jax.jit(FB.member_at)
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req: SimRequest, block: bool = True,
+               timeout: Optional[float] = None) -> None:
+        """Enqueue a request; bounded — blocks or raises ``queue.Full``."""
+        self._queue.put(req, block=block, timeout=timeout)
+        self.metrics.observe_submit(self._queue.qsize())
+
+    # -- serving loop ------------------------------------------------------
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in self._slots.items() if s is None]
+
+    def _admit(self) -> None:
+        for i in self._free_slots():
+            try:
+                req = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            params = {k: jnp.asarray(v) for k, v in req.params.items()}
+            self._ens = self._write(self._ens, i, req.state, True, params)
+            self._slots[i] = _Slot(rid=req.rid, extras_fn=req.extras_fn,
+                                   n_steps=int(req.n_steps),
+                                   t_join=time.perf_counter())
+
+    def _gather_extras(self) -> Dict[str, Any]:
+        """Stack per-member ``extras_fn`` outputs into (B,) arrays. Keys
+        must agree across active slots; empty slots take the default."""
+        names = set()
+        per_slot = {}
+        for i, s in self._slots.items():
+            ex = dict(self.default_extras)
+            if s is not None and s.extras_fn is not None:
+                ex.update(s.extras_fn(s.steps_done))
+            per_slot[i] = ex
+            names |= set(ex)
+        out = {}
+        for k in sorted(names):
+            vals = [per_slot[i].get(k, self.default_extras.get(k))
+                    for i in range(self.n_slots)]
+            if any(v is None for v in vals):
+                raise ValueError(
+                    f"extras key {k!r} missing on some slots and has no "
+                    f"default (give FleetServer default_extras={{{k!r}: ...}})")
+            out[k] = jnp.asarray(np.stack([np.asarray(v) for v in vals]))
+        return out
+
+    def _retire(self) -> None:
+        for i, s in self._slots.items():
+            if s is None or s.steps_done < s.n_steps:
+                continue
+            state = jax.tree.map(np.asarray, self._read(self._ens, i))
+            res = SimResult(rid=s.rid, state=state, steps_done=s.steps_done,
+                            flags_max=dict(s.flags_max),
+                            wall_s=time.perf_counter() - s.t_join)
+            self._results.append(res)
+            if self.out_dir is not None:
+                from repro.io import checkpoint as CK
+                CK.save_particles(f"{self.out_dir}/sim_{s.rid}", state.ps,
+                                  step=s.steps_done,
+                                  meta={"rid": str(s.rid)}, block=False)
+            self._slots[i] = None
+            # leave = active-mask flip only; the slot's stale state is
+            # masked out of subsequent steps, no buffer rewrite needed
+            self._ens = dataclasses.replace(
+                self._ens, active=self._ens.active.at[i].set(False))
+            self.metrics.observe_complete(self._queue.qsize())
+
+    def step_once(self) -> int:
+        """Admit → one batched step → bookkeeping → retire. Returns the
+        number of active members advanced (0 = nothing to do)."""
+        self._admit()
+        active_slots = [i for i, s in self._slots.items() if s is not None]
+        if not active_slots:
+            return 0
+        extras = self._gather_extras()
+        t0 = time.perf_counter()
+        self._ens, flags, _ = self._step(self._ens, extras)
+        fl_host = {k: np.asarray(getattr(flags, k)) for k in _FLAG_NAMES}
+        jax.block_until_ready(self._ens.member.ps.x)
+        wall = time.perf_counter() - t0
+        for i in active_slots:
+            s = self._slots[i]
+            s.steps_done += 1
+            for k in _FLAG_NAMES:
+                s.flags_max[k] = max(s.flags_max[k], int(fl_host[k][i]))
+        self.metrics.observe_step(wall, len(active_slots))
+        self._retire()
+        return len(active_slots)
+
+    def run(self, max_steps: Optional[int] = None) -> List[SimResult]:
+        """Drain: step until the queue and every slot are empty (or
+        ``max_steps`` batched steps have run). Returns completed results
+        accumulated so far (also kept on ``self.results``)."""
+        n = 0
+        while (not self._queue.empty()
+               or any(s is not None for s in self._slots.values())):
+            if max_steps is not None and n >= max_steps:
+                break
+            self.step_once()
+            n += 1
+        return list(self._results)
+
+    # -- results / lifecycle ----------------------------------------------
+    @property
+    def results(self) -> List[SimResult]:
+        return list(self._results)
+
+    def step_cache_size(self) -> int:
+        """Jit-cache entries of the batched step — the join/leave-without-
+        recompile contract is ``== 1`` after any churn."""
+        return self._step._cache_size()
+
+    def close(self) -> None:
+        """Join the async result writer: after this, no ``.tmp`` remains
+        for anything this server streamed out."""
+        from repro.io import checkpoint as CK
+        CK.flush()
+
+    def __enter__(self) -> "FleetServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -19,13 +19,14 @@ Fault-tolerance properties:
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import json
 import os
 import pathlib
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Iterator, Optional, Tuple
 
 import jax
 import numpy as np
@@ -103,6 +104,34 @@ def wait_all() -> None:
     for t in list(_PENDING.values()):
         t.join()
     _PENDING.clear()
+
+
+def flush(path=None) -> None:
+    """Join pending async writes — all of them, or just ``path``'s.
+
+    After ``flush()`` every async ``save(..., block=False)`` issued so far
+    has atomically published (tmp dir renamed away): a crash-free exit
+    that flushes leaves no ``.tmp`` behind. The fleet serving driver
+    (fleet/server.py) relies on this for its streamed results.
+    """
+    if path is not None:
+        t = _PENDING.pop(str(pathlib.Path(path)), None)
+        if t is not None:
+            t.join()
+        return
+    wait_all()
+
+
+@contextlib.contextmanager
+def async_writes() -> Iterator[None]:
+    """Scope async checkpointing: on exit (including exceptional exit) all
+    pending writer threads are joined, so everything submitted inside the
+    block is durably published — the with-statement rendering of
+    :func:`flush`."""
+    try:
+        yield
+    finally:
+        flush()
 
 
 def load(path, example_tree) -> Tuple[Any, int, Dict]:

@@ -1,0 +1,168 @@
+"""PS-CMA-ES jax batched engine vs the numpy reference (the test oracle).
+
+``cma_update`` takes the sample block ``z`` explicitly, so the oracle test
+drives BOTH engines with the same draws and compares every state field —
+the port is the same generation math, only f32. The swarm-level checks
+mirror the paper's validation: coupling beats independent restarts, and
+the jax engine's success rate on shifted Rastrigin is no worse than the
+numpy engine's at the same evaluation budget.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.apps import cmaes
+
+
+class _FixedZ:
+    """An rng whose standard_normal returns a pre-drawn block — feeds the
+    numpy engine the exact samples the jax engine will use."""
+
+    def __init__(self, z):
+        self.z = z
+
+    def standard_normal(self, shape):
+        assert shape == self.z.shape
+        return self.z
+
+
+def _to_j(st):
+    return cmaes.CMAStateJ(
+        mean=jnp.asarray(st.mean, jnp.float32),
+        sigma=jnp.asarray(st.sigma, jnp.float32),
+        C=jnp.asarray(st.C, jnp.float32),
+        p_sigma=jnp.asarray(st.p_sigma, jnp.float32),
+        p_c=jnp.asarray(st.p_c, jnp.float32),
+        best_f=jnp.asarray(st.best_f, jnp.float32),
+        best_x=jnp.asarray(st.best_x, jnp.float32),
+        evals=jnp.asarray(st.evals, jnp.int32),
+        gen=jnp.asarray(st.gen, jnp.int32))
+
+
+def _compare_one_generation(st_np, z, tag):
+    """One generation through both engines from the SAME state with the
+    SAME z: every field must track the float64 reference to f32
+    precision. (Chained comparisons are deliberately avoided: after a
+    generation from C=I the spectrum is near-degenerate and ``eigh``'s
+    eigenbasis is ill-conditioned — f32 and f64 legitimately rotate it
+    differently, which is a property of eigh, not of the port.)"""
+    out_np = cmaes.cma_generation(st_np, cmaes.rastrigin, _FixedZ(z))
+    out_j = cmaes.cma_update(_to_j(st_np), jnp.asarray(z, jnp.float32),
+                             cmaes.rastrigin_j)
+    for fld in ("mean", "sigma", "C", "p_sigma", "p_c", "best_f", "best_x"):
+        a = np.asarray(getattr(out_j, fld), np.float64)
+        b = np.asarray(getattr(out_np, fld), np.float64)
+        rel = np.max(np.abs(a - b) / (np.abs(b) + 1e-6))
+        assert rel < 5e-4, (tag, fld, rel)
+    assert int(out_j.evals) == out_np.evals
+    assert int(out_j.gen) == out_np.gen
+
+
+def test_cma_update_matches_numpy_oracle():
+    dim = 10
+    rng = np.random.default_rng(0)
+    lam = cmaes.cma_consts(dim)["lam"]
+    zrng = np.random.default_rng(42)
+
+    # (a) the fresh init state: C = I, the eigenbasis is exact in both
+    st = cmaes.cma_init(dim, rng)
+    _compare_one_generation(st, zrng.standard_normal((lam, dim)), "init")
+
+    # (b) mid-run states with well-separated spectra (stable eigh): a
+    # fixed rotation of distinct eigenvalues, evolved paths, a best-so-far
+    q, _ = np.linalg.qr(np.random.default_rng(7).standard_normal((dim, dim)))
+    C = q @ np.diag(np.linspace(0.5, 2.0, dim)) @ q.T
+    st = cmaes.CMAState(mean=rng.uniform(-3, 3, dim), sigma=0.8,
+                        C=0.5 * (C + C.T),
+                        p_sigma=rng.standard_normal(dim) * 0.3,
+                        p_c=rng.standard_normal(dim) * 0.3,
+                        best_f=50.0, best_x=rng.uniform(-3, 3, dim),
+                        evals=120, gen=12)
+    _compare_one_generation(st, zrng.standard_normal((lam, dim)), "midrun")
+
+
+def test_cma_update_jits_and_vmaps():
+    """The port composes: jit(vmap(cma_update)) over a stacked population."""
+    dim, B = 6, 4
+    lam = cmaes.cma_consts(dim)["lam"]
+    keys = jax.random.split(jax.random.PRNGKey(0), B)
+    pop = jax.vmap(lambda k: cmaes.cma_init_j(k, dim))(keys)
+    z = jax.random.normal(jax.random.PRNGKey(1), (B, lam, dim))
+    step = jax.jit(jax.vmap(
+        lambda s, zz: cmaes.cma_update(s, zz, cmaes.rastrigin_j)))
+    out = step(pop, z)
+    assert out.mean.shape == (B, dim)
+    assert np.all(np.asarray(out.gen) == 1)
+    # vmapped == loop of single updates
+    for b in range(B):
+        solo = cmaes.cma_update(jax.tree.map(lambda a: a[b], pop), z[b],
+                                cmaes.rastrigin_j)
+        assert np.allclose(np.asarray(out.mean)[b], np.asarray(solo.mean),
+                           rtol=1e-5, atol=1e-6)
+
+
+def test_migrate_moves_best_into_worst():
+    from repro.core import simulation as SIM
+    dim, B = 4, 3
+    keys = jax.random.split(jax.random.PRNGKey(0), B)
+    pop = jax.vmap(lambda k: cmaes.cma_init_j(k, dim))(keys)
+    pop = cmaes.CMAStateJ(**{**{f: getattr(pop, f)
+                                for f in ("mean", "sigma", "C", "p_sigma",
+                                          "p_c", "best_x", "evals", "gen")},
+                             "best_f": jnp.asarray([3.0, 0.5, 9.0])})
+    out = cmaes.migrate(pop, SIM.Reduce(None))
+    # worst (index 2) re-centered on the global best mean, sigma re-excited
+    assert np.allclose(np.asarray(out.mean)[2], np.asarray(pop.best_x)[1])
+    assert float(out.sigma[2]) >= 0.5
+    assert np.allclose(np.asarray(out.C)[2], np.eye(dim))
+    # the others untouched
+    assert np.allclose(np.asarray(out.mean)[[0, 1]],
+                       np.asarray(pop.mean)[[0, 1]])
+
+
+def test_restart_collapsed_preserves_best():
+    dim = 5
+    st = cmaes.cma_init_j(jax.random.PRNGKey(0), dim)
+    st = cmaes.CMAStateJ(**{**{f: getattr(st, f)
+                               for f in ("mean", "C", "p_sigma", "p_c",
+                                         "evals", "gen")},
+                            "sigma": jnp.asarray(1e-12),
+                            "best_f": jnp.asarray(0.25),
+                            "best_x": jnp.full((dim,), 2.0)})
+    out = cmaes.restart_collapsed(st, jax.random.PRNGKey(1))
+    assert float(out.sigma) == 2.0               # re-excited
+    assert float(out.best_f) == 0.25             # best-so-far survives
+    assert np.allclose(np.asarray(out.best_x), 2.0)
+    # a healthy instance passes through untouched
+    healthy = cmaes.CMAStateJ(**{**{f: getattr(st, f)
+                                    for f in ("mean", "C", "p_sigma", "p_c",
+                                              "best_f", "best_x", "evals",
+                                              "gen")},
+                                 "sigma": jnp.asarray(0.7)})
+    same = cmaes.restart_collapsed(healthy, jax.random.PRNGKey(1))
+    assert float(same.sigma) == pytest.approx(0.7)
+    assert np.allclose(np.asarray(same.mean), np.asarray(healthy.mean))
+
+
+def test_jax_swarm_beats_independent():
+    """The paper's §4.6 claim on the batched engine (mirrors the numpy
+    test in test_system.py)."""
+    bf_s, _, ev = cmaes.ps_cma_es_jax(cmaes.rastrigin_j, 10, 4, 20000,
+                                      seed=3, swarm=True)
+    bf_i, _, _ = cmaes.ps_cma_es_jax(cmaes.rastrigin_j, 10, 4, 20000,
+                                     seed=3, swarm=False)
+    assert ev >= 20000
+    assert bf_s <= bf_i
+
+
+@pytest.mark.slow
+def test_jax_success_rate_no_worse_than_numpy():
+    """Acceptance: at the same evaluation budget, the batched engine's
+    success rate on shifted Rastrigin is no worse than the numpy loop."""
+    sr_np = cmaes.success_rate(cmaes.rastrigin, 6, 8, 20000,
+                               n_particles=4, swarm=True, seed0=0)
+    sr_j = cmaes.success_rate_jax(cmaes.rastrigin_j, 6, 8, 20000,
+                                  n_particles=4, swarm=True, seed0=0)
+    assert sr_j >= sr_np

@@ -1,0 +1,279 @@
+"""Fleet engine acceptance (DESIGN.md §11).
+
+The contract under test:
+  * fleet-vs-loop — the batched step advances every member exactly as a
+    python loop of single-sim ``make_sim_step`` runs would (MD and SPH);
+  * batch=1 degeneracy — serial single-sim IS the one-member fleet;
+  * per-member overflow isolation — one member blowing its capacity
+    contract surfaces on ITS flag row and leaves siblings bit-identical;
+  * the serving driver — join/leave over one compiled step (jit cache
+    stays at 1 across churn), bounded admission, streamed results with no
+    ``.tmp`` residue, results identical to independent runs;
+  * the auto-reprovision control plane for the vortex ``mesh_halo``
+    (injected fake step factory — the loop, not the physics, is under
+    test here; the physics path is covered by the distributed suite).
+"""
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import md
+from repro.apps import sph
+from repro.core import simulation as SIM
+from repro.fleet import FleetServer, SimRequest
+from repro.fleet import batch as FB
+
+TOL = 1e-6
+
+
+def _md_cfg(**kw):
+    return md.MDConfig(n_per_side=3, **kw)
+
+
+def _md_state(cfg, seed):
+    ps = md.init_particles(cfg)
+    v = 0.05 * jax.random.normal(jax.random.PRNGKey(seed), ps.x.shape)
+    ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+    return SIM.serial_state(ps, md.physics, cfg)
+
+
+def _max_err(a, b):
+    return float(jnp.abs(jnp.asarray(a) - jnp.asarray(b)).max())
+
+
+# --------------------------------------------------------------------------
+# fleet-vs-loop equivalence
+# --------------------------------------------------------------------------
+
+def test_fleet_matches_loop_md():
+    """vmap over the batch axis == python loop of single runs (MD)."""
+    cfg = _md_cfg()
+    states = [_md_state(cfg, s) for s in range(3)]
+    ens = FB.stack_members(states)
+    fstep = FB.make_fleet_step(md.physics, cfg)
+    sstep = SIM.make_sim_step(md.physics, cfg)
+    for _ in range(3):
+        ens, flags, _ = fstep(ens, {})
+        states = [sstep(s, {})[0] for s in states]
+    assert flags.cell.shape == (3,)
+    for b, s in enumerate(states):
+        assert _max_err(FB.member_at(ens, b).ps.x, s.ps.x) <= TOL
+        assert _max_err(FB.member_at(ens, b).ps.props["v"],
+                        s.ps.props["v"]) <= TOL
+
+
+def test_fleet_matches_loop_sph():
+    """Same, for SPH — whose extras (``euler``) exercise the batched-extras
+    convention (every entry carries a leading (B,) axis)."""
+    cfg = sph.SPHConfig(dp=0.05, box=(1.0, 0.5), fluid=(0.25, 0.25))
+    states = []
+    for seed in range(2):
+        ps = sph.init_dam_break(cfg)
+        v = 0.01 * jax.random.normal(jax.random.PRNGKey(seed),
+                                     ps.props["v"].shape)
+        ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+        states.append(SIM.serial_state(ps, sph.physics, cfg))
+    ens = FB.stack_members(states)
+    fstep = FB.make_fleet_step(sph.physics, cfg)
+    sstep = SIM.make_sim_step(sph.physics, cfg)
+    for i in range(3):
+        euler = jnp.asarray(i == 0)
+        ens, _, scal = fstep(ens, FB.broadcast_extras({"euler": euler}, 2))
+        states = [sstep(s, {"euler": euler})[0] for s in states]
+    assert scal["dt"].shape == (2,)
+    for b, s in enumerate(states):
+        assert _max_err(FB.member_at(ens, b).ps.x, s.ps.x) <= TOL
+        assert _max_err(FB.member_at(ens, b).ps.props["v"],
+                        s.ps.props["v"]) <= TOL
+
+
+def test_batch_one_degenerates_to_serial():
+    """Serial single-sim is the batch=1 fleet — same trajectory, bitwise."""
+    cfg = _md_cfg()
+    st = _md_state(cfg, 7)
+    ens = FB.stack_members([st])
+    fstep = FB.make_fleet_step(md.physics, cfg)
+    sstep = SIM.make_sim_step(md.physics, cfg)
+    for _ in range(3):
+        ens, flags, _ = fstep(ens, {})
+        st, sflags, _ = sstep(st, {})
+    assert _max_err(FB.member_at(ens, 0).ps.x, st.ps.x) == 0.0
+    assert int(flags.cell[0]) == int(sflags.cell)
+
+
+# --------------------------------------------------------------------------
+# per-member overflow isolation
+# --------------------------------------------------------------------------
+
+def test_member_overflow_is_isolated():
+    """Member 0 (all particles crammed into one cell, tiny cell_cap)
+    overflows; member 1 (normal lattice) must see a zero flag row and a
+    trajectory bit-identical to its solo run."""
+    cfg = _md_cfg(cell_cap=8)
+    bad = _md_state(cfg, 0)
+    # cram every particle into a corner cell: guaranteed cell-list overflow
+    bad = dataclasses.replace(
+        bad, ps=bad.ps.replace(x=jnp.where(
+            bad.ps.valid[:, None],
+            0.01 + 0.05 * bad.ps.x * cfg.r_cut, bad.ps.x)))
+    good = _md_state(cfg, 1)
+    ens = FB.stack_members([bad, good])
+    fstep = FB.make_fleet_step(md.physics, cfg)
+    sstep = SIM.make_sim_step(md.physics, cfg)
+    solo = good
+    for _ in range(2):
+        ens, flags, _ = fstep(ens, {})
+        solo, solo_flags, _ = sstep(solo, {})
+        assert int(flags.cell[0]) > 0          # the offender surfaces...
+        assert int(flags.cell[1]) == int(solo_flags.cell) == 0
+    # ...and the sibling is untouched by it
+    assert _max_err(FB.member_at(ens, 1).ps.x, solo.ps.x) == 0.0
+
+
+def test_inactive_slots_pass_through():
+    cfg = _md_cfg()
+    states = [_md_state(cfg, s) for s in range(2)]
+    ens = FB.stack_members(states, active=jnp.asarray([True, False]))
+    fstep = FB.make_fleet_step(md.physics, cfg)
+    ens2, flags, _ = fstep(ens, {})
+    assert _max_err(FB.member_at(ens2, 1).ps.x,
+                    FB.member_at(ens, 1).ps.x) == 0.0
+    assert int(flags.cell[1]) == 0
+
+
+# --------------------------------------------------------------------------
+# the serving driver
+# --------------------------------------------------------------------------
+
+def test_server_churn_without_recompile(tmp_path):
+    """5 requests through 2 slots: every join/leave reuses the ONE compiled
+    step (cache size 1), every result equals its independent serial run,
+    and streamed checkpoints publish atomically (no .tmp residue)."""
+    cfg = _md_cfg()
+    reqs = [(seed, 3 + seed % 3) for seed in range(5)]
+    srv = FleetServer(md.physics, cfg, n_slots=2, template=_md_state(cfg, 0),
+                      out_dir=str(tmp_path))
+    for rid, (seed, n) in enumerate(reqs):
+        srv.submit(SimRequest(rid=rid, state=_md_state(cfg, seed), n_steps=n))
+    with srv:
+        results = srv.run()
+    assert srv.step_cache_size() == 1
+    assert sorted(r.rid for r in results) == list(range(5))
+
+    sstep = SIM.make_sim_step(md.physics, cfg)
+    for rid, (seed, n) in enumerate(reqs):
+        st = _md_state(cfg, seed)
+        for _ in range(n):
+            st, _, _ = sstep(st, {})
+        res = next(r for r in results if r.rid == rid)
+        assert res.steps_done == n
+        assert _max_err(st.ps.x, res.state.ps.x) == 0.0
+        assert all(v == 0 for v in res.flags_max.values())
+
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert sorted(p.name for p in tmp_path.iterdir()) == [
+        f"sim_{r}" for r in range(5)]
+    from repro.io import checkpoint as CK
+    ps, step, meta = CK.load_particles(tmp_path / "sim_0",
+                                       capacity=cfg.n_particles)
+    assert step == 3 and meta["rid"] == "0"
+
+    snap = srv.metrics.snapshot()
+    assert snap["schema"] == "repro-fleet-metrics/v1"
+    assert snap["counters"]["sims_completed"] == 5
+    assert snap["counters"]["sims_submitted"] == 5
+    assert snap["gauges"]["n_slots"] == 2
+    assert snap["rates"]["sims_per_sec"] > 0
+
+
+def test_server_bounded_queue():
+    cfg = _md_cfg()
+    srv = FleetServer(md.physics, cfg, n_slots=1, template=_md_state(cfg, 0),
+                      queue_cap=1)
+    import queue as _q
+    srv.submit(SimRequest(rid=0, state=_md_state(cfg, 0), n_steps=1))
+    with pytest.raises(_q.Full):
+        srv.submit(SimRequest(rid=1, state=_md_state(cfg, 1), n_steps=1),
+                   block=False)
+
+
+def test_server_per_member_extras():
+    """SPH through the server: each request's ``extras_fn`` sees its OWN
+    step count (member-local euler flag), matching per-run serial loops."""
+    cfg = sph.SPHConfig(dp=0.05, box=(1.0, 0.5), fluid=(0.25, 0.25))
+
+    def make_state(seed):
+        ps = sph.init_dam_break(cfg)
+        v = 0.01 * jax.random.normal(jax.random.PRNGKey(seed),
+                                     ps.props["v"].shape)
+        ps = ps.with_prop("v", jnp.where(ps.valid[:, None], v, 0.0))
+        return SIM.serial_state(ps, sph.physics, cfg)
+
+    def extras_fn(i):
+        return {"euler": jnp.asarray(i == 0)}
+
+    srv = FleetServer(sph.physics, cfg, n_slots=2, template=make_state(0),
+                      default_extras={"euler": jnp.asarray(False)})
+    # staggered joins: rid 2 joins after rid 0 retires, so its euler=True
+    # first step happens while rid 1 is mid-run — per-member step counts
+    for rid, n in [(0, 2), (1, 4), (2, 3)]:
+        srv.submit(SimRequest(rid=rid, state=make_state(rid), n_steps=n,
+                              extras_fn=extras_fn))
+    results = srv.run()
+    assert srv.step_cache_size() == 1
+    sstep = SIM.make_sim_step(sph.physics, cfg)
+    for rid, n in [(0, 2), (1, 4), (2, 3)]:
+        st = make_state(rid)
+        for i in range(n):
+            st, _, _ = sstep(st, extras_fn(i))
+        res = next(r for r in results if r.rid == rid)
+        assert _max_err(st.ps.x, res.state.ps.x) <= TOL
+
+
+# --------------------------------------------------------------------------
+# vortex mesh_halo auto-reprovision (the control loop, via a fake step)
+# --------------------------------------------------------------------------
+
+def _fake_factory(need_halo, calls):
+    def factory(mesh, cfg, axis_name):
+        calls.append(cfg.mesh_halo)
+
+        def step(f):
+            ovf = 0 if cfg.mesh_halo >= need_halo else 1
+            return f, jnp.asarray(ovf, jnp.int32)
+
+        return step
+
+    return factory
+
+
+def test_vortex_auto_reprovision_grows_halo():
+    from repro.apps import vortex as V
+    from repro.core import runtime as RT
+    mesh = RT.make_mesh((1,), ("shards",), devices=jax.devices()[:1])
+    cfg = V.VortexConfig(shape=(16, 8, 8), lengths=(4.0, 2.0, 2.0),
+                         mesh_halo=2)
+    calls = []
+    w, z0, z1, cfg_out = V.run_distributed(
+        cfg, 2, mesh, "shards", auto_reprovision=True,
+        _make_step=_fake_factory(8, calls))
+    # doubled 2 -> 4 -> 8, then both steps ran clean at 8 (no new factory)
+    assert calls == [2, 4, 8]
+    assert cfg_out.mesh_halo == 8
+    assert w.shape == (16, 8, 8, 3)
+
+
+def test_vortex_auto_reprovision_ceiling_raises():
+    from repro.apps import vortex as V
+    from repro.core import runtime as RT
+    mesh = RT.make_mesh((1,), ("shards",), devices=jax.devices()[:1])
+    cfg = V.VortexConfig(shape=(16, 8, 8), lengths=(4.0, 2.0, 2.0),
+                         mesh_halo=2)
+    with pytest.raises(RuntimeError, match="geometric ceiling"):
+        # needs a halo beyond the slab height (16): never satisfiable
+        V.run_distributed(cfg, 1, mesh, "shards", auto_reprovision=True,
+                          _make_step=_fake_factory(10 ** 9, []))

@@ -34,6 +34,27 @@ def test_checkpoint_async_then_load(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
 
 
+def test_checkpoint_flush_leaves_no_tmp(tmp_path):
+    """Crash-free exit contract (fleet/server.py relies on it): after
+    ``flush()`` — or the ``async_writes`` scope — every async save has
+    atomically published; no ``.tmp`` directory survives."""
+    trees = {f"ck{i}": {"w": jnp.full((64,), float(i))} for i in range(4)}
+    with CK.async_writes():
+        for name, tree in trees.items():
+            CK.save(tmp_path / name, tree, step=1, block=False)
+    assert list(tmp_path.glob("*.tmp")) == []
+    assert sorted(p.name for p in tmp_path.iterdir()) == sorted(trees)
+    for name, tree in trees.items():
+        out, _, _ = CK.load(tmp_path / name, tree)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+    # targeted flush: joins one path's writer, leaves the registry sane
+    CK.save(tmp_path / "one", {"w": jnp.ones(8)}, block=False)
+    CK.flush(tmp_path / "one")
+    assert (tmp_path / "one").is_dir()
+    assert not (tmp_path / "one.tmp").exists()
+
+
 def test_checkpoint_corruption_detected(tmp_path):
     tree = {"w": jnp.arange(50.0)}
     CK.save(tmp_path / "ck", tree, step=1)

@@ -165,6 +165,15 @@ def test_distributed_overflow_flags():
 
 
 @pytest.mark.distributed
+def test_distributed_fleet_and_cmaes():
+    """Fleet batch axis sharded over 8 devices: batched-vs-loop
+    equivalence, server churn against one compiled step, and the sharded
+    PS-CMA-ES population matching its single-device run."""
+    run_distributed_pytest("tests/distributed/test_dist_fleet.py",
+                           min_passed=3)
+
+
+@pytest.mark.distributed
 @pytest.mark.slow
 def test_distributed_sph_with_dlb():
     """Paper Table 3 showcase: dam break under DLB — SAR triggers

@@ -37,4 +37,7 @@ python benchmarks/backend_compare.py
 echo "== simulation engine vs frozen pre-refactor steps (ratio gate) =="
 python benchmarks/bench_sim_engine.py
 
+echo "== fleet batched step vs python-loop of single runs (speedup gate) =="
+python benchmarks/bench_fleet.py
+
 echo "smoke OK"

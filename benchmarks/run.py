@@ -13,7 +13,8 @@ Prints ``name,us_per_call,derived`` CSV.
   bench_dem      — paper Fig 11 (DEM avalanche): per-step rebuild + the
                     skin-amortized cached-contact-list row
   bench_cmaes    — paper Fig 12 (PS-CMA-ES)
-  bench_roofline — production-mesh roofline per dry-run cell
+  bench_roofline — production-mesh roofline per dry-run cell (skip row on
+                    a fresh clone with no artifacts/dryrun)
   backend_compare — unified cell-pair engine: jnp vs pallas(interpret)
                     timing + relative divergence for MD / SPH / DEM
   bench_distributed — MD weak scaling on 1/2/4/8 forced host devices
@@ -28,27 +29,55 @@ Prints ``name,us_per_call,derived`` CSV.
                     axis sharded over 8 forced host devices; rows mirror
                     into artifacts/bench_fleet.json under the
                     repro-fleet-metrics/v1 schema
+  bench_overlap  — split-phase interior/boundary stepping gate: the
+                    overlapped make_sim_step schedules the ghost_get
+                    ppermute before the interior pair fusions (HLO order
+                    check via launch/hlo_analysis.overlap_report) and is
+                    no slower than the blocking chain on 8 forced host
+                    devices; rows mirror into artifacts/bench_overlap.json
+
+Usage: python benchmarks/run.py [--all] [--only NAME[,NAME...]]
+  --all  (default) run every module; a module that raises is reported as
+         a `<name>_error` row and the harness keeps going — a fresh clone
+         with no artifacts must still complete the sweep.
+  --only run the named module(s) only (e.g. --only bench_overlap).
 """
-import sys
+import argparse
 import pathlib
+import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
+MODULES = (
+    "bench_membw", "bench_md", "bench_sph", "bench_stencil", "bench_vortex",
+    "bench_interp", "bench_dem", "bench_cmaes", "backend_compare",
+    "bench_distributed", "bench_sim_engine", "bench_fleet", "bench_overlap",
+    "bench_roofline",
+)
+
 
 def main() -> None:
-    from benchmarks import (backend_compare, bench_cmaes, bench_dem,
-                            bench_distributed, bench_fleet, bench_interp,
-                            bench_md, bench_membw, bench_roofline,
-                            bench_sim_engine, bench_sph, bench_stencil,
-                            bench_vortex)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true", default=False,
+                    help="run every benchmark module (the default)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of modules to run")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] \
+        if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        ap.error(f"unknown module(s) {unknown}; known: {', '.join(MODULES)}")
+    import importlib
     print("name,us_per_call,derived")
-    for mod in (bench_membw, bench_md, bench_sph, bench_stencil,
-                bench_vortex, bench_interp, bench_dem, bench_cmaes,
-                backend_compare, bench_distributed, bench_sim_engine,
-                bench_fleet, bench_roofline):
-        for line in mod.run():
-            print(line, flush=True)
+    for name in names:
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:  # keep sweeping: surface, don't crash
+            print(f"{name}_error,0.000,{type(e).__name__}: {e}", flush=True)
 
 
 if __name__ == '__main__':

@@ -61,6 +61,7 @@ class DEMConfig:
     skin: float = 0.02
     backend: str = "jnp"               # "jnp" | "pallas" normal-force path
     interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
+    precision: str = "fp32"            # "fp32" | "bf16x" pair-engine mode
 
     @property
     def r_cut(self) -> float:
@@ -142,7 +143,8 @@ def normal_forces(ps: P.ParticleSet, cfg: DEMConfig, backend: str = "jnp",
     out = I.apply_pair_kernel(ps, cl, dem_normal_body(cfg),
                               out={"f": "radial"}, r_cut=cfg.r_cut,
                               prop_names=("v",), backend=backend,
-                              interpret=interpret)
+                              interpret=interpret,
+                              precision=cfg.precision)
     return out["f"], cl.overflow
 
 
@@ -318,6 +320,7 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
         ghost_props=("v", "w", "id"),
         advance=None, finish=finish,
         backend=cfg.backend, interpret=cfg.interpret,
+        precision=cfg.precision,
         bucket_cap=512, ghost_cap=1024)
 
 

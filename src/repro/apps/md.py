@@ -42,6 +42,7 @@ class MDConfig:
     dim: int = 3
     backend: str = "jnp"               # "jnp" | "pallas" pair-engine path
     interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
+    precision: str = "fp32"            # "fp32" | "bf16x" pair-engine mode
 
     @property
     def r_cut(self) -> float:
@@ -93,6 +94,7 @@ def physics(cfg: MDConfig) -> SIM.PhysicsSpec:
         pair_props=(), ghost_props=(),   # ghosts carry positions only
         advance=advance, finish=finish,
         backend=cfg.backend, interpret=cfg.interpret,
+        precision=cfg.precision,
         bucket_cap=512, ghost_cap=1024)
 
 
@@ -142,7 +144,8 @@ def compute_forces(ps: P.ParticleSet, cfg: MDConfig):
     cl = CL.build_cell_list(ps, **_cl_kw(cfg))
     out = I.apply_pair_kernel(ps, cl, lj_pair_body(cfg.sigma, cfg.epsilon),
                               out={"f": "radial"}, r_cut=cfg.r_cut,
-                              backend=cfg.backend, interpret=cfg.interpret)
+                              backend=cfg.backend, interpret=cfg.interpret,
+                              precision=cfg.precision)
     return ps.with_prop("f", out["f"]), cl.overflow
 
 

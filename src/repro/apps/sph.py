@@ -50,6 +50,7 @@ class SPHConfig:
     verlet_reset: int = 40
     backend: str = "jnp"               # "jnp" | "pallas" pair-engine path
     interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
+    precision: str = "fp32"            # "fp32" | "bf16x" pair-engine mode
 
     @property
     def h(self) -> float:
@@ -180,6 +181,7 @@ def physics(cfg: SPHConfig) -> SIM.PhysicsSpec:
         ghost_props=("v", "rho", "kind"),   # property-subset ghost_get
         advance=None, finish=finish,
         backend=cfg.backend, interpret=cfg.interpret,
+        precision=cfg.precision,
         extras_example=("euler",),
         bucket_cap=2048, ghost_cap=2048)
 
@@ -267,7 +269,8 @@ def compute_rates(ps: P.ParticleSet, cfg: SPHConfig):
     out = I.apply_pair_kernel(ps, cl, sph_pair_body(cfg),
                               out={"a": "radial", "drho": "scalar"},
                               r_cut=cfg.r_cut, prop_names=("v", "rho"),
-                              backend=cfg.backend, interpret=cfg.interpret)
+                              backend=cfg.backend, interpret=cfg.interpret,
+                              precision=cfg.precision)
     grav = jnp.zeros((cfg.dim,), jnp.float32).at[-1].set(-cfg.g)
     fluid = ps.props["kind"] == FLUID
     a = jnp.where(fluid[:, None], out["a"] + grav, 0.0)

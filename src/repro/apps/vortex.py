@@ -45,6 +45,7 @@ class VortexConfig:
     gamma: float = 1.0
     # particle–mesh interpolation subsystem (steps 3–5)
     use_pallas: bool = False          # kernels/m4_interp instead of core/interp
+    precision: str = "fp32"           # "fp32" | "bf16x" M'4 Pallas-leg mode
     remesh_threshold: float = 0.0     # |ω| node re-seed cutoff (0 = all nodes)
     interp_cb: int = 4                # mesh nodes per interpolation cell/axis
     interp_cell_cap: int = 0          # particle slots per cell (0 = auto)
@@ -150,10 +151,11 @@ def _interp_ops(cfg: VortexConfig, kw):
                                        cell_cap=cfg.interp_cell_cap, **pk)
 
         def m2p2(b, fa, fb, x, valid):
-            return M4.m2p_fused_bucketed(b, (fa, fb), valid, **pk)
+            return M4.m2p_fused_bucketed(b, (fa, fb), valid,
+                                         precision=cfg.precision, **pk)
 
         def p2m_(b, x, val, valid):
-            return M4.p2m_bucketed(b, val, **pk)
+            return M4.p2m_bucketed(b, val, precision=cfg.precision, **pk)
 
         def ovf(b):
             return b.overflow
@@ -255,7 +257,8 @@ def run(cfg: VortexConfig, n_steps: int):
 # --------------------------------------------------------------------------
 
 def make_distributed_vic_step(mesh, cfg: VortexConfig,
-                              axis_name: str = "shards"):
+                              axis_name: str = "shards", *,
+                              stencil_overlap: bool = True):
     """Fully sharded VIC step: the mesh half lives in a
     ``grid.DistributedField`` (slab along the long axis) exactly as the
     particle half lives in ``DistributedParticles`` — no replicated
@@ -304,9 +307,15 @@ def make_distributed_vic_step(mesh, cfg: VortexConfig,
     kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0),
               box_hi=cfg.lengths, periodic=(True, True, True))
     hs = [L / n for n, L in zip(cfg.shape, cfg.lengths)]
-    curl_st = G.apply_stencil_local(lambda p: curl(p, hs), 1, axis_name)
+    # stencil_overlap: the two-slot halo mode — the halo-1 ppermutes are
+    # issued first and interior mesh rows are differenced while the faces
+    # are in flight (split-phase stepping, DESIGN.md §12); False keeps the
+    # blocking ghost_get chain as the A/B baseline
+    curl_st = G.apply_stencil_local(lambda p: curl(p, hs), 1, axis_name,
+                                    overlap=stencil_overlap)
     rhs_st = G.apply_stencil_local(
-        lambda wp, up: rhs_field(wp, up, cfg), 1, axis_name)
+        lambda wp, up: rhs_field(wp, up, cfg), 1, axis_name,
+        overlap=stencil_overlap)
 
     def local_step(f: G.DistributedField):
         me = RT.axis_index(axis_name)

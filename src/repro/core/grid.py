@@ -27,9 +27,19 @@ hooks get both mappings backend-degenerate through :class:`GridOps` (the
 grid mirror of ``simulation.Reduce``): serially they are the single-device
 pad/wrap with identical semantics.
 
-The interior/boundary split for compute-comm overlap (paper §3.6) falls out
-of XLA's scheduler: the ppermute and the interior stencil have no data
-dependence, so the latency-hiding scheduler overlaps them.
+The interior/boundary split for compute-comm overlap (paper §3.6) is made
+explicit by the two-slot halo mode (DESIGN.md §12): :func:`halo_pad_start`
+issues the neighbor ``ppermute`` pair and returns the two in-flight slots,
+:func:`halo_pad_finish` assembles the padded block once the receiving code
+actually needs ghost rows. ``apply_stencil_local(..., overlap=True)``
+exploits it — the stencil runs on the *unpadded* interior block (no data
+dependence on the exchange, so XLA's latency-hiding scheduler flies the
+ppermutes underneath it) and only two 3·halo-row edge strips wait for the
+slots. The dual :func:`halo_reduce_start` / :func:`halo_reduce_finish`
+split ghost_put the same way. Contract: the stencil must have radius
+<= halo and map a block of n rows to n rows (roll/shift style), and the
+local block must hold >= 2*halo rows; the helpers fall back to the
+blocking path otherwise.
 """
 from __future__ import annotations
 
@@ -46,13 +56,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import runtime as RT
 
 
-def halo_pad(field: jax.Array, halo: int, axis_name: str, *,
-             periodic: bool = True, fill: float = 0.0) -> jax.Array:
-    """Pad the leading axis of a local block with ``halo`` rows from the
-    neighboring shards (inside shard_map). Non-periodic edges get ``fill``
-    (Dirichlet) padding; use ``edge`` semantics by passing fill=None."""
-    if halo == 0:
-        return field
+def halo_pad_start(field: jax.Array, halo: int, axis_name: str, *,
+                   periodic: bool = True, fill: float = 0.0):
+    """First half of the two-slot ghost_get: issue the neighbor ``ppermute``
+    pair and return the in-flight ``(from_left, from_right)`` halo slots.
+    Code scheduled between start and :func:`halo_pad_finish` that does not
+    touch the slots overlaps with the exchange. Non-periodic edges get
+    ``fill`` (Dirichlet) slots; ``fill=None`` replicates the edge row."""
     ndev = RT.axis_size(axis_name)
     me = RT.axis_index(axis_name)
     lo_face = field[:halo]          # my lowest rows -> left neighbor's high halo
@@ -69,7 +79,28 @@ def halo_pad(field: jax.Array, halo: int, axis_name: str, *,
             pad_hi = jnp.full_like(from_right, fill)
         from_left = jnp.where(me == 0, pad_lo, from_left)
         from_right = jnp.where(me == ndev - 1, pad_hi, from_right)
+    return from_left, from_right
+
+
+def halo_pad_finish(field: jax.Array, from_left: jax.Array,
+                    from_right: jax.Array) -> jax.Array:
+    """Second half of the two-slot ghost_get: assemble the padded block from
+    the local field and the arrived halo slots."""
     return jnp.concatenate([from_left, field, from_right], axis=0)
+
+
+def halo_pad(field: jax.Array, halo: int, axis_name: str, *,
+             periodic: bool = True, fill: float = 0.0) -> jax.Array:
+    """Pad the leading axis of a local block with ``halo`` rows from the
+    neighboring shards (inside shard_map). Non-periodic edges get ``fill``
+    (Dirichlet) padding; use ``edge`` semantics by passing fill=None.
+    Blocking composition of :func:`halo_pad_start` + :func:`halo_pad_finish`.
+    """
+    if halo == 0:
+        return field
+    from_left, from_right = halo_pad_start(field, halo, axis_name,
+                                           periodic=periodic, fill=fill)
+    return halo_pad_finish(field, from_left, from_right)
 
 
 def halo_pad_local(field: jax.Array, halo: int, *, periodic: bool = True,
@@ -121,11 +152,22 @@ def halo_reduce(padded: jax.Array, halo: int, axis_name: str, *,
     """
     if halo == 0:
         return padded
+    from_left, from_right = halo_reduce_start(padded, halo, axis_name,
+                                              periodic=periodic)
+    return halo_reduce_finish(padded, halo, from_left, from_right)
+
+
+def halo_reduce_start(padded: jax.Array, halo: int, axis_name: str, *,
+                      periodic: bool = True):
+    """First half of the two-slot ghost_put: ship the foreign halo rows of a
+    locally accumulated padded block toward their owners and return the
+    in-flight ``(from_left, from_right)`` contribution slots. Work that only
+    touches the core rows ``padded[halo:-halo]`` can proceed while the
+    exchange flies."""
     ndev = RT.axis_size(axis_name)
     me = RT.axis_index(axis_name)
     lo_rows = padded[:halo]       # owned by my LEFT neighbor
     hi_rows = padded[-halo:]      # owned by my RIGHT neighbor
-    core = padded[halo:-halo]
     right, left = RT.shift_perms(ndev)
     # my low rows travel left; what I receive came from my right neighbor
     from_right = RT.ppermute(lo_rows, axis_name, left)
@@ -134,6 +176,14 @@ def halo_reduce(padded: jax.Array, halo: int, axis_name: str, *,
         from_left = jnp.where(me == 0, jnp.zeros_like(from_left), from_left)
         from_right = jnp.where(me == ndev - 1, jnp.zeros_like(from_right),
                                from_right)
+    return from_left, from_right
+
+
+def halo_reduce_finish(padded: jax.Array, halo: int, from_left: jax.Array,
+                       from_right: jax.Array) -> jax.Array:
+    """Second half of the two-slot ghost_put: fold the arrived neighbor
+    contributions into the owned edge rows and return the interior block."""
+    core = padded[halo:-halo]
     core = core.at[:halo].add(from_left)
     return core.at[-halo:].add(from_right)
 
@@ -254,19 +304,31 @@ class GridOps:
 
 def apply_stencil_local(stencil_fn: Callable, halo: int,
                         axis_name: Optional[str] = None, *,
-                        periodic: bool = True, fill: float = 0.0):
+                        periodic: bool = True, fill: float = 0.0,
+                        overlap: bool = False):
     """The local engine of :func:`make_stencil_step`, reusable inside an
     enclosing shard_map (``axis_name`` set) or serially (``None``): pad each
     field by ``halo`` on the leading axis, apply ``stencil_fn`` to the
     padded blocks, trim outputs of padded shape back to the interior.
-    Returns ``run(*fields) -> tuple(new_fields)``."""
+    Returns ``run(*fields) -> tuple(new_fields)``.
+
+    ``overlap=True`` selects the split-phase schedule (DESIGN.md §12):
+    :func:`halo_pad_start` issues the exchange, ``stencil_fn`` runs on the
+    *unpadded* blocks (its rows ``[halo, n-halo)`` are ghost-independent and
+    overlap with the ppermutes), and only two 3·halo-row edge strips consume
+    the arrived slots. Requires the two-slot stencil contract — radius
+    <= halo and n-rows-to-n-rows (roll/shift style) — plus ``n >= 2*halo``
+    and uniform leading sizes; falls back to the blocking path when the
+    static shapes do not allow it. Output rows are bitwise identical to the
+    blocking path for any elementwise-composed stencil (identical arithmetic
+    per output row either way)."""
 
     def pad(f):
         if axis_name is None:
             return halo_pad_local(f, halo, periodic=periodic, fill=fill)
         return halo_pad(f, halo, axis_name, periodic=periodic, fill=fill)
 
-    def run(*fields):
+    def run_blocking(*fields):
         out = stencil_fn(*(pad(f) for f in fields))
         if not isinstance(out, tuple):
             out = (out,)
@@ -277,21 +339,57 @@ def apply_stencil_local(stencil_fn: Callable, halo: int,
             trimmed.append(o)
         return tuple(trimmed)
 
-    return run
+    if not overlap or halo == 0 or axis_name is None:
+        return run_blocking
+
+    def run_overlap(*fields):
+        n = fields[0].shape[0]
+        if n < 2 * halo or any(f.shape[0] != n for f in fields):
+            return run_blocking(*fields)
+        # 1) exchange in flight
+        slots = [halo_pad_start(f, halo, axis_name, periodic=periodic,
+                                fill=fill) for f in fields]
+        # 2) interior: no data dependence on the slots — overlaps the
+        #    ppermutes. Rows [halo, n-halo) of an n->n stencil on the raw
+        #    block never read a wrapped row, so they are already final.
+        interior = stencil_fn(*fields)
+        # 3) boundary: two 3*halo-row strips (= padded[:3h] / padded[-3h:])
+        #    whose middle halo rows are the edge outputs.
+        lo_out = stencil_fn(*(jnp.concatenate([fl, f[:2 * halo]], axis=0)
+                              for f, (fl, _) in zip(fields, slots)))
+        hi_out = stencil_fn(*(jnp.concatenate([f[-2 * halo:], fr], axis=0)
+                              for f, (_, fr) in zip(fields, slots)))
+        if not isinstance(interior, tuple):
+            interior, lo_out, hi_out = (interior,), (lo_out,), (hi_out,)
+        combined = []
+        for o_int, o_lo, o_hi in zip(interior, lo_out, hi_out):
+            if o_int.shape[0] != n:
+                raise ValueError(
+                    "overlap=True needs an n-rows-to-n-rows stencil_fn "
+                    f"(got {o_int.shape[0]} rows from {n})")
+            combined.append(jnp.concatenate(
+                [o_lo[halo:2 * halo], o_int[halo:n - halo],
+                 o_hi[halo:2 * halo]], axis=0))
+        return tuple(combined)
+
+    return run_overlap
 
 
 def make_stencil_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
                       halo: int, *, periodic: bool = True, fill: float = 0.0,
-                      n_fields: int = 1):
+                      n_fields: int = 1, overlap: bool = False):
     """Build a jitted distributed stencil step over raw sharded arrays.
 
     ``stencil_fn(*padded_fields) -> tuple(new_fields)`` receives blocks padded
     by ``halo`` along the leading (sharded) axis and must return arrays of the
     padded shape (the wrapper slices the interior) or of the interior shape.
+    ``overlap=True`` requires the two-slot contract (see
+    :func:`apply_stencil_local`).
     """
     spec = P(axis_name)
     local_step = apply_stencil_local(stencil_fn, halo, axis_name,
-                                     periodic=periodic, fill=fill)
+                                     periodic=periodic, fill=fill,
+                                     overlap=overlap)
     mapped = RT.shard_map(
         local_step, mesh,
         in_specs=tuple(spec for _ in range(n_fields)),
@@ -302,12 +400,13 @@ def make_stencil_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
 
 def make_field_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,
                     halo: int, *, periodic: bool = True, fill: float = 0.0,
-                    n_fields: int = 1):
+                    n_fields: int = 1, overlap: bool = False):
     """:func:`make_stencil_step` over :class:`DistributedField` containers:
     ``step(*fields) -> tuple(fields)`` with the slab geometry carried
     through unchanged."""
     local = apply_stencil_local(stencil_fn, halo, axis_name,
-                                periodic=periodic, fill=fill)
+                                periodic=periodic, fill=fill,
+                                overlap=overlap)
 
     def local_step(*fields: DistributedField):
         out = local(*(f.data for f in fields))

@@ -87,25 +87,51 @@ def check_out_kind(name: str, kind: str, value):
     return value
 
 
-def as_jnp_kernel(body, out, r_cut: float) -> KernelFn:
+def cast_bf16(w):
+    """bf16x operand cast: floating-point properties to bfloat16, integer
+    properties (ids, kinds) untouched. Shared by both backends so the body
+    sees identical operand dtypes either way."""
+    return jax.tree.map(
+        lambda a: a.astype(jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, w)
+
+
+def as_jnp_kernel(body, out, r_cut: float,
+                  precision: str = "fp32") -> KernelFn:
     """Adapt a pair *body* (the cell-pair engine protocol above) into a
     ``kernel(dx, r2, wi, wj)`` for the jnp paths — single-source physics.
     ``out`` maps result name -> "scalar" | "radial" (same declaration the
     Pallas engine consumes); ``r_cut`` rebuilds the engine's cutoff mask
-    so the body sees identical ``ok`` semantics."""
+    so the body sees identical ``ok`` semantics.
+
+    ``precision="bf16x"`` (DESIGN.md §12): geometry (dx, r2, the ok mask)
+    stays fp32, the *body* sees bf16 operands and computes per-pair values
+    in bf16, and the engine's per-particle sums accumulate in fp32 with
+    fp32 outputs — the classic mixed-precision contract. ``"fp32"`` is the
+    default and leaves the kernel bitwise-untouched."""
+    if precision not in ("fp32", "bf16x"):
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "want 'fp32' or 'bf16x'")
     rc2 = r_cut * r_cut
 
     def kernel(dx_arr, r2, wi, wj):
         ok = (r2 < rc2) & (r2 > 1e-12)
+        if precision == "bf16x":
+            dx_arr = dx_arr.astype(jnp.bfloat16)
+            r2 = r2.astype(jnp.bfloat16)
+            wi, wj = cast_bf16(wi), cast_bf16(wj)
         dx = lambda d: dx_arr[..., d]
         vals = body(dx, r2, ok, wi, wj)
         res = {}
         for name, kind in sorted(out.items()):
             v = check_out_kind(name, kind, vals[name])
             if kind == "radial":
-                res[name] = jnp.where(ok, v, 0.0)[..., None] * dx_arr
+                v = jnp.where(ok, v, 0.0)[..., None] * dx_arr
             else:
-                res[name] = jnp.where(ok, v, 0.0)
+                v = jnp.where(ok, v, 0.0)
+            # fp32 accumulators/outputs: the downstream per-particle sum
+            # runs on this cast result
+            res[name] = v.astype(jnp.float32)
         return res
 
     return kernel
@@ -114,7 +140,8 @@ def as_jnp_kernel(body, out, r_cut: float) -> KernelFn:
 def apply_pair_kernel(ps: ParticleSet, cl: CellList, body, *, out,
                       r_cut: float, prop_names=(), backend: str = "jnp",
                       interpret: bool | None = None, cell_batch: int = 256,
-                      cells_per_block: int = 4):
+                      cells_per_block: int = 4, cells=None,
+                      precision: str = "fp32"):
     """Uniform front door over the cell-blocked execution paths.
 
     ``body`` follows the pair-body protocol (module docstring); ``out``
@@ -123,19 +150,28 @@ def apply_pair_kernel(ps: ParticleSet, cl: CellList, body, *, out,
     ``backend="pallas"`` via the unified cell-pair engine
     (``kernels/cell_pair``), with ``interpret=None`` auto-enabling
     interpret mode off-TPU. Returns {name: (cap, ...) per-particle sums}.
+
+    ``cells`` restricts evaluation to the given *home* cell indices (int32,
+    entries == n_cells are inactive sentinels); candidates are still
+    gathered from the full cell array, so the sums for particles homed in
+    selected cells are identical to the full evaluation — the primitive
+    behind split-phase interior/boundary stepping (DESIGN.md §12).
+    ``precision="bf16x"`` selects bf16 body operands with fp32
+    accumulation; ``"fp32"`` (default) is bitwise the legacy path.
     """
     if backend == "jnp":
-        kern = as_jnp_kernel(body, out, r_cut)
+        kern = as_jnp_kernel(body, out, r_cut, precision=precision)
         return apply_kernel_cells(ps, cl, kern, r_cut=r_cut,
                                   prop_names=prop_names,
-                                  cell_batch=cell_batch)
+                                  cell_batch=cell_batch, cells=cells)
     if backend == "pallas":
         # deferred import: core must stay importable without kernels/
         from repro.kernels.cell_pair.cell_pair import apply_kernel_pallas
         return apply_kernel_pallas(ps, cl, body, out=out, r_cut=r_cut,
                                    prop_names=prop_names,
                                    cells_per_block=cells_per_block,
-                                   interpret=interpret)
+                                   interpret=interpret, cells=cells,
+                                   precision=precision)
     raise ValueError(f"unknown backend {backend!r}; want 'jnp' or 'pallas'")
 
 
@@ -208,7 +244,8 @@ def apply_kernel_verlet_sym(ps: ParticleSet, vl: VerletList, cl: CellList,
 
 
 def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
-                       r_cut: float, prop_names=(), cell_batch: int = 256):
+                       r_cut: float, prop_names=(), cell_batch: int = 256,
+                       cells=None):
     """Cell-blocked dense-tile evaluation (structural twin of the unified
     Pallas cell-pair engine, kernels/cell_pair — this is its oracle path).
     For each cell: (cell_cap) x (3^dim * cell_cap) masked pair tile.
@@ -216,7 +253,13 @@ def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
     positions by its box offset (``neighborhood_shifts``), so the direct
     displacement equals the image displacement for any grid size — same
     semantics as the Pallas engine's gather. Returns per-particle sums
-    (same layout as the particle set)."""
+    (same layout as the particle set).
+
+    ``cells`` (optional int32 array) restricts the evaluated *home* cells;
+    entries ``>= n_cells`` are inactive sentinels contributing nothing.
+    Candidate tiles still come from the full cell array, so restricted
+    sums match the full evaluation for particles homed in selected cells.
+    """
     cap = ps.capacity
     cell_cap = cl.cell_cap
     hood, shifts = neighborhood(cl)         # (n_cells, K), (n_cells, K, dim)
@@ -226,7 +269,9 @@ def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
     rc2 = r_cut * r_cut
 
     def per_cell(c):
-        rows = cl.cells[c]                              # (cell_cap,)
+        active = c < n_cells
+        c = jnp.minimum(c, n_cells - 1)
+        rows = jnp.where(active, cl.cells[c], cap)      # (cell_cap,)
         cand2 = cl.cells[hood[c]]                       # (K, cell_cap)
         cand = cand2.reshape(K * cell_cap)
         row_ok = rows < cap
@@ -247,8 +292,10 @@ def apply_kernel_cells(ps: ParticleSet, cl: CellList, kernel: KernelFn,
             lambda v: jnp.sum(jnp.where(_bmask(pair_ok, v), v, 0), axis=1), val)
         return rows, val
 
-    rows, vals = jax.lax.map(per_cell, jnp.arange(n_cells, dtype=jnp.int32),
-                             batch_size=min(n_cells, cell_batch))
+    idx = (jnp.arange(n_cells, dtype=jnp.int32) if cells is None
+           else jnp.asarray(cells, jnp.int32))
+    rows, vals = jax.lax.map(per_cell, idx,
+                             batch_size=min(idx.shape[0], cell_batch))
     rows = rows.reshape(-1)
 
     def scatter(v):

@@ -105,12 +105,16 @@ class StepFlags:
     ghost: jax.Array           # ghost_get per-side excess over ghost_cap
     ghost_contract: jax.Array  # 1 ⇔ r_ghost > min slab width (±1-hop
     #                            ghost exchange no longer covers r_cut)
+    window: jax.Array = dataclasses.field(  # split-phase interior row-window
+        default_factory=lambda: jnp.zeros((), jnp.int32))
+    #                            excess (overlap mode): DLB skewed a slab
+    #                            past the static interior_rows cap
 
     def any(self) -> jax.Array:
         return jnp.maximum(
             jnp.maximum(jnp.maximum(self.cell, self.neighbor),
                         jnp.maximum(self.bucket, self.ghost)),
-            self.ghost_contract)
+            jnp.maximum(self.ghost_contract, self.window))
 
 
 _Z32 = functools.partial(jnp.zeros, (), jnp.int32)
@@ -225,6 +229,7 @@ class PhysicsSpec:
     finish: Optional[Callable] = None
     backend: str = "jnp"                     # "jnp" | "pallas"
     interpret: Optional[bool] = None
+    precision: str = "fp32"                  # "fp32" | "bf16x" pair engine
     extras_example: Tuple[str, ...] = ()     # names of per-step extras
     bucket_cap: int = 512                    # map() per-destination bucket
     ghost_cap: int = 1024                    # ghost_get per-side capacity
@@ -277,7 +282,8 @@ def make_serial_step_fn(physics, cfg, *, slab_axis: int = 0):
     body = spec.make_body()
     pair_kw = dict(out=spec.pair_out, r_cut=float(spec.r_cut),
                    prop_names=spec.pair_props,
-                   backend=spec.backend, interpret=spec.interpret)
+                   backend=spec.backend, interpret=spec.interpret,
+                   precision=spec.precision)
     mesh_periodic = bool(spec.periodic[slab_axis])
     cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
 
@@ -304,7 +310,8 @@ def make_serial_step_fn(physics, cfg, *, slab_axis: int = 0):
 @functools.lru_cache(maxsize=None)
 def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
                   slab_axis: int = 0, bucket_cap: Optional[int] = None,
-                  ghost_cap: Optional[int] = None):
+                  ghost_cap: Optional[int] = None, overlap: bool = True,
+                  interior_rows: Optional[int] = None):
     """Build the jitted simulation step for ``physics(cfg)``.
 
     Returns ``step(state, extras) -> (state, flags, scalars)`` over a
@@ -312,6 +319,22 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     path — the 1-device special case of the same composition; with a mesh
     the identical hooks run inside ``shard_map`` with ``map()``/``ghost_get``
     communication composed around the pair pass.
+
+    ``overlap=True`` (the default on a mesh) selects the split-phase
+    schedule (DESIGN.md §12): the ghost_get ppermute is issued first, the
+    pair engine runs on *interior* cells — restricted to this shard's owned
+    cell rows of a locals-only cell list, so it has no data dependence on
+    the exchange and XLA's latency-hiding scheduler flies the ppermute
+    underneath it — and only the boundary cell rows (within r_cut of the
+    slab faces, plus the ghost pad rows) wait for the arrived ghosts. The
+    per-particle combine picks the boundary result for particles within
+    r_cut of a face and the interior result elsewhere; both are computed
+    from identical summand tiles (stable-sort slot packing), so the step
+    is bitwise-equal to ``overlap=False`` — the legacy blocking chain
+    compute → ghost_get → compute, kept as the benchmark baseline.
+    ``interior_rows`` caps the static interior row window (default:
+    uniform share + margin); a DLB-skewed slab exceeding it raises
+    ``StepFlags.window``, never drops interactions silently.
 
     ``physics`` must be a module-level callable ``physics(cfg) ->``
     :class:`PhysicsSpec` and ``cfg`` hashable (a frozen config dataclass):
@@ -325,13 +348,50 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     body = spec.make_body()
     rc = float(spec.r_cut)
     pair_kw = dict(out=spec.pair_out, r_cut=rc, prop_names=spec.pair_props,
-                   backend=spec.backend, interpret=spec.interpret)
+                   backend=spec.backend, interpret=spec.interpret,
+                   precision=spec.precision)
 
     b_cap = int(bucket_cap or spec.bucket_cap)
     g_cap = int(ghost_cap or spec.ghost_cap)
     cl_kw = _grid_kw(spec, padded=True, slab_axis=slab_axis)
     box_len = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
     per_slab = bool(spec.periodic[slab_axis])
+
+    # --- static split-phase geometry (overlap mode) -----------------------
+    gs = cl_kw["grid_shape"]
+    n_rows = int(gs[slab_axis])
+    n_cells = int(np.prod(gs))
+    strides = np.concatenate(
+        [np.cumprod(np.asarray(gs)[::-1])[::-1][1:], [1]]).astype(np.int32)
+    row_stride = int(strides[slab_axis])
+    oshape = list(gs)
+    oshape[slab_axis] = 1
+    oix = np.indices(oshape).reshape(len(gs), -1)
+    # flat cell ids of the slab-row cross-section (row index 0)
+    other_offs = jnp.asarray(
+        np.sort((oix * strides[:, None]).sum(axis=0)).astype(np.int32))
+    lo_s = float(cl_kw["box_lo"][slab_axis])
+    hi_s = float(cl_kw["box_hi"][slab_axis])
+    ndev = int(mesh.shape[axis_name])
+    w_int = int(interior_rows if interior_rows is not None
+                else min(n_rows, -(-n_rows // ndev) + 4))
+    W_B = 5   # boundary rows per side: <= 3 needed (cell width >= r_cut,
+    #           so [face - r_cut, face + r_cut] spans <= 3 rows) + 1 margin
+    #           each way for fp32 seam-shift rounding
+
+    def _row_of(t):
+        """Slab-axis cell row of coordinate t — the exact binning expression
+        of cell_list._flat_cell_of, so window edges agree with particle
+        homes bit-for-bit (monotone in t)."""
+        frac = (t - lo_s) / (hi_s - lo_s)
+        return jnp.clip(jnp.floor(frac * n_rows).astype(jnp.int32), 0,
+                        n_rows - 1)
+
+    def _rows_to_cells(rows, ok):
+        """Flat home-cell selection of whole slab rows; masked-out rows
+        become inactive sentinels (n_cells)."""
+        flat = rows[:, None] * row_stride + other_offs[None, :]
+        return jnp.where(ok[:, None], flat, n_cells).reshape(-1)
 
     def local_step(state: DistributedParticles, extras):
         red = Reduce(axis_name)
@@ -349,6 +409,22 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
         ghosts, ovf_ghost = M.ghost_get_local(
             ps, bounds, rc, axis_name, g_cap, periodic=per_slab,
             box_len=box_len, slab_axis=slab_axis, prop_names=spec.ghost_props)
+        win_ovf = _Z32()
+        if overlap:
+            # Interior pass while the ghost ppermute is in flight: a
+            # locals-only cell list (no ghost dependence) restricted to
+            # this shard's owned rows. Boundary particles in these cells
+            # get ghost-less garbage here — overwritten by the combine.
+            me = RT.axis_index(axis_name)
+            my_lo, my_hi = bounds[me], bounds[me + 1]
+            r0 = _row_of(my_lo)
+            r_last = _row_of(my_hi)
+            int_rows = r0 + jnp.arange(w_int, dtype=jnp.int32)
+            cl_loc = CL.build_cell_list(ps, **cl_kw)
+            pair_int = I.apply_pair_kernel(
+                ps, cl_loc, body,
+                cells=_rows_to_cells(int_rows, int_rows < n_rows), **pair_kw)
+            win_ovf = jnp.maximum(r_last + 1 - (r0 + w_int), 0)
         gp = ghosts.as_particles()
         combo = ParticleSet(
             x=jnp.concatenate([ps.x, gp.x]),
@@ -356,16 +432,45 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
                    for k in spec.ghost_props},
             valid=jnp.concatenate([ps.valid, gp.valid]))
         cl = CL.build_cell_list(combo, **cl_kw)
-        pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+        if overlap:
+            # Boundary pass against the arrived ghosts: the rows within
+            # r_cut of either slab face plus the ghost pad rows, hi side
+            # deduplicated against lo so no cell scatters twice.
+            lo_rows = (_row_of(my_lo - rc) - 1
+                       + jnp.arange(W_B, dtype=jnp.int32))
+            hi_rows = (_row_of(my_hi - rc) - 1
+                       + jnp.arange(W_B, dtype=jnp.int32))
+            lo_ok = (lo_rows >= 0) & (lo_rows < n_rows)
+            hi_ok = ((hi_rows >= 0) & (hi_rows < n_rows)
+                     & (hi_rows > lo_rows[-1]))
+            bnd_cells = jnp.concatenate([_rows_to_cells(lo_rows, lo_ok),
+                                         _rows_to_cells(hi_rows, hi_ok)])
+            pair_bnd = I.apply_pair_kernel(combo, cl, body, cells=bnd_cells,
+                                           **pair_kw)
+            # combine per particle: boundary result within r_cut of a face
+            # (and for all ghost rows), interior result elsewhere
+            xs = ps.x[:, slab_axis]
+            bnd = (xs < my_lo + rc) | (xs >= my_hi - rc)
+            n_loc = ps.capacity
+            pair = {k: jnp.concatenate(
+                [jnp.where(I._bmask(bnd, pair_bnd[k][:n_loc]),
+                           pair_bnd[k][:n_loc], pair_int[k]),
+                 pair_bnd[k][n_loc:]])
+                for k in pair_bnd}
+            cl_ovf = jnp.maximum(cl.overflow, cl_loc.overflow)
+        else:
+            pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+            cl_ovf = cl.overflow
         ps, scalars, nb_ovf, fields = _finish(
             spec, StepCtx(ps=ps, combo=combo, cl=cl, pair=pair, red=red,
                           extras=extras, fields=state.fields, grid=grid))
         flags = StepFlags(
-            cell=RT.pmax(jnp.asarray(cl.overflow, jnp.int32), axis_name),
+            cell=RT.pmax(jnp.asarray(cl_ovf, jnp.int32), axis_name),
             neighbor=RT.pmax(nb_ovf, axis_name),
             bucket=jnp.asarray(ovf_bucket, jnp.int32),
             ghost=jnp.asarray(ovf_ghost, jnp.int32),
-            ghost_contract=contract)
+            ghost_contract=contract,
+            window=RT.pmax(jnp.asarray(win_ovf, jnp.int32), axis_name))
         return (dataclasses.replace(state, ps=ps, fields=fields), flags,
                 scalars)
 

@@ -63,19 +63,33 @@ class CellTiles(NamedTuple):
     props_j: Dict[str, jax.Array]
 
 
-def gather_cell_tiles(ps: ParticleSet, cl: CellList,
-                      prop_names=()) -> CellTiles:
+def gather_cell_tiles(ps: ParticleSet, cl: CellList, prop_names=(),
+                      cells=None) -> CellTiles:
     """XLA-side pre-gather: dense per-cell tiles from a CellList. Periodic
     neighbor cells' positions are shifted by the box offset of the image
     they were reached through (``neighborhood_shifts``), so the kernel's
     direct displacement equals the periodic image displacement — exact for
-    any grid size, including axes with fewer than 3 cells."""
+    any grid size, including axes with fewer than 3 cells.
+
+    ``cells`` (optional int32 array) restricts the gathered *home* cells;
+    entries ``>= n_cells`` are inactive sentinels (their row slots come out
+    masked). Candidates are still indexed from the full cell array, so
+    restricted tiles equal the corresponding full tiles."""
     cap = ps.capacity
     xm = ps.masked_x()
     hood, shifts = neighborhood(cl)         # (n_cells, K), (n_cells, K, dim)
     n_cells, K = hood.shape
     cc = cl.cell_cap
-    rows = cl.cells[:n_cells]                       # (n_cells, cc)
+    if cells is None:
+        rows = cl.cells[:n_cells]                   # (n_cells, cc)
+    else:
+        sel = jnp.asarray(cells, jnp.int32)
+        active = sel < n_cells
+        safe_sel = jnp.minimum(sel, n_cells - 1)
+        rows = jnp.where(active[:, None], cl.cells[safe_sel], cap)
+        hood = hood[safe_sel]
+        shifts = shifts[safe_sel]
+        n_cells = sel.shape[0]
     cand = cl.cells[hood].reshape(n_cells, K * cc)  # (n_cells, K*cc)
     safe_r = jnp.minimum(rows, cap - 1)
     safe_c = jnp.minimum(cand, cap - 1)
@@ -88,9 +102,13 @@ def gather_cell_tiles(ps: ParticleSet, cl: CellList,
         props_j={k: ps.props[k][safe_c] for k in prop_names})
 
 
-def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float):
+def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float,
+                 precision: str = "fp32"):
     """Generic tile kernel: unpack refs, build the pair mask, run the body,
-    reduce each output over the candidate axis."""
+    reduce each output over the candidate axis. ``precision="bf16x"``:
+    geometry (dx, r2, ok) stays fp32, the body sees bf16 operands (halved
+    VPU operand traffic), and the candidate-axis reduction accumulates in
+    fp32 (``jnp.sum(..., dtype=float32)``) with fp32 outputs."""
     it = iter(refs)
     xi = next(it)[...]          # (Cb, cc, dim)
     xj = next(it)[...]          # (Cb, Kcc, dim)
@@ -111,6 +129,23 @@ def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float):
         dd = dx(d)
         r2 = r2 + dd * dd
     ok = (mi[:, :, None] & mj[:, None, :] & (r2 < rc2) & (r2 > 1e-12))
+    if precision == "bf16x":
+        from repro.core.interactions import cast_bf16
+        dx_f = dx
+        dx = lambda d: dx_f(d).astype(jnp.bfloat16)
+        vals = body(dx, r2.astype(jnp.bfloat16), ok,
+                    cast_bf16(wi), cast_bf16(wj))
+        for (name, kind), oref in zip(out_spec, out_refs):
+            v = check_out_kind(name, kind, vals[name])
+            if kind == "radial":
+                mag = jnp.where(ok, v, jnp.bfloat16(0))
+                for d in range(dim):
+                    oref[:, :, d] = jnp.sum(mag * dx(d), axis=2,
+                                            dtype=jnp.float32)
+            else:
+                oref[...] = jnp.sum(jnp.where(ok, v, jnp.bfloat16(0)),
+                                    axis=2, dtype=jnp.float32)
+        return
     vals = body(dx, r2, ok, wi, wj)
     for (name, kind), oref in zip(out_spec, out_refs):
         v = check_out_kind(name, kind, vals[name])
@@ -124,7 +159,8 @@ def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float):
 
 def cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask, props_i=None,
                      props_j=None, *, body, out, r_cut: float,
-                     cells_per_block: int = 4, interpret: bool = False):
+                     cells_per_block: int = 4, interpret: bool = False,
+                     precision: str = "fp32"):
     """Tile-level engine entry: pad to a cells_per_block multiple, build
     BlockSpecs, run the pair kernel, unpad.
 
@@ -152,8 +188,12 @@ def cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask, props_i=None,
     out_shapes = [jax.ShapeDtypeStruct(
         (C, cc, dim) if kind == "radial" else (C, cc), jnp.float32)
         for _, kind in out_spec]
+    if precision not in ("fp32", "bf16x"):
+        raise ValueError(f"unknown precision {precision!r}; "
+                         "want 'fp32' or 'bf16x'")
     kern = functools.partial(_pair_kernel, body=body, prop_names=names,
-                             out_spec=out_spec, dim=dim, rc2=r_cut * r_cut)
+                             out_spec=out_spec, dim=dim, rc2=r_cut * r_cut,
+                             precision=precision)
     res = pl.pallas_call(
         kern,
         grid=grid,
@@ -178,18 +218,20 @@ def scatter_slots(rows: jax.Array, val: jax.Array, cap: int) -> jax.Array:
 def apply_kernel_pallas(ps: ParticleSet, cl: CellList, body, *, out,
                         r_cut: float, prop_names=(),
                         cells_per_block: int = 4,
-                        interpret: bool | None = None):
+                        interpret: bool | None = None, cells=None,
+                        precision: str = "fp32"):
     """End-to-end Pallas path: gather → pair kernel → scatter. The fourth
     execution path of ``core.interactions`` (use
     ``apply_pair_kernel(..., backend="pallas")`` for the uniform front
-    door). ``interpret=None`` auto-enables interpret mode off-TPU."""
+    door). ``interpret=None`` auto-enables interpret mode off-TPU.
+    ``cells`` / ``precision`` as in ``apply_pair_kernel``."""
     if interpret is None:
         interpret = jax.devices()[0].platform != "tpu"
-    t = gather_cell_tiles(ps, cl, prop_names)
+    t = gather_cell_tiles(ps, cl, prop_names, cells=cells)
     res = cell_pair_pallas(t.cell_x, t.nbr_x, t.cell_mask, t.nbr_mask,
                            t.props_i, t.props_j, body=body, out=out,
                            r_cut=r_cut, cells_per_block=cells_per_block,
-                           interpret=interpret)
+                           interpret=interpret, precision=precision)
     cap = ps.capacity
     return {name: jnp.where(_bmask(ps.valid, s), s, 0)
             for name, s in ((n, scatter_slots(t.rows, v, cap))

@@ -56,7 +56,8 @@ def _axis_iota(n: int, axis0: bool) -> jax.Array:
     return jax.lax.broadcasted_iota(jnp.float32, shape, 0 if axis0 else 1)
 
 
-def _p2m_kernel(*refs, offsets, grid_cells, cb, lo, h, lengths, n_ch):
+def _p2m_kernel(*refs, offsets, grid_cells, cb, lo, h, lengths, n_ch,
+                precision="fp32"):
     dim = len(grid_cells)
     K = len(offsets)
     x_refs, v_refs, m_refs = refs[:K], refs[K:2 * K], refs[2 * K:3 * K]
@@ -81,15 +82,20 @@ def _p2m_kernel(*refs, offsets, grid_cells, cb, lo, h, lengths, n_ch):
             s = (nodes - xp[:, d][None, :] - shift) / h[d]     # (cb, cc)
             wd = m4_prime(s)
             w = w * wd.reshape((1,) * d + (cb,) + (1,) * (dim - 1 - d) + (cc,))
-        acc_ref[...] += jnp.dot(w.reshape(cb ** dim, cc), vp,
+        wt = w.reshape(cb ** dim, cc)
+        if precision == "bf16x":   # bf16 operands, fp32 MXU accumulate
+            wt, vp = wt.astype(jnp.bfloat16), vp.astype(jnp.bfloat16)
+        acc_ref[...] += jnp.dot(wt, vp,
                                 preferred_element_type=jnp.float32)
     o_ref[...] = acc_ref[...].reshape((cb,) * dim + (n_ch,))
 
 
 @functools.partial(jax.jit, static_argnames=("grid_cells", "cb", "box_lo",
-                                             "box_hi", "interpret"))
+                                             "box_hi", "interpret",
+                                             "precision"))
 def p2m_cells(cell_x, cell_val, cell_mask, *, grid_cells, cb: int,
-              box_lo, box_hi, interpret: bool = False) -> jax.Array:
+              box_lo, box_hi, interpret: bool = False,
+              precision: str = "fp32") -> jax.Array:
     """Conflict-free P2M over pre-bucketed particle tiles.
 
     cell_x:    (n_cells, cc, dim) slot positions, flat C-order cell index.
@@ -124,7 +130,7 @@ def p2m_cells(cell_x, cell_val, cell_mask, *, grid_cells, cb: int,
                              lambda *ids: ids + (0,))
     kern = functools.partial(_p2m_kernel, offsets=offsets,
                              grid_cells=grid_cells, cb=cb, lo=lo, h=h,
-                             lengths=lengths, n_ch=n_ch)
+                             lengths=lengths, n_ch=n_ch, precision=precision)
     K = len(offsets)
     return pl.pallas_call(
         kern,
@@ -137,7 +143,8 @@ def p2m_cells(cell_x, cell_val, cell_mask, *, grid_cells, cb: int,
     )(*([gx] * K + [gv] * K + [gm] * K))
 
 
-def _m2p_kernel(*refs, offsets, grid_cells, cb, lo, h, n_ch):
+def _m2p_kernel(*refs, offsets, grid_cells, cb, lo, h, n_ch,
+                precision="fp32"):
     dim = len(grid_cells)
     K = len(offsets)
     f_refs = refs[:K]
@@ -159,15 +166,20 @@ def _m2p_kernel(*refs, offsets, grid_cells, cb, lo, h, n_ch):
             wd = m4_prime(s)
             w = w * wd.reshape((cc,) + (1,) * d + (cb,) + (1,) * (dim - 1 - d))
         fb = f_refs[n][...].reshape(cb ** dim, n_ch)
-        acc_ref[...] += jnp.dot(w.reshape(cc, cb ** dim), fb,
+        wt = w.reshape(cc, cb ** dim)
+        if precision == "bf16x":   # bf16 operands, fp32 MXU accumulate
+            wt, fb = wt.astype(jnp.bfloat16), fb.astype(jnp.bfloat16)
+        acc_ref[...] += jnp.dot(wt, fb,
                                 preferred_element_type=jnp.float32)
     o_ref[...] = acc_ref[...].reshape((1,) * dim + (cc, n_ch))
 
 
 @functools.partial(jax.jit, static_argnames=("grid_cells", "cb", "box_lo",
-                                             "box_hi", "interpret"))
+                                             "box_hi", "interpret",
+                                             "precision"))
 def m2p_cells(field, cell_x, cell_mask, *, grid_cells, cb: int,
-              box_lo, box_hi, interpret: bool = False) -> jax.Array:
+              box_lo, box_hi, interpret: bool = False,
+              precision: str = "fp32") -> jax.Array:
     """Fused M2P gather over pre-bucketed particle tiles.
 
     field:     mesh array ``shape + (C,)`` — C may stack several physical
@@ -200,7 +212,7 @@ def m2p_cells(field, cell_x, cell_mask, *, grid_cells, cb: int,
     out_specs = tile_spec((cc, n_ch))
     kern = functools.partial(_m2p_kernel, offsets=offsets,
                              grid_cells=grid_cells, cb=cb, lo=lo, h=h,
-                             n_ch=n_ch)
+                             n_ch=n_ch, precision=precision)
     K = len(offsets)
     out = pl.pallas_call(
         kern,

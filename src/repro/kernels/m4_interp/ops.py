@@ -97,9 +97,10 @@ def bucket_particles(x, valid, *, shape, box_lo, box_hi, periodic,
 
 
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
-                                   "cb", "interpret"))
+                                   "cb", "interpret", "precision"))
 def p2m_bucketed(buckets: InterpBuckets, value, *, shape, box_lo, box_hi,
-                 periodic, cb: int = DEFAULT_CB, interpret=None):
+                 periodic, cb: int = DEFAULT_CB, interpret=None,
+                 precision: str = "fp32"):
     """P2M from an existing bucketing. ``value``: (N,) or (N, C) indexed by
     the particle slots the buckets were built from."""
     interpret = _auto_interpret(interpret)
@@ -109,16 +110,17 @@ def p2m_bucketed(buckets: InterpBuckets, value, *, shape, box_lo, box_hi,
     cell_val = val2[buckets.safe]
     out = p2m_cells(buckets.cell_x, cell_val, buckets.cell_mask,
                     grid_cells=grid_cells, cb=cb, box_lo=tuple(box_lo),
-                    box_hi=tuple(box_hi), interpret=interpret)
+                    box_hi=tuple(box_hi), interpret=interpret,
+                    precision=precision)
     out = out.astype(value.dtype)
     return out if vec else out[..., 0]
 
 
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
-                                   "cb", "interpret"))
+                                   "cb", "interpret", "precision"))
 def m2p_fused_bucketed(buckets: InterpBuckets, fields, valid, *, shape,
                        box_lo, box_hi, periodic, cb: int = DEFAULT_CB,
-                       interpret=None):
+                       interpret=None, precision: str = "fp32"):
     """Fused M2P from an existing bucketing: interpolate several mesh
     fields (each ``shape`` or ``shape + (C,)``) in ONE kernel pass — the
     weight tile is computed once for all stacked channels. Returns a tuple
@@ -132,7 +134,8 @@ def m2p_fused_bucketed(buckets: InterpBuckets, fields, valid, *, shape,
         [f[..., None] if f.ndim == dim else f for f in fields], axis=-1)
     tiles = m2p_cells(stacked, buckets.cell_x, buckets.cell_mask,
                       grid_cells=grid_cells, cb=cb, box_lo=tuple(box_lo),
-                      box_hi=tuple(box_hi), interpret=interpret)
+                      box_hi=tuple(box_hi), interpret=interpret,
+                      precision=precision)
     cap = valid.shape[0]
     flat_rows = buckets.safe.reshape(-1)
     # ``safe`` clamps the sentinel into range, so scatter with the mask-
@@ -187,7 +190,7 @@ def _block_frame(x, valid, row0, block_rows, shape, box_lo, box_hi,
 
 def p2m_block(x, value, valid, row0, *, block_rows: int, shape, box_lo,
               box_hi, periodic, cb: int = DEFAULT_CB, cell_cap: int = 0,
-              interpret=None):
+              interpret=None, precision: str = "fp32"):
     """Pallas P2M onto a local slab block — drop-in for
     ``core.interp.p2m_block`` (periodic global axes only). Returns
     ``(block, overflow)``; overflow sums dropped-support particles and
@@ -200,14 +203,14 @@ def p2m_block(x, value, valid, row0, *, block_rows: int, shape, box_lo,
     vec = value.ndim == 2
     vmask = ok[:, None] if vec else ok
     out = p2m_bucketed(b, jnp.where(vmask, value, 0), interpret=interpret,
-                       **kw)
+                       precision=precision, **kw)
     dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
     return out[:block_rows], b.overflow + dropped
 
 
 def m2p_fused_block(blocks, x, valid, row0, *, shape, box_lo, box_hi,
                     periodic, cb: int = DEFAULT_CB, cell_cap: int = 0,
-                    interpret=None):
+                    interpret=None, precision: str = "fp32"):
     """Fused Pallas M2P from local slab blocks (each ``(block_rows, ...)``,
     all the same rows) — the block counterpart of :func:`m2p_fused`.
     Returns ``(tuple(values), overflow)``; dropped particles read 0."""
@@ -220,32 +223,35 @@ def m2p_fused_block(blocks, x, valid, row0, *, shape, box_lo, box_hi,
     pad = [(0, rows_k - block_rows)] + [(0, 0)]
     fields = tuple(jnp.pad(f, pad + [(0, 0)] * (f.ndim - 2)) for f in blocks)
     b = bucket_particles(x_loc, ok, cell_cap=cell_cap, **kw)
-    out = m2p_fused_bucketed(b, fields, ok, interpret=interpret, **kw)
+    out = m2p_fused_bucketed(b, fields, ok, interpret=interpret,
+                             precision=precision, **kw)
     dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
     return out, b.overflow + dropped
 
 
 def p2m(x, value, valid, *, shape, box_lo, box_hi, periodic,
         cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
-        return_overflow: bool = False):
+        return_overflow: bool = False, precision: str = "fp32"):
     """Pallas P2M, drop-in for ``core.interp.p2m`` (periodic axes only).
     With ``return_overflow`` returns (field, dropped-particle count)."""
     kw = dict(shape=shape, box_lo=box_lo, box_hi=box_hi, periodic=periodic,
               cb=cb)
     b = bucket_particles(x, valid, cell_cap=cell_cap, **kw)
-    out = p2m_bucketed(b, value, interpret=interpret, **kw)
+    out = p2m_bucketed(b, value, interpret=interpret, precision=precision,
+                       **kw)
     return (out, b.overflow) if return_overflow else out
 
 
 def m2p_fused(fields, x, valid, *, shape, box_lo, box_hi, periodic,
               cb: int = DEFAULT_CB, cell_cap: int = 0, interpret=None,
-              return_overflow: bool = False):
+              return_overflow: bool = False, precision: str = "fp32"):
     """Fused Pallas M2P (bucket + gather in one call); see
     ``m2p_fused_bucketed``."""
     kw = dict(shape=shape, box_lo=box_lo, box_hi=box_hi, periodic=periodic,
               cb=cb)
     b = bucket_particles(x, valid, cell_cap=cell_cap, **kw)
-    out = m2p_fused_bucketed(b, fields, valid, interpret=interpret, **kw)
+    out = m2p_fused_bucketed(b, fields, valid, interpret=interpret,
+                             precision=precision, **kw)
     return (out, b.overflow) if return_overflow else out
 
 

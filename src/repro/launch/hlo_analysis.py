@@ -104,10 +104,14 @@ def _split_op(rhs: str):
         return None
     opname = m.group(1)
     result_seg = rhs[: m.start()]
-    close = rhs.find(")", m.end())
-    # operand lists contain no nested parens (names/indices only)
-    operand_seg = rhs[m.end(): close if close > 0 else len(rhs)]
-    attrs = rhs[close + 1:] if close > 0 else ""
+    # operand lists may nest parens: tuple-shaped operands are printed as
+    # "((f32[...], ...) %name)" — scan for the balanced close
+    depth, i = 1, m.end()
+    while i < len(rhs) and depth:
+        depth += {"(": 1, ")": -1}.get(rhs[i], 0)
+        i += 1
+    operand_seg = rhs[m.end(): i - 1] if depth == 0 else rhs[m.end():]
+    attrs = rhs[i:] if depth == 0 else ""
     return opname, result_seg, operand_seg, attrs
 
 
@@ -311,3 +315,96 @@ def analyze(text: str) -> Dict[str, object]:
     return {"flops": fl, "bytes": by, "collectives": co,
             "collective_total": sum(co.values()), "entry": entry,
             "n_computations": len(comps), "bytes_by_op": by_op}
+
+
+# --------------------------------------------------------------------------
+# Schedule-order overlap analysis (split-phase stepping gate)
+# --------------------------------------------------------------------------
+
+def _is_collective(op: _Op, kind: str) -> bool:
+    base = op.opname.replace("-start", "")
+    return base == kind and not op.opname.endswith("-done")
+
+
+def transitive_operands(comp: Computation, name: str,
+                        _memo: Optional[Dict[str, set]] = None) -> set:
+    """Names of every op reachable from ``name`` through operand edges
+    inside ``comp`` (the dataflow ancestors). Fusion operands are call-site
+    names, so an entry-level closure sees through fusions; names that are
+    not defined in ``comp`` (parameters of the module) are ignored."""
+    by_name = {op.name: op for op in comp.ops}
+    memo: Dict[str, set] = {} if _memo is None else _memo
+
+    def walk(nm: str) -> set:
+        if nm in memo:
+            return memo[nm]
+        memo[nm] = set()          # cycle guard (HLO dataflow is acyclic)
+        out = set()
+        op = by_name.get(nm)
+        if op is not None:
+            for onm in op.operand_names:
+                if onm in by_name:
+                    out.add(onm)
+                    out |= walk(onm)
+        memo[nm] = out
+        return out
+
+    return walk(name)
+
+
+def overlap_report(text: str, min_bytes: float = 0.0) -> Dict[str, object]:
+    """Classify the entry computation's fusions against the first ghost
+    exchange, in schedule order (post-optimization HLO text order — XLA
+    emits scheduled modules, so definition order IS the schedule).
+
+    A fusion scheduled *after* the first ``collective-permute`` whose
+    dataflow ancestors include an ``all-to-all`` (the particle ``map()``
+    exchange) but **no** collective-permute is interior work the scheduler
+    may run while the ghost exchange is in flight — the split-phase
+    overlap signature. In a blocking ``compute → ghost_get → compute``
+    chain every substantial post-permute fusion consumes the ghost-padded
+    arrays and lands in the dependent bucket instead.
+
+    Returns ``first_permute_index`` (schedule position, None if the module
+    has no collective-permute), ``independent`` / ``dependent`` fusion
+    lists as ``(index, name, bytes)`` sorted by bytes descending (only
+    fusions with call-site bytes >= ``min_bytes``), and the summed bytes
+    of each bucket."""
+    comps, entry = parse_hlo(text)
+    if entry is None or entry not in comps:
+        raise ValueError("no ENTRY computation in HLO text")
+    comp = comps[entry]
+    by_name = {op.name: op for op in comp.ops}
+    first_cp = None
+    for i, op in enumerate(comp.ops):
+        if _is_collective(op, "collective-permute"):
+            first_cp = i
+            break
+    independent: List[Tuple[int, str, float]] = []
+    dependent: List[Tuple[int, str, float]] = []
+    if first_cp is not None:
+        memo: Dict[str, set] = {}
+        for i, op in enumerate(comp.ops[first_cp + 1:], first_cp + 1):
+            if op.opname != "fusion":
+                continue
+            b = _op_bytes(op, comp.symbols, comps)
+            if b < min_bytes:
+                continue
+            anc = transitive_operands(comp, op.name, memo)
+            ops_anc = [by_name[n] for n in anc]
+            if not any(_is_collective(o, "all-to-all") for o in ops_anc):
+                continue   # not particle work (pre-map or bookkeeping)
+            bucket = dependent if any(
+                _is_collective(o, "collective-permute") for o in ops_anc) \
+                else independent
+            bucket.append((i, op.name, b))
+    independent.sort(key=lambda t: -t[2])
+    dependent.sort(key=lambda t: -t[2])
+    return {
+        "entry": entry,
+        "first_permute_index": first_cp,
+        "independent": independent,
+        "dependent": dependent,
+        "independent_bytes": sum(t[2] for t in independent),
+        "dependent_bytes": sum(t[2] for t in dependent),
+    }

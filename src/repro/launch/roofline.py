@@ -23,14 +23,29 @@ ICI_BW = 50e9
 
 
 def load(mesh: str, tag: str = "") -> List[Dict]:
+    """Dry-run records for one mesh; [] (never a raise) when the artifact
+    directory is absent or holds no usable records — a fresh clone has no
+    artifacts/dryrun, and every consumer (table, hillclimb, bench rows)
+    must degrade to an explicit skip instead of crashing."""
+    d = ARTIFACTS / mesh
+    if not d.is_dir():
+        return []
     out = []
-    for p in sorted((ARTIFACTS / mesh).glob("*.json")):
-        r = json.loads(p.read_text())
+    for p in sorted(d.glob("*.json")):
+        try:
+            r = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            continue
         if r.get("tag", "") != tag:
             continue
         if r.get("ok"):
             out.append(r)
     return out
+
+
+def skip_message(mesh: str) -> str:
+    return (f"no dry-run artifacts under {ARTIFACTS / mesh} — run: "
+            "PYTHONPATH=src python -m repro.launch.dryrun --all")
 
 
 def model_flops_for(r: Dict) -> float:
@@ -70,6 +85,8 @@ def enrich(r: Dict) -> Dict:
 
 def table(mesh: str, fmt: str = "md", tag: str = "") -> str:
     rows = [enrich(r) for r in load(mesh, tag)]
+    if not rows:
+        return f"(skipped: {skip_message(mesh)})"
     rows.sort(key=lambda r: (r["arch"], r["shape"]))
     hdr = ["arch", "shape", "t_compute(s)", "t_memory(s)", "t_coll(s)",
            "dominant", "model/HLO", "roofline_frac", "roofline_frac_ideal",
@@ -104,10 +121,15 @@ def pick_hillclimb(mesh: str = "single") -> List[Dict]:
     rows = [enrich(r) for r in load(mesh)]
     thr = [r for r in rows if r["shape"].startswith(("train", "prefill"))]
     dec = [r for r in rows if r["shape"].startswith(("decode", "long"))]
-    worst = min(thr, key=lambda r: r["roofline_fraction"])
-    coll = max(dec, key=lambda r: r["roofline"]["t_collective"])
+    # each pick degrades independently: a partial artifact set (some cells
+    # dry-ran, some not) still yields whatever picks exist
+    picks = []
+    if thr:
+        picks.append(min(thr, key=lambda r: r["roofline_fraction"]))
+    if dec:
+        picks.append(max(dec, key=lambda r: r["roofline"]["t_collective"]))
     moe = [r for r in rows if "qwen3" in r["arch"] and r["shape"] == "train_4k"]
-    picks = [worst, coll] + moe[:1]
+    picks += moe[:1]
     seen, out = set(), []
     for r in picks:
         key = (r["arch"], r["shape"])
@@ -125,8 +147,11 @@ def main():
     args = ap.parse_args()
     print(table(args.mesh, args.format, args.tag))
     if args.mesh == "single":
-        print("\nHillclimb picks (worst / most-collective / paper-technique):")
-        for r in pick_hillclimb(args.mesh):
+        picks = pick_hillclimb(args.mesh)
+        if picks:
+            print("\nHillclimb picks (worst / most-collective / "
+                  "paper-technique):")
+        for r in picks:
             print(f"  {r['arch']} × {r['shape']}: frac="
                   f"{r['roofline_fraction']:.3f} dom={r['roofline']['dominant']}")
 

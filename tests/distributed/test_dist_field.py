@@ -181,6 +181,124 @@ def test_m2p_block_matches_global_gather(mesh8):
 
 
 # --------------------------------------------------------------------------
+# Two-slot (double-buffered) halos: the split-phase overlap mode (ISSUE 7)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("periodic,fill", [(True, 0.0), (False, 0.0),
+                                           (False, None), (False, 1.5)])
+def test_two_slot_halo_pad_matches_blocking(mesh8, periodic, fill):
+    """halo_pad_start/finish (the in-flight slots) must reassemble to
+    exactly the blocking halo_pad — and hence the numpy oracle."""
+    halo = 2
+    rng = np.random.default_rng(31)
+    f = rng.normal(size=(32, 5)).astype(np.float32)
+
+    def local(blk):
+        fl, fr = G.halo_pad_start(blk, halo, DC.AXIS, periodic=periodic,
+                                  fill=fill)
+        two = G.halo_pad_finish(blk, fl, fr)
+        one = G.halo_pad(blk, halo, DC.AXIS, periodic=periodic, fill=fill)
+        return two, one
+
+    fn = jax.jit(RT.shard_map(local, mesh8, in_specs=(P(DC.AXIS),),
+                              out_specs=(P(DC.AXIS), P(DC.AXIS)),
+                              check_vma=False))
+    two, one = fn(_sharded(mesh8, jnp.asarray(f)))
+    assert np.array_equal(np.asarray(two), np.asarray(one))
+    got = np.asarray(two).reshape(NDEV, -1, 5)
+    assert np.array_equal(got, _np_halo_oracle(f, halo, periodic, fill))
+
+
+def test_two_slot_halo_reduce_matches_blocking(mesh8):
+    """ghost_put side: start/finish == blocking halo_reduce == a numpy
+    wrap-add oracle, with nonzero contributions crossing every slab face
+    in both directions (every halo row is random-nonzero)."""
+    halo, nl = 2, 4
+    rng = np.random.default_rng(32)
+    padded = rng.normal(size=(NDEV * (nl + 2 * halo), 3)).astype(np.float32)
+
+    def local(pblk):
+        fl, fr = G.halo_reduce_start(pblk, halo, DC.AXIS, periodic=True)
+        two = G.halo_reduce_finish(pblk, halo, fl, fr)
+        one = G.halo_reduce(pblk, halo, DC.AXIS, periodic=True)
+        return two, one
+
+    fn = jax.jit(RT.shard_map(local, mesh8, in_specs=(P(DC.AXIS),),
+                              out_specs=(P(DC.AXIS), P(DC.AXIS)),
+                              check_vma=False))
+    two, one = fn(_sharded(mesh8, jnp.asarray(padded)))
+    assert np.array_equal(np.asarray(two), np.asarray(one))
+    n0 = NDEV * nl
+    exp = np.zeros((n0, 3), np.float32)
+    blocks = padded.reshape(NDEV, nl + 2 * halo, 3)
+    for d in range(NDEV):
+        idx = (np.arange(d * nl - halo, (d + 1) * nl + halo)) % n0
+        np.add.at(exp, idx, blocks[d])
+    np.testing.assert_allclose(np.asarray(two), exp, atol=1e-6)
+
+
+def test_apply_stencil_overlap_matches_blocking(mesh8):
+    """The overlap=True schedule is bitwise-identical to blocking for a
+    roll-based radius-2 stencil on rows straddling every slab face, and
+    both match the serial global stencil."""
+    halo = 2
+    rng = np.random.default_rng(33)
+    f = rng.normal(size=(48, 6)).astype(np.float32)
+
+    def stencil(p):
+        return (jnp.roll(p, 2, 0) + jnp.roll(p, -2, 0)
+                + jnp.roll(p, 1, 0) + jnp.roll(p, -1, 0) - 4.0 * p)
+
+    outs = {}
+    for overlap in (False, True):
+        run = G.apply_stencil_local(stencil, halo, DC.AXIS, overlap=overlap)
+        fn = jax.jit(RT.shard_map(lambda b: run(b)[0], mesh8,
+                                  in_specs=(P(DC.AXIS),),
+                                  out_specs=P(DC.AXIS), check_vma=False))
+        outs[overlap] = np.asarray(fn(_sharded(mesh8, jnp.asarray(f))))
+    assert np.array_equal(outs[True], outs[False])
+    assert np.array_equal(outs[True], np.asarray(stencil(jnp.asarray(f))))
+
+
+def test_apply_stencil_overlap_1dev_degeneracy():
+    """1 device: the two-slot exchange is a self-permute and the combined
+    output equals the serial stencil exactly."""
+    mesh1 = DC.make_submesh(1)
+    rng = np.random.default_rng(34)
+    f = rng.normal(size=(16, 4)).astype(np.float32)
+
+    def stencil(p):
+        return jnp.roll(p, 1, 0) - jnp.roll(p, -1, 0) + 0.5 * p
+
+    run = G.apply_stencil_local(stencil, 1, DC.AXIS, overlap=True)
+    fn = jax.jit(RT.shard_map(lambda b: run(b)[0], mesh1,
+                              in_specs=(P(DC.AXIS),),
+                              out_specs=P(DC.AXIS), check_vma=False))
+    got = np.asarray(fn(jax.device_put(
+        jnp.asarray(f), NamedSharding(mesh1, P(DC.AXIS)))))
+    assert np.array_equal(got, np.asarray(stencil(jnp.asarray(f))))
+
+
+def test_apply_stencil_overlap_narrow_slab_falls_back(mesh8):
+    """Slabs narrower than 2·halo cannot split into disjoint edge strips:
+    overlap=True must quietly take the blocking path, not corrupt rows.
+    32 rows / 8 shards = 4-row slabs < 2·3."""
+    halo = 3
+    rng = np.random.default_rng(35)
+    f = rng.normal(size=(32, 2)).astype(np.float32)
+
+    def stencil(p):
+        return jnp.roll(p, 3, 0) + jnp.roll(p, -3, 0) - 2.0 * p
+
+    run = G.apply_stencil_local(stencil, halo, DC.AXIS, overlap=True)
+    fn = jax.jit(RT.shard_map(lambda b: run(b)[0], mesh8,
+                              in_specs=(P(DC.AXIS),),
+                              out_specs=P(DC.AXIS), check_vma=False))
+    got = np.asarray(fn(_sharded(mesh8, jnp.asarray(f))))
+    assert np.array_equal(got, np.asarray(stencil(jnp.asarray(f))))
+
+
+# --------------------------------------------------------------------------
 # Slab-decomposed FFT Poisson
 # --------------------------------------------------------------------------
 

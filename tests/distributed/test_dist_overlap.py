@@ -1,0 +1,144 @@
+"""Split-phase stepping oracles (ISSUE 7): the overlapped interior/boundary
+schedule of ``make_sim_step(overlap=True)`` against the blocking
+``compute → ghost_get → compute`` chain (``overlap=False``), stepped from
+identical starts on 8 forced host devices for every pairwise workload and
+for the sharded VIC step's two-slot stencils.
+
+The fp32 jnp path is designed to be *bitwise*: stable cell-list argsort
+packs locals into identical leading slots with and without ghosts, ghost
+slots contribute strictly-zero summands for interior particles (distance
+> r_cut), and the boundary pass reads exactly the tiles the blocking pass
+reads — so the combine is an elementwise select between identical values.
+The tests assert the tentpole tolerance (1e-5) AND the stronger bitwise
+claim where it holds, plus shardedness before/after (no gather crept in)
+and the StepFlags.window tripwire for undersized interior windows."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks import dist_common as DC
+from repro.apps import dem, md, sph
+from repro.apps import vortex as V
+from repro.core import grid as G
+from repro.core import simulation as SIM
+
+NDEV = 8
+TOL = 1e-5
+N_STEPS = 3
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return DC.make_submesh(NDEV)
+
+
+def _assert_sharded(arr, what):
+    """The step must keep its state distributed: every device holds a
+    shard, none holds the full leading axis."""
+    shards = arr.addressable_shards
+    assert len(shards) == NDEV, what
+    lead = {s.data.shape[0] for s in shards}
+    assert lead == {arr.shape[0] // NDEV}, (what, lead)
+
+
+def _run_pair(mesh8, physics, cfg, state0, n_steps=N_STEPS,
+              extras_fn=lambda i: {}):
+    """Step the same start under both schedules; return final states."""
+    finals = {}
+    for overlap in (True, False):
+        step = SIM.make_sim_step(physics, cfg, mesh8, axis_name=DC.AXIS,
+                                 overlap=overlap)
+        st = state0
+        _assert_sharded(st.ps.x, f"start overlap={overlap}")
+        for i in range(n_steps):
+            st, flags, _ = step(st, extras_fn(i))
+            assert int(flags.any()) == 0, jax.tree.map(int, flags)
+        _assert_sharded(st.ps.x, f"final overlap={overlap}")
+        finals[overlap] = st
+    return finals
+
+
+def _max_err(finals, prop=None):
+    a, b = finals[True].ps, finals[False].ps
+    val = np.asarray(a.valid) & np.asarray(b.valid)
+    xa = np.asarray(a.x if prop is None else a.props[prop])
+    xb = np.asarray(b.x if prop is None else b.props[prop])
+    return np.abs(xa - xb)[val].max()
+
+
+def test_md_overlap_matches_blocking_bitwise(mesh8):
+    cfg = DC.md_config(n_per_side=10, sigma=0.04)
+    state0 = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
+    finals = _run_pair(mesh8, md.physics, cfg, state0)
+    assert _max_err(finals) == 0.0
+    assert _max_err(finals, "v") == 0.0
+    assert _max_err(finals, "f") == 0.0
+    # forces actually engaged — not a free-flight vacuous pass
+    val = np.asarray(finals[True].ps.valid)
+    assert np.abs(np.asarray(finals[True].ps.props["f"]))[val].max() > 1e-2
+
+
+def test_sph_overlap_matches_blocking(mesh8):
+    cfg = DC.sph_config()
+    state0, _ = DC.sph_distributed_start(mesh8, cfg, NDEV)
+    finals = _run_pair(
+        mesh8, sph.physics, cfg, state0,
+        extras_fn=lambda i: {"euler":
+                             jnp.asarray(i % cfg.verlet_reset == 0)})
+    assert _max_err(finals) <= TOL
+    assert _max_err(finals, "v") <= TOL
+    # the density summation crosses slab faces every step: bitwise holds
+    # on the jnp fp32 path here too
+    assert _max_err(finals, "rho") == 0.0
+
+
+def test_dem_overlap_matches_blocking(mesh8):
+    cfg = DC.dem_config()
+    ps0 = DC.dem_settled_start(cfg)
+    state0 = DC.dem_distributed_start(mesh8, cfg, ps0)
+    finals = _run_pair(mesh8, dem.physics, cfg, state0)
+    assert _max_err(finals) <= TOL
+    assert _max_err(finals, "v") <= TOL
+
+
+def test_vic_overlap_matches_blocking(mesh8):
+    """The stencil side: two-slot curl/RHS halos vs blocking ghost_get in
+    the fully sharded VIC step — bitwise, shardedness preserved."""
+    cfg = V.VortexConfig(shape=(32, 16, 16), lengths=(8.0, 4.0, 4.0),
+                         dt=0.02)
+    w0 = V.project_divfree(V.init_ring(cfg), cfg)
+    finals = {}
+    for overlap in (True, False):
+        step = V.make_distributed_vic_step(mesh8, cfg, axis_name=DC.AXIS,
+                                           stencil_overlap=overlap)
+        f = G.distribute_field(w0, mesh8, DC.AXIS)
+        _assert_sharded(f.data, f"start overlap={overlap}")
+        for _ in range(N_STEPS):
+            f, ovf = step(f)
+            assert int(ovf) == 0
+        _assert_sharded(f.data, f"final overlap={overlap}")
+        finals[overlap] = np.asarray(f.data)
+    assert np.array_equal(finals[True], finals[False])
+    assert np.abs(finals[True]).max() > 1e-3  # vorticity actually evolved
+
+
+def test_interior_window_overflow_surfaces(mesh8):
+    """An interior window too small for the owned slab (here forced via
+    interior_rows=1 with 2 owned cell rows per shard) must raise the
+    StepFlags.window tripwire — silently dropping interior rows would
+    zero their pair sums."""
+    cfg = DC.md_config(n_per_side=10, sigma=0.02)   # r_cut 0.06 -> 16 rows
+    state0 = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
+    step = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS,
+                             overlap=True, interior_rows=1)
+    _, flags, _ = step(state0, {})
+    assert int(flags.window) > 0
+    assert int(flags.any()) != 0
+    # the default sizing covers the slab: no window flag
+    step_ok = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS,
+                                overlap=True)
+    _, flags_ok, _ = step_ok(state0, {})
+    assert int(flags_ok.window) == 0

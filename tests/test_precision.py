@@ -1,0 +1,119 @@
+"""precision="bf16x" accuracy regression per kernel family (ISSUE 7).
+
+The mode loads pair/interpolation operands in bfloat16 and accumulates in
+fp32 (fp32 outputs). Two invariants per family, both backends:
+
+  * the fp32 default is untouched BITWISE — precision="fp32" must equal
+    the pre-existing path exactly (the plumbing is a no-op);
+  * bf16x divergence from fp32 sits inside a documented band: a measured
+    upper bound with ~2-3x headroom (regression tracker), and a lower
+    bound ~1e-4 proving the reduced-precision path is actually engaged
+    (a silently-ignored precision flag reads as a perfect score).
+
+Measured relative divergence (max-abs, vs fp32, jnp == pallas-interpret)
+and the physics behind each band — the DESIGN.md §12 safety table:
+
+  MD / LJ      1.6e-2   smooth potential, benign cancellation — SAFE
+  DEM contact  7.0e-2   overlap depth delta = R_i+R_j-r is a near-
+                        cancellation of bf16 operands when delta << r —
+                        MARGINAL (force magnitudes ok, contact onset noisy)
+  SPH / Tait   2.5e-1   pressure ~ (rho/rho0)^7 - 1 with rho/rho0 = 1+eps,
+                        eps ~ 1e-2: a 0.4% bf16 rho error is a ~40% eps
+                        error — UNSAFE for production stepping (density
+                        summation alone would be fine)
+  M'4 P2M/M2P  4e-3     weights in [0,1], fp32 dot accumulation — SAFE
+"""
+import dataclasses
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import backend_compare as BC
+
+# family -> (upper bound, measured) ; lower bound shared below
+BOUNDS = {"md": 5e-2, "sph": 5e-1, "dem": 2e-1}
+ENGAGED = 1e-4   # below this, bf16x is suspiciously == fp32
+
+
+def _cases():
+    return (("md", BC.md_case), ("sph", BC.sph_case), ("dem", BC.dem_case))
+
+
+@pytest.mark.parametrize("name,case", _cases(),
+                         ids=[n for n, _ in _cases()])
+def test_fp32_default_is_bitwise_untouched(name, case):
+    """precision='fp32' (the default) must be byte-identical to the
+    unspecified config on both backends — the precision plumbing cannot
+    perturb existing results."""
+    cfg, fn = case()
+    assert cfg.precision == "fp32"   # the dataclass default
+    for base in (cfg, dataclasses.replace(cfg, backend="pallas",
+                                          interpret=True)):
+        ref = np.asarray(fn(base))
+        got = np.asarray(fn(dataclasses.replace(base, precision="fp32")))
+        assert np.array_equal(ref, got), name
+
+
+@pytest.mark.parametrize("name,case", _cases(),
+                         ids=[n for n, _ in _cases()])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bf16x_within_documented_band(name, case, backend):
+    cfg, fn = case()
+    base = cfg if backend == "jnp" else dataclasses.replace(
+        cfg, backend="pallas", interpret=True)
+    ref = fn(base)
+    got = fn(dataclasses.replace(base, precision="bf16x"))
+    err = BC.rel(got, ref)
+    assert err <= BOUNDS[name], (name, backend, err)
+    assert err >= ENGAGED, \
+        (name, backend, err, "bf16x path not engaged — flag ignored?")
+
+
+def _m4_fixture():
+    rng = np.random.default_rng(5)
+    shape, lengths = (16, 16, 16), (2.0, 2.0, 2.0)
+    n = 500
+    x = jnp.asarray(rng.uniform(0, 1, (n, 3)).astype(np.float32)
+                    * np.asarray(lengths, np.float32))
+    w = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    field = jnp.asarray(rng.normal(size=shape + (3,)).astype(np.float32))
+    kw = dict(shape=shape, box_lo=(0.0, 0.0, 0.0), box_hi=lengths,
+              periodic=(True, True, True), cb=4)
+    return x, w, field, jnp.ones((n,), bool), kw
+
+
+def test_m4_p2m_bf16x_band():
+    from repro.kernels.m4_interp import ops as M4
+    x, w, _, valid, kw = _m4_fixture()
+    ref = M4.p2m(x, w, valid, **kw)
+    same = M4.p2m(x, w, valid, precision="fp32", **kw)
+    assert np.array_equal(np.asarray(ref), np.asarray(same))
+    got = M4.p2m(x, w, valid, precision="bf16x", **kw)
+    err = BC.rel(got, ref)
+    assert ENGAGED <= err <= 2e-2, err
+
+
+def test_m4_m2p_fused_bf16x_band():
+    from repro.kernels.m4_interp import ops as M4
+    x, _, field, valid, kw = _m4_fixture()
+    ref = M4.m2p_fused((field, 2.0 * field), x, valid, **kw)
+    same = M4.m2p_fused((field, 2.0 * field), x, valid,
+                        precision="fp32", **kw)
+    for r, s in zip(ref, same):
+        assert np.array_equal(np.asarray(r), np.asarray(s))
+    got = M4.m2p_fused((field, 2.0 * field), x, valid,
+                       precision="bf16x", **kw)
+    for r, g in zip(ref, got):
+        err = BC.rel(g, r)
+        assert ENGAGED <= err <= 2e-2, err
+
+
+def test_unknown_precision_rejected():
+    from repro.core import interactions as I
+    with pytest.raises(ValueError, match="precision"):
+        I.as_jnp_kernel(lambda dx, r2, ok, wi, wj: {"e": r2},
+                        {"e": "scalar"}, 0.5, precision="fp16")

@@ -24,6 +24,16 @@ REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
     tests/distributed/test_dist_field.py::test_p2m_halo_reduce_matches_full_psum \
     tests/distributed/test_dist_field.py::test_slab_fft_poisson_matches_serial \
     > /dev/null
+# split-phase stepping oracles (PR 7): overlap-vs-blocking for every
+# pairwise workload + the two-slot stencil halos, the HLO schedule
+# discriminator, and the bf16x precision bands
+REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
+    tests/distributed/test_dist_overlap.py::test_md_overlap_matches_blocking_bitwise \
+    tests/distributed/test_dist_overlap.py::test_vic_overlap_matches_blocking \
+    tests/distributed/test_dist_field.py::test_apply_stencil_overlap_matches_blocking \
+    "tests/test_hlo_analysis.py::test_overlap_report_discriminates_schedules" \
+    "tests/test_precision.py::test_bf16x_within_documented_band[jnp-md]" \
+    > /dev/null
 
 echo "== examples/vortex_ring.py (1 step) =="
 python examples/vortex_ring.py --steps 1
@@ -39,5 +49,8 @@ python benchmarks/bench_sim_engine.py
 
 echo "== fleet batched step vs python-loop of single runs (speedup gate) =="
 python benchmarks/bench_fleet.py
+
+echo "== split-phase overlap gates (HLO order + equivalence + wall time) =="
+python benchmarks/bench_overlap.py
 
 echo "smoke OK"

@@ -1,0 +1,173 @@
+"""Pencil-transpose bytes gate — 2-D pencil FFT Poisson vs the slab path.
+
+The ISSUE-9 tentpole claims the pencil decomposition breaks the slab
+ceiling by shrinking each FFT transpose's *per-device wire traffic*: a
+tiled all_to_all ships ``(group-1)/group`` of the local block, so the slab
+solver's single 8-device transpose pays 7/8 of the block while the 2×4
+pencil's widest transpose (its 4-device column group) pays only 3/4 —
+ratio 6/7 ≈ 0.857, counted from compiled HLO, not inferred. Three gates,
+all hard-asserted in the child:
+
+  * HLO wire bytes: ``launch/hlo_analysis.all_to_all_report`` on the
+    compiled solves — the pencil's largest single transpose moves
+    <= MAX_WIRE_RATIO_GATE x the slab's (per-device serial peak, the
+    number a decomposition must pay on its critical path). The pencil's
+    *total* wire bytes are honestly HIGHER (4 transposes of 3/4 + 1/2 vs
+    2 of 7/8: ratio ~1.43) — logged, not gated; the win is the peak (and
+    that each transpose crosses only its own mesh axis, r or c devices,
+    never the full machine — invisible on forced host devices).
+  * Equivalence: pencil solve vs the serial spectral solve to 1e-5
+    (tests/distributed/test_dist_pencil.py carries the real oracles,
+    including the (ndev,1) bitwise slab degeneracy).
+  * Wall time: pencil <= WALL_RATIO_GATE x slab. Lenient by design — 8
+    forced host devices share one CPU, so the extra transpose pair costs
+    real memcpy time here while the per-link wins it buys are invisible.
+
+Same ``--child`` re-exec pattern as bench_overlap (device count locks at
+backend init); rows mirror into ``artifacts/bench_pencil.json`` under the
+repro-fleet-metrics/v1 schema with the forced-host-device caveat.
+"""
+import json
+import os
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.xla_env import ensure_forced_host_devices
+
+NDEV = 8
+SHAPE = (64, 64, 64)
+LENGTHS = (1.0, 1.0, 1.0)
+N_TIME = 5
+MAX_WIRE_RATIO_GATE = 0.9     # expect (3/4)/(7/8) = 6/7 ~ 0.857
+WALL_RATIO_GATE = 1.5
+EQUIV_TOL = 1e-5
+
+
+def _child_main():
+    ensure_forced_host_devices(os.environ)
+
+    import time
+
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from benchmarks import dist_common as DC
+    from repro.core import runtime as RT
+    from repro.launch import hlo_analysis as HA
+    from repro.numerics import poisson as PS
+
+    rng = np.random.default_rng(0)
+    rhs = rng.standard_normal(SHAPE).astype(np.float32)
+    rhs -= rhs.mean()
+    rhs = jax.numpy.asarray(rhs)
+
+    mesh8 = DC.make_submesh(NDEV)
+    mesh24 = RT.make_mesh((2, 4), ("rows", "cols"))
+    slab = PS.make_fft_poisson_slab(mesh8, DC.AXIS, LENGTHS)
+    pencil = PS.make_fft_poisson_pencil(mesh24, ("rows", "cols"), LENGTHS)
+    args = {
+        "slab": (slab, jax.device_put(
+            rhs, NamedSharding(mesh8, P(DC.AXIS)))),
+        "pencil": (pencil, jax.device_put(
+            rhs, NamedSharding(mesh24, P("rows", "cols")))),
+    }
+
+    # --- gate 1: HLO per-device wire bytes -----------------------------
+    reports = {}
+    for name, (solve, arr) in args.items():
+        text = solve.lower(arr).compile().as_text()
+        reports[name] = HA.all_to_all_report(text)
+    sl, pc = reports["slab"], reports["pencil"]
+    assert sl["n_all_to_all"] >= 2 and pc["n_all_to_all"] >= 4, (
+        "expected >=2 slab / >=4 pencil all-to-alls in HLO, got "
+        f"{sl['n_all_to_all']} / {pc['n_all_to_all']}")
+    sl_groups = {o["group_size"] for o in sl["ops"]}
+    pc_groups = {o["group_size"] for o in pc["ops"]}
+    assert sl_groups == {8}, f"slab transpose groups {sl_groups}"
+    assert pc_groups == {2, 4}, f"pencil transpose groups {pc_groups}"
+    peak_ratio = pc["max_wire_bytes"] / sl["max_wire_bytes"]
+    total_ratio = pc["total_wire_bytes"] / sl["total_wire_bytes"]
+    assert peak_ratio <= MAX_WIRE_RATIO_GATE, (
+        f"pencil peak transpose moves {peak_ratio:.3f}x the slab's "
+        f"per-device wire bytes (gate {MAX_WIRE_RATIO_GATE})")
+    print(f"pencil_hlo_wire,0.0,"
+          f"peak_ratio={peak_ratio:.3f};gate={MAX_WIRE_RATIO_GATE};"
+          f"slab_peak_mb={sl['max_wire_bytes'] / 1e6:.2f};"
+          f"pencil_peak_mb={pc['max_wire_bytes'] / 1e6:.2f};"
+          f"total_ratio={total_ratio:.3f};pass=1", flush=True)
+
+    # --- gate 2: equivalence tripwire ----------------------------------
+    ref = np.asarray(PS.fft_poisson(rhs, LENGTHS))
+    scale = max(np.abs(ref).max(), 1e-12)
+    for name, (solve, arr) in args.items():
+        err = np.abs(np.asarray(solve(arr)) - ref).max() / scale
+        assert err <= EQUIV_TOL, f"{name} vs serial drift {err}"
+        print(f"pencil_equiv_{name},0.0,rel_err={err:.2e};pass=1",
+              flush=True)
+
+    # --- gate 3: wall time ---------------------------------------------
+    us = {}
+    for name, (solve, arr) in args.items():
+        jax.block_until_ready(solve(arr))     # warmup (compiled above)
+        t0 = time.perf_counter()
+        for _ in range(N_TIME):
+            out = solve(arr)
+        jax.block_until_ready(out)
+        us[name] = (time.perf_counter() - t0) / N_TIME * 1e6
+        print(f"pencil_solve_{name},{us[name]:.1f},"
+              f"shape={'x'.join(map(str, SHAPE))}", flush=True)
+    ratio = us["pencil"] / us["slab"]
+    assert ratio <= WALL_RATIO_GATE, (
+        f"pencil solve is {ratio:.2f}x the slab solve "
+        f"(gate {WALL_RATIO_GATE})")
+    print(f"pencil_wall_ratio,{us['pencil']:.1f},"
+          f"ratio_vs_slab={ratio:.3f};gate={WALL_RATIO_GATE};pass=1",
+          flush=True)
+
+
+CAVEAT = ("8 forced host devices share one CPU: every transpose is a "
+          "memcpy, so the per-link wire-byte win the pencil buys (each "
+          "all_to_all crosses only its own r- or c-device mesh axis) is "
+          "structural (HLO-counted), not measured, and the extra "
+          "transpose pair costs real time here — the wall gate only "
+          "tracks regressions; re-baseline on real multi-chip hardware")
+
+
+def _write_json(rows):
+    out = _ROOT / "artifacts" / "bench_pencil.json"
+    payload = {
+        "schema": "repro-fleet-metrics/v1",
+        "caveat": CAVEAT,
+        "device_config": "forced-host-devices (XLA "
+                         "--xla_force_host_platform_device_count=8)",
+        "rows": [dict(zip(("name", "us_per_call", "derived"),
+                          ln.split(",", 2))) for ln in rows],
+    }
+    try:
+        out.parent.mkdir(exist_ok=True)
+        out.write_text(json.dumps(payload, indent=2) + "\n")
+    except OSError as e:          # benchmark output must never kill the run
+        print(f"bench_pencil: could not write {out}: {e}", file=sys.stderr)
+
+
+def run():
+    """Parent entry (benchmarks/run.py): relay the child's CSV rows."""
+    from benchmarks.xla_env import run_forced_host_child
+    rows = run_forced_host_child(__file__, "pencil_")
+    rows = [f"{ln};caveat=forced-host-devices-shared-cpu" for ln in rows]
+    if rows:
+        _write_json(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for line in run():
+            print(line)

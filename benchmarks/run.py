@@ -35,6 +35,12 @@ Prints ``name,us_per_call,derived`` CSV.
                     check via launch/hlo_analysis.overlap_report) and is
                     no slower than the blocking chain on 8 forced host
                     devices; rows mirror into artifacts/bench_overlap.json
+  bench_pencil   — 2-D pencil FFT Poisson vs the slab path: the pencil's
+                    widest transpose moves <= 6/7 of the slab's per-device
+                    wire bytes (HLO all-to-all replica-group count via
+                    launch/hlo_analysis.all_to_all_report; total bytes
+                    honestly higher, logged) + equivalence + wall gates;
+                    rows mirror into artifacts/bench_pencil.json
 
 Usage: python benchmarks/run.py [--all] [--only NAME[,NAME...]]
   --all  (default) run every module; a module that raises is reported as
@@ -53,7 +59,7 @@ MODULES = (
     "bench_membw", "bench_md", "bench_sph", "bench_stencil", "bench_vortex",
     "bench_interp", "bench_dem", "bench_cmaes", "backend_compare",
     "bench_distributed", "bench_sim_engine", "bench_fleet", "bench_overlap",
-    "bench_roofline",
+    "bench_pencil", "bench_roofline",
 )
 
 

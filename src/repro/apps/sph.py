@@ -50,7 +50,13 @@ class SPHConfig:
     verlet_reset: int = 40
     backend: str = "jnp"               # "jnp" | "pallas" pair-engine path
     interpret: Optional[bool] = None   # pallas interpret mode (None = auto)
-    precision: str = "fp32"            # "fp32" | "bf16x" pair-engine mode
+    precision: str = "fp32"            # pair-engine mode: "fp32" | "bf16x"
+    #                                    | "bf16x:drho" — the per-output form
+    #                                    runs the density summation (drho)
+    #                                    mixed-precision while the Tait-EOS
+    #                                    force pass (a) keeps full fp32 (its
+    #                                    stiff (rho/rho0)^7 pressure term is
+    #                                    precision-sensitive)
 
     @property
     def h(self) -> float:
@@ -304,18 +310,32 @@ def run(cfg: SPHConfig, n_steps: int):
 def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
                     cap_factor: float = 3.0, axis_name: str = "shards",
                     use_sar: bool = True, imb_threshold: float = 0.3,
-                    min_rebalance_gap: int = 10):
+                    min_rebalance_gap: int = 10, _make_step=None):
     """Driver: returns (ps, t, n_rebalances, imbalance trace).
 
     Rebalance trigger = SAR (degrading balance) OR imbalance threshold
     (paper §3.5: 'automatically determined using SAR or specified by the
     user program' — SAR alone cannot fire on a *constant* imbalance, since
-    the amortized-cost curve never rises)."""
+    the amortized-cost curve never rises).
+
+    The split-phase window tripwire (``StepFlags.window``) is wired to
+    action here: when DLB skews a slab past the engine's static interior
+    row window, the window is re-derived from the reported excess, the
+    step rebuilt, and the step REDONE from the pre-step state — the same
+    re-provision contract the vortex driver applies to ``mesh_halo``.
+    ``_make_step`` is the step factory ``make_step(interior_rows) ->
+    step`` (injectable for testing the control loop without a real DLB
+    skew)."""
     import time as _time
     ps0 = init_dam_break(cfg, capacity_factor=1.05)
     state = SIM.distribute(ps0, physics, cfg, mesh, axis_name=axis_name,
                            cap_factor=cap_factor)
-    step = SIM.make_sim_step(physics, cfg, mesh, axis_name=axis_name)
+    spec = physics(cfg)
+    n_rows = int(SIM._grid_kw(spec, (0,))["grid_shape"][0])
+    w_int = min(n_rows, -(-n_rows // ndev) + 4)   # the engine's default
+    make_step = _make_step or (lambda w: SIM.make_sim_step(
+        physics, cfg, mesh, axis_name=axis_name, interior_rows=w))
+    step = make_step(w_int)
     rebalance = SIM.make_rebalance(physics, cfg, mesh, axis_name=axis_name)
     sar = dlb.SARController(rebalance_cost=0.02)
     t = 0.0
@@ -324,8 +344,18 @@ def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
     imb_trace = []
     for i in range(n_steps):
         t0 = _time.perf_counter()
-        state, flags, scal = step(
-            state, {"euler": jnp.asarray(i % cfg.verlet_reset == 0)})
+        extras = {"euler": jnp.asarray(i % cfg.verlet_reset == 0)}
+        new_state, flags, scal = step(state, extras)
+        while int(flags.window) > 0:
+            grown = min(n_rows, w_int + int(flags.window))
+            if grown == w_int:
+                raise RuntimeError(
+                    f"interior window overflow persists at the geometric "
+                    f"ceiling interior_rows={w_int} (grid rows {n_rows})")
+            w_int = grown
+            step = make_step(w_int)
+            new_state, flags, scal = step(state, extras)  # redo, pre-step
+        state = new_state
         assert int(flags.any()) == 0, f"overflow at step {i}"
         t += float(scal["dt"])
         wall = _time.perf_counter() - t0

@@ -257,12 +257,21 @@ def run(cfg: VortexConfig, n_steps: int):
 # --------------------------------------------------------------------------
 
 def make_distributed_vic_step(mesh, cfg: VortexConfig,
-                              axis_name: str = "shards", *,
+                              axis_name="shards", *,
                               stencil_overlap: bool = True):
     """Fully sharded VIC step: the mesh half lives in a
     ``grid.DistributedField`` (slab along the long axis) exactly as the
     particle half lives in ``DistributedParticles`` — no replicated
     vorticity/velocity arrays and no full-mesh ``psum`` anywhere.
+
+    ``axis_name`` may be a ``(row_axis, col_axis)`` tuple over an (r, c)
+    2-D device mesh (pencil decomposition, DESIGN.md §13): the field
+    pencil-shards axes 0 AND 1, the Poisson solve runs the two-transpose
+    pencil FFT (``poisson.fft_poisson_pencil_local``), stencils/halos use
+    the 2-D ghost protocol (``grid.apply_stencil_local2`` /
+    ``halo_pad2`` / ``halo_reduce2``) and the M'4 legs their pencil-block
+    forms. A tuple whose column axis has size 1 runs the slab composition
+    over the row axis — bitwise today's 1-D path.
 
     Per stage, on each shard's local slab block:
       * re-seed particles from the LOCAL block only (``RM.seed_from_block``
@@ -292,6 +301,11 @@ def make_distributed_vic_step(mesh, cfg: VortexConfig,
     from repro.core import grid as G
     from repro.core import runtime as RT
 
+    if isinstance(axis_name, tuple):
+        row_axis, col_axis = axis_name
+        if int(mesh.shape[col_axis]) > 1:
+            return _make_pencil_vic_step(mesh, cfg, row_axis, col_axis)
+        axis_name = row_axis   # (r, 1) degenerates to the slab composition
     ndev = int(mesh.shape[axis_name])
     n0, n1, _ = cfg.shape
     if n0 % ndev or n1 % ndev:
@@ -372,8 +386,102 @@ def make_distributed_vic_step(mesh, cfg: VortexConfig,
     return jax.jit(stepped)
 
 
+def _make_pencil_vic_step(mesh, cfg: VortexConfig, row_axis: str,
+                          col_axis: str):
+    """The pencil (2-D device mesh) VIC composition (DESIGN.md §13): same
+    RK2 per stage as the slab step, with the field pencil-sharded over axes
+    0 and 1 — ψ via the two-transpose pencil FFT, stencils over 2-D halos,
+    M'4 against 2-D ghost-padded blocks, deposits halo-reduced on both
+    decomposed axes (corners relay through the edge neighbors)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import grid as G
+    from repro.core import runtime as RT
+
+    ndev_r = int(mesh.shape[row_axis])
+    ndev_c = int(mesh.shape[col_axis])
+    n0, n1, n2 = cfg.shape
+    if n0 % ndev_r or n1 % ndev_c:
+        raise ValueError(
+            f"shape {cfg.shape}: axis 0 must divide over {ndev_r} row "
+            f"shards and axis 1 over {ndev_c} column shards (pencil blocks)")
+    if n1 % ndev_r or n2 % ndev_c:
+        raise ValueError(
+            f"shape {cfg.shape}: the pencil FFT transposes need axis 1 "
+            f"divisible by {ndev_r} and axis 2 by {ndev_c}")
+    n0l, n1l = n0 // ndev_r, n1 // ndev_c
+    H = int(cfg.mesh_halo)
+    if not 2 <= H <= min(n0l, n1l):
+        raise ValueError(
+            f"mesh_halo={H} must be in [2, {min(n0l, n1l)}] (M'4 support; "
+            "single-hop ghost exchange per mesh axis)")
+    kw = dict(shape=cfg.shape, box_lo=(0.0, 0.0, 0.0),
+              box_hi=cfg.lengths, periodic=(True, True, True))
+    hs = [L / n for n, L in zip(cfg.shape, cfg.lengths)]
+    curl_st = G.apply_stencil_local2(lambda p: curl(p, hs), 1, row_axis,
+                                     col_axis)
+    rhs_st = G.apply_stencil_local2(
+        lambda wp, up: rhs_field(wp, up, cfg), 1, row_axis, col_axis)
+
+    def local_step(f: G.DistributedField):
+        me_r = RT.axis_index(row_axis)
+        me_c = RT.axis_index(col_axis)
+        w = f.data                                    # (n0l, n1l, n2, 3)
+        row_lo = f.node_bounds[me_r]
+        col_lo = f.col_bounds[me_c]
+        row0, col0 = row_lo - H, col_lo - H           # padded-block origin
+        ps, seed_ovf = RM.seed_from_block2(
+            w, row_lo, col_lo, threshold=cfg.remesh_threshold, **kw)
+        x0, wp0, valid = ps.x, ps.props["w"], ps.valid
+        ovf = seed_ovf
+
+        def eval_fields(wf):
+            psi = PS.fft_poisson_pencil_local(-wf, cfg.lengths, row_axis,
+                                              col_axis)
+            (u,) = curl_st(psi)
+            (r,) = rhs_st(wf, u)
+            return u, r
+
+        def gather(fld, x):
+            pad = G.halo_pad2(fld, H, row_axis, col_axis, periodic=True)
+            return IP.m2p_block2(pad, x, valid, row0, col0, **kw)
+
+        def deposit(x, wp):
+            blk, drop = IP.p2m_block2(x, wp, valid, row0, col0,
+                                      block_rows=n0l + 2 * H,
+                                      block_cols=n1l + 2 * H, **kw)
+            return (G.halo_reduce2(blk, H, row_axis, col_axis,
+                                   periodic=True), drop)
+
+        # stage 1
+        u0, r0 = eval_fields(w)
+        up, d0 = gather(u0, x0)
+        rp, d1 = gather(r0, x0)
+        L = jnp.asarray(cfg.lengths, x0.dtype)
+        x1 = jnp.where(valid[:, None], jnp.mod(x0 + cfg.dt * up, L), x0)
+        wp1 = wp0 + cfg.dt * rp
+        w1, d2 = deposit(x1, wp1)
+        # stage 2 at the predicted state
+        u1, r1 = eval_fields(w1)
+        up1, d3 = gather(u1, x1)
+        rp1, d4 = gather(r1, x1)
+        xf = jnp.where(valid[:, None],
+                       jnp.mod(x0 + 0.5 * cfg.dt * (up + up1), L), x0)
+        wpf = wp0 + 0.5 * cfg.dt * (rp + rp1)
+        wf, d5 = deposit(xf, wpf)
+        ovf = ovf + d0 + d1 + d2 + d3 + d4 + d5
+        return (dataclasses.replace(f, data=wf),
+                RT.psum(ovf, (row_axis, col_axis)))
+
+    stepped = RT.shard_map(local_step, mesh,
+                           in_specs=(G.field_spec2(row_axis, col_axis),),
+                           out_specs=(G.field_spec2(row_axis, col_axis),
+                                      P()),
+                           check_vma=False)
+    return jax.jit(stepped)
+
+
 def run_distributed(cfg: VortexConfig, n_steps: int, mesh,
-                    axis_name: str = "shards", *,
+                    axis_name="shards", *,
                     auto_reprovision: bool = False,
                     _make_step=None):
     """Distributed driver mirroring :func:`run`: the vorticity field lives
@@ -388,13 +496,21 @@ def run_distributed(cfg: VortexConfig, n_steps: int, mesh,
     so steps dispatch asynchronously. ``_make_step`` is the step factory
     (injectable for testing the control loop without a real overflow)."""
     from repro.core import grid as G
+    pencil = (isinstance(axis_name, tuple)
+              and int(mesh.shape[axis_name[1]]) > 1)
     make_step = _make_step or make_distributed_vic_step
     step = make_step(mesh, cfg, axis_name)
     w = project_divfree(init_ring(cfg), cfg)
     z0 = float(centroid_z(w, cfg))
-    f = G.distribute_field(w, mesh, axis_name)
+    if pencil:
+        f = G.distribute_field2(w, mesh, *axis_name)
+        n0l = min(cfg.shape[0] // int(mesh.shape[axis_name[0]]),
+                  cfg.shape[1] // int(mesh.shape[axis_name[1]]))
+    else:
+        row = axis_name[0] if isinstance(axis_name, tuple) else axis_name
+        f = G.distribute_field(w, mesh, row)
+        n0l = cfg.shape[0] // int(mesh.shape[row])
     if auto_reprovision:
-        n0l = cfg.shape[0] // int(mesh.shape[axis_name])
         for _ in range(n_steps):
             f2, ovf = step(f)
             while int(ovf) > 0:

@@ -221,6 +221,10 @@ class DistributedField:
 
     data: jax.Array
     node_bounds: jax.Array     # (n_slabs + 1,) int32
+    # Pencil (2-D) decomposition only (DESIGN.md §13): shard (i, j) owns
+    # global columns ``col_bounds[j] <= c < col_bounds[j+1]`` of axis 1.
+    # None on slab/serial fields — the container stays the 1-D type there.
+    col_bounds: Optional[jax.Array] = None
 
     @property
     def n_slabs(self) -> int:
@@ -230,6 +234,12 @@ class DistributedField:
 def field_spec(axis_name: str) -> "DistributedField":
     """shard_map PartitionSpec pytree for a DistributedField."""
     return DistributedField(data=P(axis_name), node_bounds=P())
+
+
+def field_spec2(row_axis: str, col_axis: str) -> "DistributedField":
+    """shard_map PartitionSpec pytree for a pencil-sharded DistributedField."""
+    return DistributedField(data=P(row_axis, col_axis), node_bounds=P(),
+                            col_bounds=P())
 
 
 def serial_field(arr: jax.Array) -> DistributedField:
@@ -251,6 +261,59 @@ def distribute_field(arr: jax.Array, mesh: Mesh,
         jnp.asarray(np.arange(ndev + 1) * (n // ndev), jnp.int32),
         NamedSharding(mesh, P()))
     return DistributedField(data=data, node_bounds=bounds)
+
+
+def distribute_field2(arr: jax.Array, mesh: Mesh, row_axis: str,
+                      col_axis: str) -> DistributedField:
+    """Pencil-shard a full mesh array (axes 0 and 1) over an (r, c) 2-D
+    device mesh and record the uniform pencil geometry in the container."""
+    r = int(mesh.shape[row_axis])
+    c = int(mesh.shape[col_axis])
+    n0, n1 = arr.shape[0], arr.shape[1]
+    if n0 % r:
+        raise ValueError(f"leading axis {n0} not divisible by {r} row shards")
+    if n1 % c:
+        raise ValueError(f"axis 1 ({n1}) not divisible by {c} column shards")
+    data = jax.device_put(arr, NamedSharding(mesh, P(row_axis, col_axis)))
+    rep = NamedSharding(mesh, P())
+    bounds = jax.device_put(
+        jnp.asarray(np.arange(r + 1) * (n0 // r), jnp.int32), rep)
+    cbounds = jax.device_put(
+        jnp.asarray(np.arange(c + 1) * (n1 // c), jnp.int32), rep)
+    return DistributedField(data=data, node_bounds=bounds, col_bounds=cbounds)
+
+
+# --------------------------------------------------------------------------
+# Pencil (2-D) halo exchange: compose the 1-D exchange per mesh axis
+# --------------------------------------------------------------------------
+
+def halo_pad2(field: jax.Array, halo: int, row_axis: str, col_axis: str, *,
+              periodic: bool = True, fill: float = 0.0) -> jax.Array:
+    """2-D ghost_get for a pencil-sharded block (inside shard_map over an
+    (r, c) mesh): pad axis 0 by ``halo`` over the row axis, then axis 1 of
+    the *row-padded* block over the column axis. Because the column exchange
+    ships the already-row-padded faces, corner ghosts from the diagonal
+    neighbors arrive by the two-hop relay — no dedicated corner sends."""
+    if halo == 0:
+        return field
+    p = halo_pad(field, halo, row_axis, periodic=periodic, fill=fill)
+    moved = jnp.moveaxis(p, 1, 0)
+    p = halo_pad(moved, halo, col_axis, periodic=periodic, fill=fill)
+    return jnp.moveaxis(p, 0, 1)
+
+
+def halo_reduce2(padded: jax.Array, halo: int, row_axis: str, col_axis: str,
+                 *, periodic: bool = True) -> jax.Array:
+    """2-D ghost_put, the exact adjoint of :func:`halo_pad2`: reduce the
+    column halos first, then the row halos — corner contributions relay
+    through the (row, col∓1) neighbor into its row halo and land on the
+    diagonal owner in the second exchange."""
+    if halo == 0:
+        return padded
+    moved = jnp.moveaxis(padded, 1, 0)
+    r = halo_reduce(moved, halo, col_axis, periodic=periodic)
+    r = jnp.moveaxis(r, 0, 1)
+    return halo_reduce(r, halo, row_axis, periodic=periodic)
 
 
 # --------------------------------------------------------------------------
@@ -373,6 +436,32 @@ def apply_stencil_local(stencil_fn: Callable, halo: int,
         return tuple(combined)
 
     return run_overlap
+
+
+def apply_stencil_local2(stencil_fn: Callable, halo: int, row_axis: str,
+                         col_axis: str, *, periodic: bool = True,
+                         fill: float = 0.0):
+    """Pencil (2-D mesh) variant of :func:`apply_stencil_local`: pad each
+    field by ``halo`` on axes 0 AND 1 via :func:`halo_pad2`, apply
+    ``stencil_fn`` to the padded blocks, trim padded-shape outputs back to
+    the interior on both axes. Blocking schedule only — the split-phase
+    overlap is a 1-D row-window construction (ROADMAP follow-on)."""
+
+    def run(*fields):
+        out = stencil_fn(*(halo_pad2(f, halo, row_axis, col_axis,
+                                     periodic=periodic, fill=fill)
+                           for f in fields))
+        if not isinstance(out, tuple):
+            out = (out,)
+        trimmed = []
+        for o, f in zip(out, fields):
+            if (halo and o.shape[0] == f.shape[0] + 2 * halo
+                    and o.shape[1] == f.shape[1] + 2 * halo):
+                o = o[halo:-halo, halo:-halo]
+            trimmed.append(o)
+        return tuple(trimmed)
+
+    return run
 
 
 def make_stencil_step(mesh: Mesh, axis_name: str, stencil_fn: Callable,

@@ -96,6 +96,38 @@ def cast_bf16(w):
         if jnp.issubdtype(a.dtype, jnp.floating) else a, w)
 
 
+def parse_precision(precision: str, out):
+    """Parse a pair-engine precision mode (both backends route through
+    this, so the selection grammar and its errors are identical).
+
+    ``"fp32"`` | ``"bf16x"`` — whole-body modes (all outputs). The
+    per-output form ``"bf16x:<name>[,<name>...]"`` lowers only the listed
+    pair outputs to bf16 operands; the rest stay full fp32 — e.g. SPH's
+    ``"bf16x:drho"`` runs the density summation mixed-precision while the
+    EOS force pass keeps fp32 (its stiff pressure term is precision-
+    sensitive). Returns ``(mode, selection)`` where selection is a
+    frozenset of output names or None (all outputs — pure modes single-
+    evaluate the body, bitwise the legacy paths)."""
+    mode, _, names = precision.partition(":")
+    if mode not in ("fp32", "bf16x"):
+        raise ValueError(f"unknown precision {precision!r}; want 'fp32', "
+                         "'bf16x', or 'bf16x:<out,...>'")
+    if not names:
+        return mode, None
+    if mode != "bf16x":
+        raise ValueError(f"precision {precision!r}: per-output selection "
+                         "only applies to 'bf16x'")
+    sel = frozenset(names.split(","))
+    unknown = sel - set(out)
+    if unknown:
+        raise ValueError(
+            f"precision {precision!r} selects unknown pair outputs "
+            f"{sorted(unknown)}; declared outputs are {sorted(out)}")
+    if sel >= set(out):
+        return mode, None      # every output selected == pure bf16x
+    return mode, sel
+
+
 def as_jnp_kernel(body, out, r_cut: float,
                   precision: str = "fp32") -> KernelFn:
     """Adapt a pair *body* (the cell-pair engine protocol above) into a
@@ -107,32 +139,42 @@ def as_jnp_kernel(body, out, r_cut: float,
     ``precision="bf16x"`` (DESIGN.md §12): geometry (dx, r2, the ok mask)
     stays fp32, the *body* sees bf16 operands and computes per-pair values
     in bf16, and the engine's per-particle sums accumulate in fp32 with
-    fp32 outputs — the classic mixed-precision contract. ``"fp32"`` is the
-    default and leaves the kernel bitwise-untouched."""
-    if precision not in ("fp32", "bf16x"):
-        raise ValueError(f"unknown precision {precision!r}; "
-                         "want 'fp32' or 'bf16x'")
+    fp32 outputs — the classic mixed-precision contract.
+    ``"bf16x:<name,...>"`` applies that contract to the listed outputs
+    only (the body is evaluated under both operand precisions and each
+    output keeps its selected evaluation — see :func:`parse_precision`).
+    ``"fp32"`` is the default and leaves the kernel bitwise-untouched."""
+    mode, sel = parse_precision(precision, out)
     rc2 = r_cut * r_cut
 
     def kernel(dx_arr, r2, wi, wj):
         ok = (r2 < rc2) & (r2 > 1e-12)
-        if precision == "bf16x":
-            dx_arr = dx_arr.astype(jnp.bfloat16)
-            r2 = r2.astype(jnp.bfloat16)
-            wi, wj = cast_bf16(wi), cast_bf16(wj)
-        dx = lambda d: dx_arr[..., d]
-        vals = body(dx, r2, ok, wi, wj)
-        res = {}
-        for name, kind in sorted(out.items()):
-            v = check_out_kind(name, kind, vals[name])
-            if kind == "radial":
-                v = jnp.where(ok, v, 0.0)[..., None] * dx_arr
+
+        def eval_all(bf16: bool):
+            if bf16:
+                dxa = dx_arr.astype(jnp.bfloat16)
+                r2a = r2.astype(jnp.bfloat16)
+                wia, wja = cast_bf16(wi), cast_bf16(wj)
             else:
-                v = jnp.where(ok, v, 0.0)
-            # fp32 accumulators/outputs: the downstream per-particle sum
-            # runs on this cast result
-            res[name] = v.astype(jnp.float32)
-        return res
+                dxa, r2a, wia, wja = dx_arr, r2, wi, wj
+            dx = lambda d: dxa[..., d]
+            vals = body(dx, r2a, ok, wia, wja)
+            res = {}
+            for name, kind in sorted(out.items()):
+                v = check_out_kind(name, kind, vals[name])
+                if kind == "radial":
+                    v = jnp.where(ok, v, 0.0)[..., None] * dxa
+                else:
+                    v = jnp.where(ok, v, 0.0)
+                # fp32 accumulators/outputs: the downstream per-particle
+                # sum runs on this cast result
+                res[name] = v.astype(jnp.float32)
+            return res
+
+        if sel is None:
+            return eval_all(mode == "bf16x")
+        bf, fp = eval_all(True), eval_all(False)
+        return {name: bf[name] if name in sel else fp[name] for name in fp}
 
     return kernel
 

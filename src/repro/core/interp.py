@@ -186,6 +186,99 @@ def m2p_block(block: jax.Array, x: jax.Array, valid: jax.Array,
     return jnp.where(vm, out, 0), dropped
 
 
+# --------------------------------------------------------------------------
+# Pencil-block interpolation: the 2-D-mesh-distributed P2M/M2P legs
+# --------------------------------------------------------------------------
+# A pencil shard owns rows [row0, row0+n0l) × columns [col0, col0+n1l) of
+# the global mesh (plus halos on both axes). Same contract as the slab
+# block variants, applied to axes 0 AND 1: support leaving the block on
+# either axis drops the particle WHOLE and counts it.
+
+def _block_base_frac2(x, row0, col0, n_block0, n_block1, shape, box_lo,
+                      box_hi, periodic):
+    """:func:`_block_base_frac` for a pencil block: axes 0 and 1 are both
+    re-origined at traced (row0, col0) with the periodic fold + low-edge
+    lift applied per axis."""
+    base, frac = _base_and_frac(x, shape, box_lo, box_hi, periodic)
+
+    def rel(axis, origin, n_block):
+        r = base[:, axis] - origin
+        if periodic[axis]:
+            n = shape[axis]
+            r = jnp.mod(r, n)
+            r = jnp.where((r < 1) & (r + n <= n_block - 3), r + n, r)
+        return r
+
+    base = base.at[:, 0].set(rel(0, row0, n_block0))
+    base = base.at[:, 1].set(rel(1, col0, n_block1))
+    return base, frac
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "shape",
+                                   "box_lo", "box_hi", "periodic"))
+def p2m_block2(x: jax.Array, value: jax.Array, valid: jax.Array,
+               row0: jax.Array, col0: jax.Array, *, block_rows: int,
+               block_cols: int, shape: Tuple[int, ...], box_lo, box_hi,
+               periodic):
+    """Particle→mesh onto a local pencil block (rows [row0, row0+block_rows)
+    × columns [col0, col0+block_cols) of the global mesh). Returns
+    ``(block, dropped)``."""
+    dim = len(shape)
+    base, frac = _block_base_frac2(x, row0, col0, block_rows, block_cols,
+                                   shape, box_lo, box_hi, periodic)
+    ok = (valid & _block_ok(base[:, 0], block_rows)
+          & _block_ok(base[:, 1], block_cols))
+    vec = value.ndim == 2
+    out_shape = ((block_rows, block_cols) + shape[2:]
+                 + ((value.shape[1],) if vec else ()))
+    out = jnp.zeros(out_shape, value.dtype)
+    vm = jnp.where(ok, 1.0, 0.0).astype(value.dtype)
+    for off in _stencil_offsets(dim):
+        idx = base + jnp.asarray(off, jnp.int32)
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        w = (w * vm).astype(value.dtype)
+        contrib = value * (w[:, None] if vec else w)
+        wrapped = _wrap_index(idx[:, 2:], shape[2:], periodic[2:])
+        out = out.at[(idx[:, 0], idx[:, 1]) + wrapped].add(contrib,
+                                                           mode="drop")
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return out, dropped
+
+
+@partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
+def m2p_block2(block: jax.Array, x: jax.Array, valid: jax.Array,
+               row0: jax.Array, col0: jax.Array, *, shape: Tuple[int, ...],
+               box_lo, box_hi, periodic):
+    """Mesh→particle from a local pencil block (a ``halo_pad2``-padded field
+    whose [0, 0] corner is global node (row0, col0)). Returns
+    ``(values, dropped)``; dropped particles read 0."""
+    dim = len(shape)
+    n_block0, n_block1 = block.shape[0], block.shape[1]
+    base, frac = _block_base_frac2(x, row0, col0, n_block0, n_block1, shape,
+                                   box_lo, box_hi, periodic)
+    ok = (valid & _block_ok(base[:, 0], n_block0)
+          & _block_ok(base[:, 1], n_block1))
+    vec = block.ndim == dim + 1
+    out = jnp.zeros(x.shape[:1] + ((block.shape[-1],) if vec else ()),
+                    block.dtype)
+    safe0 = jnp.clip(base[:, 0], 1, max(n_block0 - 3, 1))
+    safe1 = jnp.clip(base[:, 1], 1, max(n_block1 - 3, 1))
+    for off in _stencil_offsets(dim):
+        idx = (base.at[:, 0].set(safe0).at[:, 1].set(safe1)
+               + jnp.asarray(off, jnp.int32))
+        w = jnp.ones(x.shape[0], x.dtype)
+        for d in range(dim):
+            w = w * m4_prime(frac[:, d] - off[d])
+        wrapped = _wrap_index(idx[:, 2:], shape[2:], periodic[2:])
+        v = block[(idx[:, 0], idx[:, 1]) + wrapped]
+        out = out + v * (w[:, None] if vec else w).astype(block.dtype)
+    vm = ok.reshape(ok.shape + (1,) * (out.ndim - 1))
+    dropped = jnp.sum(valid & ~ok).astype(jnp.int32)
+    return jnp.where(vm, out, 0), dropped
+
+
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic"))
 def m2p(field: jax.Array, x: jax.Array, valid: jax.Array, *,
         shape: Tuple[int, ...], box_lo, box_hi, periodic) -> jax.Array:

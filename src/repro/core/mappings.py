@@ -134,29 +134,37 @@ def map_particles_local(ps: ParticleSet, bounds: jax.Array, axis_name: str,
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GhostLayer:
-    """Halo particles received from the two slab neighbors.
+    """Halo particles received from slab neighbors.
 
-    Layout: (2, ghost_cap, ...) — row 0 came from the left neighbor (so it
-    sits near our lower boundary), row 1 from the right. ``src_slot`` is the
-    slot index in the *source* device's ParticleSet, the provenance that
-    ghost_put uses to route contributions home."""
+    Layout: (2*K, ghost_cap, ...) for a K-hop exchange — rows ``0..K-1``
+    came from the left neighbors at hop distances ``1..K`` (so they sit near
+    our lower boundary), rows ``K..2K-1`` from the right neighbors at hops
+    ``1..K``. The classic single-hop exchange is K=1: ``[from_left,
+    from_right]``. ``src_slot`` is the slot index in the *source* device's
+    ParticleSet, the provenance that ghost_put uses to route contributions
+    home (DESIGN.md §13)."""
 
-    x: jax.Array            # (2, ghost_cap, dim)
-    props: Dict[str, Any]   # (2, ghost_cap, ...)
-    valid: jax.Array        # (2, ghost_cap)
-    src_slot: jax.Array     # (2, ghost_cap) int32
+    x: jax.Array            # (2K, ghost_cap, dim)
+    props: Dict[str, Any]   # (2K, ghost_cap, ...)
+    valid: jax.Array        # (2K, ghost_cap)
+    src_slot: jax.Array     # (2K, ghost_cap) int32
 
     @property
     def ghost_cap(self) -> int:
         return self.x.shape[1]
 
+    @property
+    def n_hops(self) -> int:
+        return self.x.shape[0] // 2
+
     def as_particles(self) -> ParticleSet:
         g = self.ghost_cap
+        rows = self.x.shape[0] * g
         return ParticleSet(
-            x=self.x.reshape(2 * g, -1),
+            x=self.x.reshape(rows, -1),
             props=jax.tree.map(
-                lambda a: a.reshape((2 * g,) + a.shape[2:]), self.props),
-            valid=self.valid.reshape(2 * g))
+                lambda a: a.reshape((rows,) + a.shape[2:]), self.props),
+            valid=self.valid.reshape(rows))
 
 
 def _pack_side(ps: ParticleSet, sel: jax.Array, ghost_cap: int):
@@ -182,8 +190,8 @@ def _pack_side(ps: ParticleSet, sel: jax.Array, ghost_cap: int):
 def ghost_get_local(ps: ParticleSet, bounds: jax.Array, r_ghost: float,
                     axis_name: str, ghost_cap: int, *, periodic: bool,
                     box_len: float, slab_axis: int = 0,
-                    prop_names: Tuple[str, ...] | None = None
-                    ) -> Tuple[GhostLayer, jax.Array]:
+                    prop_names: Tuple[str, ...] | None = None,
+                    n_hops: int = 1) -> Tuple[GhostLayer, jax.Array]:
     """The ``ghost_get`` mapping (inside shard_map): send particles within
     ``r_ghost`` of each slab face to the respective neighbor. Positions of
     ghosts crossing the periodic seam are shifted by ±L, so downstream
@@ -191,54 +199,93 @@ def ghost_get_local(ps: ParticleSet, bounds: jax.Array, r_ghost: float,
 
     ``prop_names`` mirrors OpenFPM's property-subset ghost_get
     (``ghost_get<prop...>()``): only the listed properties are
-    communicated (all, if None)."""
+    communicated (all, if None).
+
+    ``n_hops`` is the multi-hop generalization (DESIGN.md §13): hop ``h``
+    ships, via the ±h ring permutation, every particle the h-distant slab
+    needs for its ghost window ``[lo - r_ghost, lo)`` / ``[hi, hi +
+    r_ghost)``. Because the hop-h contribution is exactly the intersection of
+    that window with the h-distant *source slab*, hop windows are disjoint
+    (no duplicate ghost images) and their union covers the full window
+    whenever ``n_hops >= ceil(r_ghost / min slab width)``. ``n_hops=1`` is
+    bitwise the classic single-hop exchange."""
     ndev = RT.axis_size(axis_name)
     me = RT.axis_index(axis_name)
-    my_lo = bounds[me]
-    my_hi = bounds[me + 1]
     xs = ps.x[:, slab_axis]
-    near_lo = ps.valid & (xs < my_lo + r_ghost)   # goes to left neighbor
-    near_hi = ps.valid & (xs >= my_hi - r_ghost)  # goes to right neighbor
 
     send_props = (ps.props if prop_names is None
                   else {k: ps.props[k] for k in prop_names})
     ps_send = ps.replace(props=send_props)
 
-    lo_x, lo_p, lo_v, lo_s, ovf_lo = _pack_side(ps_send, near_lo, ghost_cap)
-    hi_x, hi_p, hi_v, hi_s, ovf_hi = _pack_side(ps_send, near_hi, ghost_cap)
-
-    right, left = RT.shift_perms(ndev)
-
     def send(perm, tree):
         return jax.tree.map(lambda a: RT.ppermute(a, axis_name, perm), tree)
 
-    # what I receive from my LEFT neighbor is what it sent rightwards
-    from_left = send(right, dict(x=hi_x, p=hi_p, v=hi_v, s=hi_s))
-    from_right = send(left, dict(x=lo_x, p=lo_p, v=lo_v, s=lo_s))
+    from_left, from_right, overflows = [], [], []
+    for h in range(1, n_hops + 1):
+        # Selection thresholds, in the *sender's* coordinate frame. The
+        # receiver at +h needs our particles with x >= bounds[me+h] - rc
+        # (its lower face minus the ghost radius); symmetrically the
+        # receiver at -h needs x < bounds[me-h+1] + rc. When the index
+        # walks off the bounds array the ring wrapped: fold it back and
+        # shift the threshold by ±L. h == 1 can never wrap (bounds[ndev]
+        # is the upper box face, bounds[0] the lower), so the classic
+        # expressions are kept verbatim — bitwise-identical single-hop.
+        if h == 1:
+            near_lo = ps.valid & (xs < bounds[me] + r_ghost)
+            near_hi = ps.valid & (xs >= bounds[me + 1] - r_ghost)
+        else:
+            idx_r = me + h
+            wrap_r = idx_r > ndev
+            idx_r = jnp.where(wrap_r, idx_r - ndev, idx_r)
+            thresh_hi = (bounds[idx_r]
+                         + jnp.where(wrap_r, box_len, 0.0) - r_ghost)
+            idx_l = me - h + 1
+            wrap_l = idx_l < 0
+            idx_l = jnp.where(wrap_l, idx_l + ndev, idx_l)
+            thresh_lo = (bounds[idx_l]
+                         - jnp.where(wrap_l, box_len, 0.0) + r_ghost)
+            near_lo = ps.valid & (xs < thresh_lo)
+            near_hi = ps.valid & (xs >= thresh_hi)
 
-    # Periodic seam: ghosts that crossed the wrap-around link get their slab
-    # coordinate shifted by ∓L so they sit just outside our local slab —
-    # downstream kernels then never need minimum-image logic for ghosts.
-    if periodic:
-        shift_l = jnp.where(me == 0, -box_len, 0.0)          # from left at seam
-        shift_r = jnp.where(me == ndev - 1, box_len, 0.0)    # from right at seam
-    else:
-        # non-periodic: the wrap-around link carries no physical ghosts
-        from_left["v"] = from_left["v"] & (me != 0)
-        from_right["v"] = from_right["v"] & (me != ndev - 1)
-        shift_l = shift_r = 0.0
+        lo_x, lo_p, lo_v, lo_s, ovf_lo = _pack_side(ps_send, near_lo, ghost_cap)
+        hi_x, hi_p, hi_v, hi_s, ovf_hi = _pack_side(ps_send, near_hi, ghost_cap)
 
-    xl = from_left["x"].at[:, slab_axis].add(_sh(shift_l, from_left["x"].dtype))
-    xr = from_right["x"].at[:, slab_axis].add(_sh(shift_r, from_right["x"].dtype))
+        right, left = RT.shift_perms(ndev, h)
 
+        # what I receive from my hop-h LEFT neighbor is what it sent rightwards
+        fl = send(right, dict(x=hi_x, p=hi_p, v=hi_v, s=hi_s))
+        fr = send(left, dict(x=lo_x, p=lo_p, v=lo_v, s=lo_s))
+
+        # Periodic seam: ghosts that crossed the wrap-around link get their
+        # slab coordinate shifted by ∓L so they sit just outside our local
+        # slab — downstream kernels then never need minimum-image logic.
+        if periodic:
+            shift_l = jnp.where(me - h < 0, -box_len, 0.0)
+            shift_r = jnp.where(me + h >= ndev, box_len, 0.0)
+        else:
+            # non-periodic: the wrap-around link carries no physical ghosts
+            fl["v"] = fl["v"] & (me - h >= 0)
+            fr["v"] = fr["v"] & (me + h < ndev)
+            shift_l = shift_r = 0.0
+
+        fl["x"] = fl["x"].at[:, slab_axis].add(_sh(shift_l, fl["x"].dtype))
+        fr["x"] = fr["x"].at[:, slab_axis].add(_sh(shift_r, fr["x"].dtype))
+        from_left.append(fl)
+        from_right.append(fr)
+        overflows.append(jnp.maximum(ovf_lo, ovf_hi))
+
+    sides = from_left + from_right   # rows 0..K-1 left hops, K..2K-1 right
     ghosts = GhostLayer(
-        x=jnp.stack([xl, xr]),
-        props=jax.tree.map(lambda a, b: jnp.stack([a, b]),
-                           from_left["p"], from_right["p"]),
-        valid=jnp.stack([from_left["v"], from_right["v"]]),
-        src_slot=jnp.stack([from_left["s"], from_right["s"]]),
+        x=jnp.stack([s["x"] for s in sides]),
+        props=jax.tree.map(lambda *a: jnp.stack(a),
+                           *[s["p"] for s in sides]),
+        valid=jnp.stack([s["v"] for s in sides]),
+        src_slot=jnp.stack([s["s"] for s in sides]),
     )
-    overflow = RT.pmax(jnp.maximum(ovf_lo, ovf_hi), axis_name)
+    ovf = overflows[0]
+    for o in overflows[1:]:
+        ovf = jnp.maximum(ovf, o)
+    overflow = RT.pmax(ovf, axis_name)
     return ghosts, overflow
 
 
@@ -254,32 +301,40 @@ def ghost_put_local(contrib, ghosts: GhostLayer, ps: ParticleSet,
                     axis_name: str, op: str = "sum"):
     """The ``ghost_put`` mapping (inside shard_map).
 
-    ``contrib`` is a pytree of arrays shaped (2, ghost_cap, ...) aligned with
-    the GhostLayer — the values accumulated on ghost rows during local
-    computation. They are sent back to the source device and merged into the
-    owner's per-particle arrays with ``op`` ∈ {sum, max, min}. Returns the
-    merged pytree with leading dim = ps.capacity.
+    ``contrib`` is a pytree of arrays shaped (2K, ghost_cap, ...) aligned
+    with the GhostLayer — the values accumulated on ghost rows during local
+    computation. They are sent back to the source device (reversing each
+    hop's ring permutation) and merged into the owner's per-particle arrays
+    with ``op`` ∈ {sum, max, min}. Returns the merged pytree with leading
+    dim = ps.capacity.
 
     (The paper's third merge mode — 'merge into a list' — is returned to the
     caller as the raw returned buffers: fixed-capacity list semantics.)
     """
     ndev = RT.axis_size(axis_name)
-    right, left = RT.shift_perms(ndev)
+    n_hops = ghosts.n_hops
 
-    # row 0 of the ghost layer came FROM the left ⇒ contributions go back left.
     def back(perm, tree):
         return jax.tree.map(lambda a: RT.ppermute(a, axis_name, perm), tree)
 
-    to_left = back(left, jax.tree.map(lambda a: a[0], contrib))
-    to_right = back(right, jax.tree.map(lambda a: a[1], contrib))
-    slot_l = RT.ppermute(ghosts.src_slot[0], axis_name, left)
-    slot_r = RT.ppermute(ghosts.src_slot[1], axis_name, right)
-    val_l = RT.ppermute(ghosts.valid[0], axis_name, left)
-    val_r = RT.ppermute(ghosts.valid[1], axis_name, right)
+    returned = []   # (contrib, slot, valid) per ghost row, in row order
+    for h in range(1, n_hops + 1):
+        right, left = RT.shift_perms(ndev, h)
+        # row h-1 came FROM the hop-h left neighbor ⇒ contributions go back
+        # left by h; row K+h-1 symmetrically right by h.
+        rl, rr = h - 1, n_hops + h - 1
+        returned.append((
+            back(left, jax.tree.map(lambda a: a[rl], contrib)),
+            RT.ppermute(ghosts.src_slot[rl], axis_name, left),
+            RT.ppermute(ghosts.valid[rl], axis_name, left)))
+        returned.append((
+            back(right, jax.tree.map(lambda a: a[rr], contrib)),
+            RT.ppermute(ghosts.src_slot[rr], axis_name, right),
+            RT.ppermute(ghosts.valid[rr], axis_name, right)))
 
     cap = ps.capacity
 
-    def merge(base, cl, cr):
+    def merge(base, *chans):
         def one(b, c, slot, v):
             vm = v.reshape(v.shape + (1,) * (c.ndim - 1))
             c = jnp.where(vm, c, _identity(op, c.dtype))
@@ -291,11 +346,13 @@ def ghost_put_local(contrib, ghosts: GhostLayer, ps: ParticleSet,
             if op == "min":
                 return b.at[idx].min(c, mode="drop")
             raise ValueError(f"unknown ghost_put op {op!r}")
-        b = one(base, cl, slot_l, val_l)
-        return one(b, cr, slot_r, val_r)
+        b = base
+        for c, (_, slot, v) in zip(chans, returned):
+            b = one(b, c, slot, v)
+        return b
 
-    return jax.tree.map(merge, _zeros_like_for(op, contrib, cap), to_left,
-                        to_right)
+    return jax.tree.map(merge, _zeros_like_for(op, contrib, cap),
+                        *[c for c, _, _ in returned])
 
 
 def _identity(op, dtype):
@@ -344,7 +401,8 @@ def make_map_fn(mesh: Mesh, example: ParticleSet, axis_name: str,
 def make_ghost_get_fn(mesh: Mesh, example: ParticleSet, axis_name: str,
                       ghost_cap: int, r_ghost: float, *, periodic: bool,
                       box_len: float, slab_axis: int = 0,
-                      prop_names: Tuple[str, ...] | None = None):
+                      prop_names: Tuple[str, ...] | None = None,
+                      n_hops: int = 1):
     """Jitted global ``ghost_get()``; returns fn(ps, bounds) -> (GhostLayer
     sharded per device, overflow)."""
     spec = ps_specs(example, axis_name)
@@ -352,7 +410,8 @@ def make_ghost_get_fn(mesh: Mesh, example: ParticleSet, axis_name: str,
     def fn(ps: ParticleSet, bounds: jax.Array):
         return ghost_get_local(ps, bounds, r_ghost, axis_name, ghost_cap,
                                periodic=periodic, box_len=box_len,
-                               slab_axis=slab_axis, prop_names=prop_names)
+                               slab_axis=slab_axis, prop_names=prop_names,
+                               n_hops=n_hops)
 
     # GhostLayer leaves have a local leading dim of 2; globally they stack
     # along a new device axis — shard every leaf on its leading dim.

@@ -114,6 +114,30 @@ def seed_from_block(block: jax.Array, row0: jax.Array, *, shape, box_lo,
     return ps.replace(x=x), overflow
 
 
+def seed_from_block2(block: jax.Array, row0: jax.Array, col0: jax.Array, *,
+                     shape, box_lo, box_hi, periodic, threshold: float = 0.0,
+                     capacity: int = 0) -> Tuple[ParticleSet, jax.Array]:
+    """Per-pencil re-seed: :func:`seed_from_mesh` over a LOCAL pencil block
+    owning rows [row0, row0 + n0_local) × columns [col0, col0 + n1_local) of
+    the global mesh (DESIGN.md §13). Both origins are traced; seeded
+    particles carry GLOBAL coordinates."""
+    dim = len(shape)
+    lo, h = _node_spacing(shape, box_lo, box_hi, periodic)
+    n0_local, n1_local = block.shape[0], block.shape[1]
+    local_lo = (0.0, 0.0) + tuple(float(v) for v in np.asarray(box_lo)[2:])
+    local_hi = (float(n0_local * h[0]), float(n1_local * h[1])) + tuple(
+        float(v) for v in np.asarray(box_hi)[2:])
+    ps, overflow = seed_from_mesh(
+        block, box_lo=local_lo, box_hi=local_hi,
+        periodic=(True, True) + tuple(periodic[2:]), threshold=threshold,
+        capacity=capacity, dim=dim)
+    x0 = ps.x[:, 0] + (lo[0] + row0 * h[0]).astype(ps.x.dtype)
+    x1 = ps.x[:, 1] + (lo[1] + col0 * h[1]).astype(ps.x.dtype)
+    x = ps.x.at[:, 0].set(x0).at[:, 1].set(x1)
+    x = jnp.where(ps.valid[:, None], x, ps.x)
+    return ps.replace(x=x), overflow
+
+
 @partial(jax.jit, static_argnames=("shape", "box_lo", "box_hi", "periodic",
                                    "threshold", "capacity", "use_pallas",
                                    "cb", "cell_cap", "interpret"))

@@ -177,9 +177,11 @@ def all_gather(x, axis_name: str, *, axis: int = 0, tiled: bool = False):
     return jax.lax.all_gather(x, axis_name, axis=axis, tiled=tiled)
 
 
-def shift_perms(ndev: int):
+def shift_perms(ndev: int, hop: int = 1):
     """The two ring permutations of a 1-D mesh axis: (right, left) neighbor
-    send lists, shared by every slab/ring exchange in the repo."""
-    right = [(i, (i + 1) % ndev) for i in range(ndev)]
-    left = [(i, (i - 1) % ndev) for i in range(ndev)]
+    send lists, shared by every slab/ring exchange in the repo. ``hop``
+    generalizes to the k-hop rings of the multi-hop ghost exchange
+    (DESIGN.md §13): ``hop=1`` (the default) is the classic ±1 shift."""
+    right = [(i, (i + hop) % ndev) for i in range(ndev)]
+    left = [(i, (i - hop) % ndev) for i in range(ndev)]
     return right, left

@@ -83,6 +83,11 @@ class DistributedParticles:
     ps: ParticleSet
     bounds: jax.Array       # (n_slabs + 1,) float32
     fields: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # Pencil (2-D mesh) decomposition only (DESIGN.md §13): device (i, j)
+    # owns ``bounds[i] <= x0 < bounds[i+1]`` × ``col_bounds[j] <= x1 <
+    # col_bounds[j+1]``. None on slab/serial states — the container stays
+    # the 1-D type there (an empty pytree subtree, so specs line up).
+    col_bounds: Optional[jax.Array] = None
 
     @property
     def n_slabs(self) -> int:
@@ -103,8 +108,11 @@ class StepFlags:
     neighbor: jax.Array        # Verlet/contact-list excess over k slots
     bucket: jax.Array          # map() per-destination bucket excess
     ghost: jax.Array           # ghost_get per-side excess over ghost_cap
-    ghost_contract: jax.Array  # 1 ⇔ r_ghost > min slab width (±1-hop
-    #                            ghost exchange no longer covers r_cut)
+    ghost_contract: jax.Array  # ghost-hop excess: ceil(r_ghost / min slab
+    #                            width) minus the hops the step exchanges
+    #                            (DESIGN.md §13). 0 ⇔ the k-hop ghost_get
+    #                            covers r_cut; a positive value is how many
+    #                            MORE hops the current decomposition needs.
     window: jax.Array = dataclasses.field(  # split-phase interior row-window
         default_factory=lambda: jnp.zeros((), jnp.int32))
     #                            excess (overlap mode): DLB skewed a slab
@@ -236,17 +244,19 @@ class PhysicsSpec:
     mesh_props: Tuple[str, ...] = ()         # mesh fields in state.fields
 
 
-def _grid_kw(spec: PhysicsSpec, padded: bool, slab_axis: int):
+def _grid_kw(spec: PhysicsSpec, padded_axes: Tuple[int, ...]):
     """Cell grid: the declared domain, or (distributed) the ghost-padded box
-    — slab axis extended by r_cut and non-periodic, because ghost images
-    arrive pre-shifted across the seam (mappings.ghost_get_local)."""
+    — every decomposed space axis in ``padded_axes`` extended by r_cut and
+    non-periodic, because ghost images arrive pre-shifted across the seam
+    (mappings.ghost_get_local). Serial passes ``()``; a slab run pads its
+    one slab axis; a pencil run pads both decomposed axes."""
     lo = list(float(v) for v in spec.box_lo)
     hi = list(float(v) for v in spec.box_hi)
     per = list(bool(v) for v in spec.periodic)
-    if padded:
-        lo[slab_axis] -= spec.r_cut
-        hi[slab_axis] += spec.r_cut
-        per[slab_axis] = False
+    for ax in padded_axes:
+        lo[ax] -= spec.r_cut
+        hi[ax] += spec.r_cut
+        per[ax] = False
     gs = CL.grid_shape_for(lo, hi, spec.r_cut)
     return dict(box_lo=tuple(lo), box_hi=tuple(hi), grid_shape=gs,
                 periodic=tuple(per), cell_cap=spec.cell_cap)
@@ -285,7 +295,7 @@ def make_serial_step_fn(physics, cfg, *, slab_axis: int = 0):
                    backend=spec.backend, interpret=spec.interpret,
                    precision=spec.precision)
     mesh_periodic = bool(spec.periodic[slab_axis])
-    cl_kw = _grid_kw(spec, padded=False, slab_axis=slab_axis)
+    cl_kw = _grid_kw(spec, ())
 
     def step(state: DistributedParticles, extras):
         red = Reduce(None)
@@ -307,11 +317,23 @@ def make_serial_step_fn(physics, cfg, *, slab_axis: int = 0):
     return step
 
 
+def _auto_hops(rc: float, box_len: float, ndev: int) -> int:
+    """Static default ghost-hop count: the hops a *uniform* decomposition of
+    ``ndev`` slabs needs to cover ``rc`` (clamped to the ring diameter).
+    In-graph the traced bounds re-derive the true need; the excess lands in
+    ``StepFlags.ghost_contract``."""
+    if ndev <= 1:
+        return 1
+    need = int(np.ceil(rc * ndev / box_len - 1e-9))
+    return max(1, min(ndev - 1, need))
+
+
 @functools.lru_cache(maxsize=None)
-def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
+def make_sim_step(physics, cfg, mesh=None, *, axis_name="shards",
                   slab_axis: int = 0, bucket_cap: Optional[int] = None,
                   ghost_cap: Optional[int] = None, overlap: bool = True,
-                  interior_rows: Optional[int] = None):
+                  interior_rows: Optional[int] = None,
+                  n_hops: Optional[int] = None):
     """Build the jitted simulation step for ``physics(cfg)``.
 
     Returns ``step(state, extras) -> (state, flags, scalars)`` over a
@@ -319,6 +341,21 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     path — the 1-device special case of the same composition; with a mesh
     the identical hooks run inside ``shard_map`` with ``map()``/``ghost_get``
     communication composed around the pair pass.
+
+    ``axis_name`` may be a single mesh axis (slab decomposition) or a
+    ``(row_axis, col_axis)`` tuple over a 2-D device mesh (pencil
+    decomposition, DESIGN.md §13): particles are decomposed along
+    ``slab_axis`` over the rows and ``slab_axis + 1`` over the columns
+    (state carries ``col_bounds``), with a two-stage map and a two-stage
+    ghost_get (rows first, then columns over locals+row-ghosts, which
+    relays corner ghosts). A tuple whose column axis has size 1 runs the
+    slab composition over the row axis — bitwise today's 1-D path.
+
+    ``n_hops`` sets the ghost-exchange hop count (per decomposed axis);
+    default is the static uniform-width need ``ceil(r_cut·ndev/box_len)``.
+    The in-graph re-derivation against the traced (DLB-moved) bounds
+    reports any shortfall in ``StepFlags.ghost_contract`` — thin slabs are
+    now *satisfied* by extra hops, not merely flagged.
 
     ``overlap=True`` (the default on a mesh) selects the split-phase
     schedule (DESIGN.md §12): the ghost_get ppermute is issued first, the
@@ -332,6 +369,8 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     from identical summand tiles (stable-sort slot packing), so the step
     is bitwise-equal to ``overlap=False`` — the legacy blocking chain
     compute → ghost_get → compute, kept as the benchmark baseline.
+    The split-phase window geometry assumes single-hop boundary bands, so
+    multi-hop steps (and true 2-D pencil steps) run the blocking schedule.
     ``interior_rows`` caps the static interior row window (default:
     uniform share + margin); a DLB-skewed slab exceeding it raises
     ``StepFlags.window``, never drops interactions silently.
@@ -344,6 +383,13 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
         return jax.jit(make_serial_step_fn(physics, cfg,
                                            slab_axis=slab_axis))
 
+    two_d_state = isinstance(axis_name, tuple)
+    if two_d_state:
+        row_axis, col_axis = axis_name
+    else:
+        row_axis, col_axis = axis_name, None
+    ndev_c = int(mesh.shape[col_axis]) if col_axis is not None else 1
+
     spec = physics(cfg)
     body = spec.make_body()
     rc = float(spec.r_cut)
@@ -353,9 +399,22 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
 
     b_cap = int(bucket_cap or spec.bucket_cap)
     g_cap = int(ghost_cap or spec.ghost_cap)
-    cl_kw = _grid_kw(spec, padded=True, slab_axis=slab_axis)
     box_len = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
     per_slab = bool(spec.periodic[slab_axis])
+    ndev = int(mesh.shape[row_axis])
+    k_row = int(n_hops) if n_hops is not None else _auto_hops(rc, box_len,
+                                                              ndev)
+    if ndev_c > 1:
+        return _make_sim_step_2d(
+            spec, body, pair_kw, mesh, row_axis, col_axis, slab_axis,
+            b_cap, g_cap, k_row, n_hops)
+
+    axis_name = row_axis
+    cl_kw = _grid_kw(spec, (slab_axis,))
+    # The split-phase window geometry assumes the single-hop regime
+    # (boundary bands one r_cut wide); multi-hop thin slabs fall back to
+    # the blocking schedule (ROADMAP follow-on).
+    overlap = overlap and k_row == 1
 
     # --- static split-phase geometry (overlap mode) -----------------------
     gs = cl_kw["grid_shape"]
@@ -372,7 +431,6 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
         np.sort((oix * strides[:, None]).sum(axis=0)).astype(np.int32))
     lo_s = float(cl_kw["box_lo"][slab_axis])
     hi_s = float(cl_kw["box_hi"][slab_axis])
-    ndev = int(mesh.shape[axis_name])
     w_int = int(interior_rows if interior_rows is not None
                 else min(n_rows, -(-n_rows // ndev) + 4))
     W_B = 5   # boundary rows per side: <= 3 needed (cell width >= r_cut,
@@ -402,13 +460,15 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
         # map(): migrate to owners under the (possibly DLB-moved) bounds
         ps, ovf_bucket = M.map_particles_local(ps, bounds, axis_name, b_cap,
                                                slab_axis)
-        # ghost contract (ROADMAP): the ±1-neighbor exchange covers r_cut
-        # only while every slab is at least r_ghost wide. Bounds are traced
-        # (DLB moves them in-graph), so this must be an in-graph check.
-        contract = (jnp.min(bounds[1:] - bounds[:-1]) < rc).astype(jnp.int32)
+        # ghost contract (DESIGN.md §13): the k-hop exchange covers r_cut
+        # while k >= ceil(r_ghost / min slab width). Bounds are traced (DLB
+        # moves them in-graph), so the need is re-derived in-graph; the
+        # flag reports the hop *excess* still missing (0 = satisfied).
+        contract = _hop_excess(bounds, rc, k_row)
         ghosts, ovf_ghost = M.ghost_get_local(
             ps, bounds, rc, axis_name, g_cap, periodic=per_slab,
-            box_len=box_len, slab_axis=slab_axis, prop_names=spec.ghost_props)
+            box_len=box_len, slab_axis=slab_axis, prop_names=spec.ghost_props,
+            n_hops=k_row)
         win_ovf = _Z32()
         if overlap:
             # Interior pass while the ghost ppermute is in flight: a
@@ -474,7 +534,8 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
         return (dataclasses.replace(state, ps=ps, fields=fields), flags,
                 scalars)
 
-    state_spec = _state_spec(spec, axis_name)
+    state_spec = _state_spec(spec, axis_name,
+                             with_col_bounds=two_d_state)
     stepped = RT.shard_map(local_step, mesh,
                            in_specs=(state_spec, P()),
                            out_specs=(state_spec, P(), P()),
@@ -482,49 +543,187 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name: str = "shards",
     return jax.jit(stepped)
 
 
-def _state_spec(spec: PhysicsSpec, axis_name: str) -> DistributedParticles:
+def _hop_excess(bounds: jax.Array, rc: float, k: int) -> jax.Array:
+    """In-graph ghost-contract check against traced slab bounds: how many
+    hops ``ceil(rc / min width)`` needs beyond the ``k`` exchanged (>= 0;
+    0 = the k-hop ghost_get covers r_cut)."""
+    min_w = jnp.maximum(jnp.min(bounds[1:] - bounds[:-1]), 1e-12)
+    k_needed = jnp.ceil(rc / min_w).astype(jnp.int32)
+    return jnp.maximum(k_needed - k, 0).astype(jnp.int32)
+
+
+def _state_spec(spec: PhysicsSpec, axis_name, *,
+                with_col_bounds: bool = False) -> DistributedParticles:
     """shard_map specs for the container: particles and declared mesh
-    fields shard their leading dim, bounds replicate."""
+    fields shard their leading dim, bounds replicate. ``axis_name`` may be
+    a tuple of mesh axes (pencil decomposition: the leading dim shards over
+    their product, row-major); ``with_col_bounds`` adds the replicated
+    column-bounds leaf pencil states carry."""
+    part = P(axis_name)
     return DistributedParticles(
-        ps=P(axis_name), bounds=P(),
-        fields={k: P(axis_name) for k in spec.mesh_props})
+        ps=part, bounds=P(),
+        fields={k: part for k in spec.mesh_props},
+        col_bounds=P() if with_col_bounds else None)
+
+
+def _make_sim_step_2d(spec: PhysicsSpec, body, pair_kw, mesh, row_axis: str,
+                      col_axis: str, slab_axis: int, b_cap: int, g_cap: int,
+                      k_row: int, n_hops: Optional[int]):
+    """The pencil (2-D device mesh) step composition (DESIGN.md §13):
+    two-stage map, two-stage multi-hop ghost_get (columns exchange
+    locals+row-ghosts, relaying corner ghosts), one blocking pair pass over
+    a cell box ghost-padded on both decomposed axes."""
+    if spec.mesh_props:
+        raise NotImplementedError(
+            "mesh_props on a true 2-D device mesh needs the pencil GridOps "
+            "(ROADMAP follow-on); decompose mesh-carrying physics as "
+            "(ndev, 1) or use apps/vortex.py's pencil VIC step")
+    col_space_axis = slab_axis + 1
+    if col_space_axis >= len(spec.box_lo):
+        raise ValueError("pencil decomposition needs a space axis "
+                         f"{col_space_axis}; physics is {len(spec.box_lo)}-D")
+    rc = float(spec.r_cut)
+    box_len_c = (float(spec.box_hi[col_space_axis])
+                 - float(spec.box_lo[col_space_axis]))
+    box_len_r = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
+    per_row = bool(spec.periodic[slab_axis])
+    per_col = bool(spec.periodic[col_space_axis])
+    ndev_c = int(mesh.shape[col_axis])
+    k_col = (int(n_hops) if n_hops is not None
+             else _auto_hops(rc, box_len_c, ndev_c))
+    axes = (row_axis, col_axis)
+    cl_kw = _grid_kw(spec, (slab_axis, col_space_axis))
+
+    def local_step(state: DistributedParticles, extras):
+        red = Reduce(axes)
+        ps, bounds, cbounds = state.ps, state.bounds, state.col_bounds
+        if spec.advance is not None:
+            ps = spec.advance(ps, red, extras)
+        # two-stage map(): rows re-own along slab_axis within each mesh
+        # column, then columns re-own along col_space_axis within each row
+        ps, ovf_r = M.map_particles_local(ps, bounds, row_axis, b_cap,
+                                          slab_axis)
+        ps, ovf_c = M.map_particles_local(ps, cbounds, col_axis, b_cap,
+                                          col_space_axis)
+        ovf_bucket = jnp.maximum(ovf_r, ovf_c)
+        contract = jnp.maximum(_hop_excess(bounds, rc, k_row),
+                               _hop_excess(cbounds, rc, k_col))
+        # two-stage ghost_get: rows first; the column exchange then ships
+        # locals+row-ghosts, so corner particles relay via the (row, col∓1)
+        # neighbor — no dedicated diagonal sends.
+        ghosts_r, ovf_gr = M.ghost_get_local(
+            ps, bounds, rc, row_axis, g_cap, periodic=per_row,
+            box_len=box_len_r, slab_axis=slab_axis,
+            prop_names=spec.ghost_props, n_hops=k_row)
+        gp_r = ghosts_r.as_particles()
+        combo_r = ParticleSet(
+            x=jnp.concatenate([ps.x, gp_r.x]),
+            props={k: jnp.concatenate([ps.props[k], gp_r.props[k]])
+                   for k in spec.ghost_props},
+            valid=jnp.concatenate([ps.valid, gp_r.valid]))
+        ghosts_c, ovf_gc = M.ghost_get_local(
+            combo_r, cbounds, rc, col_axis, g_cap, periodic=per_col,
+            box_len=box_len_c, slab_axis=col_space_axis,
+            prop_names=spec.ghost_props, n_hops=k_col)
+        gp_c = ghosts_c.as_particles()
+        combo = ParticleSet(
+            x=jnp.concatenate([combo_r.x, gp_c.x]),
+            props={k: jnp.concatenate([combo_r.props[k], gp_c.props[k]])
+                   for k in spec.ghost_props},
+            valid=jnp.concatenate([combo_r.valid, gp_c.valid]))
+        cl = CL.build_cell_list(combo, **cl_kw)
+        pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+        ps, scalars, nb_ovf, fields = _finish(
+            spec, StepCtx(ps=ps, combo=combo, cl=cl, pair=pair, red=red,
+                          extras=extras, fields=state.fields,
+                          grid=G.GridOps()))
+        flags = StepFlags(
+            cell=RT.pmax(jnp.asarray(cl.overflow, jnp.int32), axes),
+            neighbor=RT.pmax(nb_ovf, axes),
+            bucket=RT.pmax(jnp.asarray(ovf_bucket, jnp.int32), axes),
+            ghost=RT.pmax(jnp.maximum(ovf_gr, ovf_gc), axes),
+            ghost_contract=contract,
+            window=_Z32())
+        return (dataclasses.replace(state, ps=ps, fields=fields), flags,
+                scalars)
+
+    state_spec = _state_spec(spec, axes, with_col_bounds=True)
+    stepped = RT.shard_map(local_step, mesh,
+                           in_specs=(state_spec, P()),
+                           out_specs=(state_spec, P(), P()),
+                           check_vma=False)
+    return jax.jit(stepped)
 
 
 @functools.lru_cache(maxsize=None)
-def make_rebalance(physics, cfg, mesh, *, axis_name: str = "shards",
+def make_rebalance(physics, cfg, mesh, *, axis_name="shards",
                    slab_axis: int = 0, bucket_cap: Optional[int] = None,
-                   nbins: int = 256, min_slab_width: Optional[float] = None):
+                   nbins: int = 256, min_slab_width: Optional[float] = None,
+                   n_hops: int = 1):
     """The DLB 'repartition + migrate' pair (paper §3.5), physics-generic:
     cost-balanced slab bounds from the global particle histogram (psum'd
     in-graph) followed by ``map()`` under the new decomposition. The new
-    bounds are projected onto slabs >= ``min_slab_width`` (default: the
-    spec's r_cut) so the balancer can never move the decomposition into
-    ghost-contract violation. Returns ``fn(state) -> (state, overflow)``."""
+    bounds are projected onto slabs >= ``min_slab_width`` (default:
+    r_cut / ``n_hops`` — a step exchanging ``n_hops`` ghost hops covers
+    r_cut across slabs that thin, DESIGN.md §13) so the balancer can never
+    move the decomposition into ghost-contract violation.
+
+    ``axis_name`` may be a ``(row_axis, col_axis)`` tuple (pencil states):
+    each decomposed axis is rebalanced against its own psum'd histogram and
+    particles re-owned along rows then columns; ``col_bounds`` rides in the
+    state. Returns ``fn(state) -> (state, overflow)``."""
     spec = physics(cfg)
-    ndev = int(mesh.shape[axis_name])
+    two_d_state = isinstance(axis_name, tuple)
+    if two_d_state:
+        row_axis, col_axis = axis_name
+        ndev_c = int(mesh.shape[col_axis])
+    else:
+        row_axis, col_axis, ndev_c = axis_name, None, 1
+    col_space_axis = slab_axis + 1
+    ndev = int(mesh.shape[row_axis])
     lo = float(spec.box_lo[slab_axis])
     hi = float(spec.box_hi[slab_axis])
     b_cap = int(bucket_cap or spec.bucket_cap)
-    # 0.1% margin keeps cumsum rounding from landing a hair under r_cut
-    min_w = float(spec.r_cut * 1.001 if min_slab_width is None
-                  else min_slab_width)
+    # 0.1% margin keeps cumsum rounding from landing a hair under the
+    # per-hop reach r_cut / n_hops
+    min_w = float(spec.r_cut * 1.001 / max(int(n_hops), 1)
+                  if min_slab_width is None else min_slab_width)
+    red_axes = axis_name  # tuple → psum over the whole device mesh
 
     def local(state: DistributedParticles):
         ps = state.ps
         hist = dlb.histogram_cost(ps.x[:, slab_axis],
                                   jnp.where(ps.valid, 1.0, 0.0),
                                   lo, hi, nbins)
-        hist = RT.psum(hist, axis_name)
+        hist = RT.psum(hist, red_axes)
         new_bounds = dlb.bounds_from_histogram(hist, ndev, lo, hi)
         new_bounds = dlb.enforce_min_width(new_bounds, min_w)
-        ps, ovf = M.map_particles_local(ps, new_bounds, axis_name, b_cap,
+        ps, ovf = M.map_particles_local(ps, new_bounds, row_axis, b_cap,
                                         slab_axis)
+        new_cbounds = state.col_bounds
+        if ndev_c > 1:
+            lo_c = float(spec.box_lo[col_space_axis])
+            hi_c = float(spec.box_hi[col_space_axis])
+            hist_c = dlb.histogram_cost(ps.x[:, col_space_axis],
+                                        jnp.where(ps.valid, 1.0, 0.0),
+                                        lo_c, hi_c, nbins)
+            hist_c = RT.psum(hist_c, red_axes)
+            new_cbounds = dlb.bounds_from_histogram(hist_c, ndev_c, lo_c,
+                                                    hi_c)
+            new_cbounds = dlb.enforce_min_width(new_cbounds, min_w)
+            ps, ovf_c = M.map_particles_local(ps, new_cbounds, col_axis,
+                                              b_cap, col_space_axis)
+            ovf = jnp.maximum(ovf, ovf_c)
+        if two_d_state:
+            ovf = RT.pmax(ovf, red_axes)
         # mesh fields stay put: DLB moves the PARTICLE slab bounds only —
         # the mesh decomposition is the uniform row split of the arrays
         return (DistributedParticles(ps=ps, bounds=new_bounds,
-                                     fields=state.fields), ovf)
+                                     fields=state.fields,
+                                     col_bounds=new_cbounds), ovf)
 
-    state_spec = _state_spec(spec, axis_name)
+    sm_axis = axis_name if ndev_c > 1 else row_axis
+    state_spec = _state_spec(spec, sm_axis, with_col_bounds=two_d_state)
     fn = RT.shard_map(local, mesh, in_specs=(state_spec,),
                       out_specs=(state_spec, P()), check_vma=False)
     return jax.jit(fn)
@@ -562,18 +761,38 @@ def serial_state(ps: ParticleSet, physics, cfg, slab_axis: int = 0,
 
 
 def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
-               axis_name: str = "shards", slab_axis: int = 0,
+               axis_name="shards", slab_axis: int = 0,
                cap_per_dev: Optional[int] = None, cap_factor: float = 3.0,
                bounds: Optional[jax.Array] = None,
+               col_bounds: Optional[jax.Array] = None,
                fields: Optional[Dict[str, jax.Array]] = None
                ) -> DistributedParticles:
     """Host-side 'global map' (paper: distributed read + global map):
     scatter every valid particle of ``ps0`` into its owning device's slot
     block (device d owns slots [d·cap, (d+1)·cap)), add the ``id`` prop,
     and shard the result over ``mesh``. ``fields`` (full mesh arrays,
-    leading axis = slab axis rows) are sharded alongside."""
+    leading axis = slab axis rows) are sharded alongside.
+
+    ``axis_name`` may be a ``(row_axis, col_axis)`` tuple (pencil
+    decomposition, DESIGN.md §13): device (i, j) owns the slab-axis slab i
+    × the ``slab_axis + 1`` column slab j, its slot block is flat index
+    ``i·ncols + j`` (the mesh's row-major device order, matching
+    ``P((row_axis, col_axis))`` sharding of the leading dim), and the state
+    carries ``col_bounds``."""
     spec = physics(cfg)
-    ndev = mesh.shape[axis_name]
+    two_d = isinstance(axis_name, tuple)
+    if two_d:
+        row_axis, col_axis = axis_name
+        ndev_r = int(mesh.shape[row_axis])
+        ndev_c = int(mesh.shape[col_axis])
+        if fields:
+            raise NotImplementedError(
+                "mesh fields on a 2-D device mesh need the pencil GridOps "
+                "(ROADMAP follow-on)")
+    else:
+        ndev_r, ndev_c = int(mesh.shape[axis_name]), 1
+    ndev = ndev_r * ndev_c
+    col_space_axis = slab_axis + 1
     ps0 = with_ids(ps0)
     val0 = np.asarray(ps0.valid)
     xs = np.asarray(ps0.x)[val0]
@@ -582,11 +801,20 @@ def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
     if cap_per_dev is None:
         cap_per_dev = int(np.ceil(n / ndev * cap_factor))
     if bounds is None:
-        bounds = dlb.uniform_bounds(ndev, float(spec.box_lo[slab_axis]),
+        bounds = dlb.uniform_bounds(ndev_r, float(spec.box_lo[slab_axis]),
                                     float(spec.box_hi[slab_axis]))
     owner = np.clip(
         np.searchsorted(np.asarray(bounds), xs[:, slab_axis], "right") - 1,
-        0, ndev - 1)
+        0, ndev_r - 1)
+    if two_d:
+        if col_bounds is None:
+            col_bounds = dlb.uniform_bounds(
+                ndev_c, float(spec.box_lo[col_space_axis]),
+                float(spec.box_hi[col_space_axis]))
+        owner_c = np.clip(
+            np.searchsorted(np.asarray(col_bounds), xs[:, col_space_axis],
+                            "right") - 1, 0, ndev_c - 1)
+        owner = owner * ndev_c + owner_c
     cap = ndev * cap_per_dev
     X = np.full((cap, xs.shape[1]), ParticleSet.FILL, np.float32)
     PR = {k: np.zeros((cap,) + v.shape[1:], v.dtype)
@@ -605,8 +833,11 @@ def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
                      valid=jnp.asarray(V))
     sh = NamedSharding(mesh, P(axis_name))
     ps = jax.device_put(ps, jax.tree.map(lambda _: sh, ps))
-    bounds = jax.device_put(jnp.asarray(bounds, jnp.float32),
-                            NamedSharding(mesh, P()))
+    rep = NamedSharding(mesh, P())
+    bounds = jax.device_put(jnp.asarray(bounds, jnp.float32), rep)
+    if two_d:
+        col_bounds = jax.device_put(jnp.asarray(col_bounds, jnp.float32),
+                                    rep)
     for k, v in (fields or {}).items():
         if v.shape[0] % ndev:
             raise ValueError(
@@ -614,4 +845,5 @@ def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
                 f"by {ndev} shards (GridOps.first_row assumes uniform slabs)")
     sharded_fields = {k: jax.device_put(v, sh)
                       for k, v in (fields or {}).items()}
-    return DistributedParticles(ps=ps, bounds=bounds, fields=sharded_fields)
+    return DistributedParticles(ps=ps, bounds=bounds, fields=sharded_fields,
+                                col_bounds=col_bounds if two_d else None)

@@ -47,7 +47,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.cell_list import CellList, neighborhood
-from repro.core.interactions import Radial, _bmask, check_out_kind
+from repro.core.interactions import (Radial, _bmask, cast_bf16,
+                                     check_out_kind, parse_precision)
 from repro.core.particles import ParticleSet
 
 
@@ -108,7 +109,11 @@ def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float,
     reduce each output over the candidate axis. ``precision="bf16x"``:
     geometry (dx, r2, ok) stays fp32, the body sees bf16 operands (halved
     VPU operand traffic), and the candidate-axis reduction accumulates in
-    fp32 (``jnp.sum(..., dtype=float32)``) with fp32 outputs."""
+    fp32 (``jnp.sum(..., dtype=float32)``) with fp32 outputs.
+    ``"bf16x:<name,...>"`` lowers only the listed outputs — the body runs
+    once per operand precision in use and each output reduces from its
+    selected evaluation."""
+    mode, sel = parse_precision(precision, dict(out_spec))
     it = iter(refs)
     xi = next(it)[...]          # (Cb, cc, dim)
     xj = next(it)[...]          # (Cb, Kcc, dim)
@@ -129,32 +134,33 @@ def _pair_kernel(*refs, body, prop_names, out_spec, dim: int, rc2: float,
         dd = dx(d)
         r2 = r2 + dd * dd
     ok = (mi[:, :, None] & mj[:, None, :] & (r2 < rc2) & (r2 > 1e-12))
-    if precision == "bf16x":
-        from repro.core.interactions import cast_bf16
-        dx_f = dx
-        dx = lambda d: dx_f(d).astype(jnp.bfloat16)
-        vals = body(dx, r2.astype(jnp.bfloat16), ok,
-                    cast_bf16(wi), cast_bf16(wj))
-        for (name, kind), oref in zip(out_spec, out_refs):
-            v = check_out_kind(name, kind, vals[name])
-            if kind == "radial":
-                mag = jnp.where(ok, v, jnp.bfloat16(0))
-                for d in range(dim):
-                    oref[:, :, d] = jnp.sum(mag * dx(d), axis=2,
-                                            dtype=jnp.float32)
-            else:
-                oref[...] = jnp.sum(jnp.where(ok, v, jnp.bfloat16(0)),
-                                    axis=2, dtype=jnp.float32)
-        return
-    vals = body(dx, r2, ok, wi, wj)
+
+    def eval_body(bf16: bool):
+        """(dx_fn, body values) under one operand precision."""
+        if bf16:
+            dxb = lambda d: dx(d).astype(jnp.bfloat16)
+            return dxb, body(dxb, r2.astype(jnp.bfloat16), ok,
+                             cast_bf16(wi), cast_bf16(wj))
+        return dx, body(dx, r2, ok, wi, wj)
+
+    use_bf16 = {name: mode == "bf16x" and (sel is None or name in sel)
+                for name, _ in out_spec}
+    evals = {}
+    for name, _ in out_spec:
+        if use_bf16[name] not in evals:
+            evals[use_bf16[name]] = eval_body(use_bf16[name])
     for (name, kind), oref in zip(out_spec, out_refs):
+        dx_k, vals = evals[use_bf16[name]]
+        zero = jnp.bfloat16(0) if use_bf16[name] else 0.0
         v = check_out_kind(name, kind, vals[name])
         if kind == "radial":
-            mag = jnp.where(ok, v, 0.0)
+            mag = jnp.where(ok, v, zero)
             for d in range(dim):
-                oref[:, :, d] = jnp.sum(mag * dx(d), axis=2)
+                oref[:, :, d] = jnp.sum(mag * dx_k(d), axis=2,
+                                        dtype=jnp.float32)
         else:
-            oref[...] = jnp.sum(jnp.where(ok, v, 0.0), axis=2)
+            oref[...] = jnp.sum(jnp.where(ok, v, zero), axis=2,
+                                dtype=jnp.float32)
 
 
 def cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask, props_i=None,
@@ -188,9 +194,7 @@ def cell_pair_pallas(cell_x, nbr_x, cell_mask, nbr_mask, props_i=None,
     out_shapes = [jax.ShapeDtypeStruct(
         (C, cc, dim) if kind == "radial" else (C, cc), jnp.float32)
         for _, kind in out_spec]
-    if precision not in ("fp32", "bf16x"):
-        raise ValueError(f"unknown precision {precision!r}; "
-                         "want 'fp32' or 'bf16x'")
+    parse_precision(precision, out)   # validate eagerly, shared grammar
     kern = functools.partial(_pair_kernel, body=body, prop_names=names,
                              out_spec=out_spec, dim=dim, rc2=r_cut * r_cut,
                              precision=precision)

@@ -318,6 +318,92 @@ def analyze(text: str) -> Dict[str, object]:
 
 
 # --------------------------------------------------------------------------
+# all-to-all enumeration (pencil-transpose bytes gate)
+# --------------------------------------------------------------------------
+
+_RG_BRACES = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_RG_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(rhs: str) -> Optional[int]:
+    """Devices per replica group of a collective op, from either HLO
+    spelling: explicit ``{{0,1},{2,3}}`` lists (size of the first group —
+    groups are uniform for all-to-all) or the iota form
+    ``[num_groups,group_size]<=[...]``."""
+    m = _RG_BRACES.search(rhs)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _RG_IOTA.search(rhs)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+def all_to_all_report(text: str) -> Dict[str, object]:
+    """Enumerate every ``all-to-all`` in the module, trip-scaled, with the
+    *wire* bytes each one moves per device.
+
+    A tiled all_to_all's result bytes are decomposition-invariant (the
+    local block size), so they cannot discriminate a pencil transpose from
+    a slab transpose. What shrinks is the fraction leaving the device:
+    each participant keeps 1/group and ships ``(group-1)/group`` of its
+    block — the replica-group size is the load-bearing number. Returns
+    per-op entries ``{name, count, group_size, result_bytes, wire_bytes}``
+    (wire = count · result · (g-1)/g), their ``total_wire_bytes``, and
+    ``max_wire_bytes`` — the largest single transpose, the per-device
+    peak a decomposition must pay serially."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    out: List[Dict[str, object]] = []
+
+    def walk(name: str, mult: float, stack: frozenset):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        sub = stack | {name}
+        for op in comp.ops:
+            base = op.opname.replace("-start", "")
+            if base == "all-to-all" and not op.opname.endswith("-done"):
+                rb = float(_nbytes(op.result_shapes))
+                g = _group_size(op.rhs)
+                frac = (g - 1) / g if g else 1.0
+                out.append({"name": op.name, "count": mult,
+                            "group_size": g, "result_bytes": rb,
+                            "wire_bytes": mult * rb * frac})
+            called = _CALLED.findall(op.rhs)
+            names: List[str] = []
+            for c in called:
+                if c.startswith("{"):
+                    names.extend(x.strip().lstrip("%")
+                                 for x in c[1:-1].split(",") if x.strip())
+                else:
+                    names.append(c.lstrip("%"))
+            if not names:
+                continue
+            if op.opname == "while":
+                tm = _TRIP.search(op.rhs)
+                m2 = mult * (float(tm.group(1)) if tm else 1.0)
+            elif op.opname in ("call", "conditional", "async-start",
+                               "custom-call", "fusion"):
+                m2 = mult
+            else:
+                continue
+            for nm in names:
+                walk(nm, m2, sub)
+
+    walk(entry, 1.0, frozenset())
+    return {
+        "entry": entry,
+        "ops": out,
+        "n_all_to_all": sum(int(o["count"]) for o in out),
+        "total_wire_bytes": sum(o["wire_bytes"] for o in out),
+        "max_wire_bytes": max((o["wire_bytes"] / o["count"]
+                               for o in out if o["count"]), default=0.0),
+    }
+
+
+# --------------------------------------------------------------------------
 # Schedule-order overlap analysis (split-phase stepping gate)
 # --------------------------------------------------------------------------
 

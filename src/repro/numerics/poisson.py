@@ -15,6 +15,13 @@ We provide:
                              axis, a local 1-D FFT + spectral division on
                              the transposed layout, and the reverse path.
                              The 1-slab case degenerates to ``fft_poisson``.
+  * ``fft_poisson_pencil_local`` / ``make_fft_poisson_pencil``
+                           — the pencil-decomposed solve for a mesh sharded
+                             over an (r, c) 2-D device mesh (DESIGN.md §13):
+                             local 1-D FFTs plus TWO tiled ``all_to_all``
+                             transposes, one per mesh axis, each moving
+                             O(n/rc) per device. Degenerates to the slab
+                             path on (r, 1) and to ``fft_poisson`` on 1×1.
   * ``multigrid_poisson``  — geometric V-cycle multigrid with red-black
                              Gauss-Seidel-style (damped Jacobi) smoothing;
                              supports the same problem without FFTs and
@@ -142,6 +149,101 @@ def make_fft_poisson_slab(mesh, axis_name: str, lengths: Tuple[float, ...],
 
     mapped = RT.shard_map(local, mesh, in_specs=(P(axis_name),),
                           out_specs=P(axis_name), check_vma=False)
+    return jax.jit(mapped)
+
+
+# --------------------------------------------------------------------------
+# Pencil-decomposed spectral solve (2-D device mesh, two tiled transposes)
+# --------------------------------------------------------------------------
+
+def fft_poisson_pencil_local(rhs: jax.Array, lengths: Tuple[float, ...],
+                             row_axis: str, col_axis: str,
+                             discrete: bool = True) -> jax.Array:
+    """Solve ∆u = rhs on a pencil-sharded 3-D periodic mesh, inside shard_map
+    over an ``(r, c)`` 2-D device mesh (DESIGN.md §13).
+
+    ``rhs`` is the local pencil ``(n0/r, n1/c, n2[, C])`` of a field sharded
+    ``P(row_axis, col_axis)`` over axes 0 and 1. The plan: FFT the locally
+    complete axis 2; ``all_to_all`` over the *column* axis (split axis 2,
+    concat axis 1) so axis 1 becomes complete; FFT axis 1; ``all_to_all``
+    over the *row* axis (split axis 1, concat axis 0) so axis 0 becomes
+    complete; FFT axis 0; spectral division against this pencil's (k1, k2)
+    rows; then invert the path. Each transpose moves a ``(group-1)/group``
+    fraction of the O(n/rc) local pencil over only its own mesh axis —
+    versus the slab path's single transpose over the full device group.
+
+    Requires ``n2 % c == 0`` and ``n1 % r == 0`` (the transpose tilings) on
+    top of the sharding divisibility; a size-1 axis makes its transposes the
+    identity, so the generic code degenerates gracefully.
+    """
+    if len(lengths) != 3:
+        raise ValueError("the pencil decomposition is 3-D")
+    r = RT.axis_size(row_axis)
+    c = RT.axis_size(col_axis)
+    me_r = RT.axis_index(row_axis)
+    me_c = RT.axis_index(col_axis)
+    vec = rhs.ndim == 4
+    n0l, n1l, n2 = rhs.shape[:3]
+    n0, n1 = n0l * r, n1l * c
+    if n2 % c:
+        raise ValueError(f"axis 2 ({n2}) must divide over {c} column shards "
+                         "for the first FFT transpose")
+    if n1 % r:
+        raise ValueError(f"axis 1 ({n1}) must divide over {r} row shards "
+                         "for the second FFT transpose")
+    n2c = n2 // c
+    n1r = n1 // r
+
+    rh = jnp.fft.fft(rhs.astype(jnp.complex64), axis=2)
+    # transpose 1 (columns): complete axis 1, shard axis 2
+    rh = RT.all_to_all(rh, col_axis, split_axis=2, concat_axis=1, tiled=True)
+    rh = jnp.fft.fft(rh, axis=1)                      # (n0l, n1, n2c[, C])
+    # transpose 2 (rows): complete axis 0, shard axis 1
+    rh = RT.all_to_all(rh, row_axis, split_axis=1, concat_axis=0, tiled=True)
+    rh = jnp.fft.fft(rh, axis=0)                      # (n0, n1r, n2c[, C])
+    # separable eigenvalues: slice only MY (k1, k2) rows and broadcast-sum
+    l0, l1, l2 = (jnp.asarray(v, jnp.float32)
+                  for v in _k2_axes((n0, n1, n2), lengths, discrete))
+    l1 = jax.lax.dynamic_slice(l1, (me_r * n1r,), (n1r,))
+    l2 = jax.lax.dynamic_slice(l2, (me_c * n2c,), (n2c,))
+    lam = l0[:, None, None] + l1[None, :, None] + l2[None, None, :]
+    if vec:
+        lam = lam[..., None]
+    uh = jnp.where(lam == 0, 0.0, rh / jnp.where(lam == 0, 1.0, lam))
+    uh = jnp.fft.ifft(uh, axis=0)
+    uh = RT.all_to_all(uh, row_axis, split_axis=0, concat_axis=1, tiled=True)
+    uh = jnp.fft.ifft(uh, axis=1)                     # (n0l, n1, n2c[, C])
+    uh = RT.all_to_all(uh, col_axis, split_axis=1, concat_axis=2, tiled=True)
+    return jnp.real(jnp.fft.ifft(uh, axis=2)).astype(rhs.dtype)
+
+
+def make_fft_poisson_pencil(mesh, axis_names: Tuple[str, str],
+                            lengths: Tuple[float, ...],
+                            discrete: bool = True):
+    """Jitted pencil-decomposed Poisson solve over a ``P(rows, cols)``-sharded
+    rhs on a 2-D device mesh.
+
+    Degenerate meshes reuse the narrower solvers rather than reimplementing
+    them: a 1×1 mesh returns the serial ``fft_poisson``; an ``(r, 1)`` mesh
+    runs ``fft_poisson_slab_local`` over the row axis — bitwise the slab
+    path. Anything else runs the generic two-transpose pencil plan.
+    """
+    row_axis, col_axis = axis_names
+    r = int(mesh.shape[row_axis])
+    c = int(mesh.shape[col_axis])
+    lengths = tuple(float(v) for v in lengths)
+    if r == 1 and c == 1:
+        return jax.jit(lambda rhs: fft_poisson(rhs, lengths, discrete))
+    if c == 1:
+        def local(rhs):
+            return fft_poisson_slab_local(rhs, lengths, row_axis, discrete)
+    else:
+        def local(rhs):
+            return fft_poisson_pencil_local(rhs, lengths, row_axis, col_axis,
+                                            discrete)
+
+    mapped = RT.shard_map(local, mesh, in_specs=(P(row_axis, col_axis),),
+                          out_specs=P(row_axis, col_axis), check_vma=False)
     return jax.jit(mapped)
 
 

@@ -85,16 +85,24 @@ def test_cell_overflow_propagates(mesh8, app):
 
 
 def test_ghost_contract_flag_trips(mesh8):
-    """ROADMAP open item: r_ghost <= min slab width is now enforced
-    in-graph. σ=0.085 gives r_cut=0.255 > 1/8 slab width — the contract
-    flag must trip (a ±1-neighbor exchange cannot cover r_cut)."""
+    """ghost_contract now reports the ghost-hop EXCESS (DESIGN.md §13):
+    σ=0.085 gives r_cut=0.255 over 1/8-wide slabs — a thin-slab config the
+    auto hop count (ceil(0.255·8) = 3) now *satisfies*, so the flag stays
+    0; forcing n_hops=1 must report the 2 missing hops."""
     cfg = DC.md_config(n_per_side=8, sigma=0.085)
     state = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=256)
-    step = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS)
+    step = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS,
+                             ghost_cap=2048)
     _, flags, _ = step(state, {})
-    assert int(flags.ghost_contract) == 1
+    assert int(flags.ghost_contract) == 0
+    assert int(flags.any()) == 0
+    # a forced single-hop exchange cannot cover r_cut: excess = 3 - 1
+    step1 = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS,
+                              ghost_cap=2048, n_hops=1)
+    _, flags, _ = step1(state, {})
+    assert int(flags.ghost_contract) == 2
     assert int(flags.any()) > 0
-    # and the honest config does NOT trip it
+    # and the honest config needs (and gets) exactly one hop
     cfg_ok = DC.md_config(n_per_side=8, sigma=0.04)
     state = DC.md_distributed_start(mesh8, cfg_ok, NDEV, cap_per_dev=256)
     step = SIM.make_sim_step(md.physics, cfg_ok, mesh8, axis_name=DC.AXIS)

@@ -117,3 +117,48 @@ def test_unknown_precision_rejected():
     with pytest.raises(ValueError, match="precision"):
         I.as_jnp_kernel(lambda dx, r2, ok, wi, wj: {"e": r2},
                         {"e": "scalar"}, 0.5, precision="fp16")
+
+
+# --------------------------------------------------------------------------
+# Per-output selection: "bf16x:drho" — SPH's safe half of the mixed-
+# precision table (density summation bf16, Tait-EOS force pass fp32)
+# --------------------------------------------------------------------------
+
+def _sph_rates_case():
+    """(cfg, fn): developed dam break; fn(cfg) -> (a, drho)."""
+    import jax
+    from repro.apps import sph
+    cfg = sph.SPHConfig(dp=0.04, box=(1.0, 0.5), fluid=(0.25, 0.25))
+    ps = sph.init_dam_break(cfg)
+    for i in range(5):
+        ps, _, _ = sph.sph_step(ps, cfg, euler=(i % cfg.verlet_reset == 0))
+    fn = jax.jit(lambda c: sph.compute_rates(ps, c)[:2], static_argnums=0)
+    return cfg, fn
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_sph_density_only_bf16x(backend):
+    """precision="bf16x:drho": the density summation engages bf16 within
+    the safe band while the precision-sensitive EOS force pass stays
+    BITWISE fp32 — the per-output escape from the SPH row of the safety
+    table, both backends."""
+    cfg, fn = _sph_rates_case()
+    base = cfg if backend == "jnp" else dataclasses.replace(
+        cfg, backend="pallas", interpret=True)
+    a_ref, drho_ref = fn(base)
+    a_mix, drho_mix = fn(dataclasses.replace(base, precision="bf16x:drho"))
+    assert np.array_equal(np.asarray(a_ref), np.asarray(a_mix)), \
+        (backend, "force pass must stay bitwise fp32 under bf16x:drho")
+    err = BC.rel(drho_mix, drho_ref)
+    assert ENGAGED <= err <= 5e-2, (backend, err)
+
+
+def test_bogus_precision_output_rejected():
+    """Selecting an undeclared pair output must fail loudly on both
+    backends (shared parse_precision grammar)."""
+    from repro.core import interactions as I
+    body = lambda dx, r2, ok, wi, wj: {"e": r2}
+    with pytest.raises(ValueError, match="precision"):
+        I.as_jnp_kernel(body, {"e": "scalar"}, 0.5, precision="bf16x:nope")
+    with pytest.raises(ValueError, match="precision"):
+        I.as_jnp_kernel(body, {"e": "scalar"}, 0.5, precision="fp32:e")

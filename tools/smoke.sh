@@ -34,6 +34,17 @@ REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
     "tests/test_hlo_analysis.py::test_overlap_report_discriminates_schedules" \
     "tests/test_precision.py::test_bf16x_within_documented_band[jnp-md]" \
     > /dev/null
+# pencil-decomposition oracles (PR 9): 2×4 MD/VIC serial equivalence, the
+# (ndev,1) bitwise slab degeneracies, the thin-slab multi-hop exchange,
+# and the density-only per-output bf16x selection
+REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
+    tests/distributed/test_dist_pencil.py::test_md_pencil_matches_serial \
+    tests/distributed/test_dist_pencil.py::test_md_pencil_slab_degenerate_bitwise \
+    tests/distributed/test_dist_pencil.py::test_md_thin_slab_multi_hop_matches_serial \
+    tests/distributed/test_dist_pencil.py::test_vortex_pencil_matches_serial \
+    tests/distributed/test_dist_pencil.py::test_pencil_poisson_slab_degenerate_bitwise \
+    "tests/test_precision.py::test_sph_density_only_bf16x[jnp]" \
+    > /dev/null
 
 echo "== examples/vortex_ring.py (1 step) =="
 python examples/vortex_ring.py --steps 1
@@ -52,5 +63,8 @@ python benchmarks/bench_fleet.py
 
 echo "== split-phase overlap gates (HLO order + equivalence + wall time) =="
 python benchmarks/bench_overlap.py
+
+echo "== pencil transpose gates (HLO wire bytes + equivalence + wall) =="
+python benchmarks/bench_pencil.py
 
 echo "smoke OK"

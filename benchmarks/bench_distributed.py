@@ -14,7 +14,6 @@ XLA_FLAGS forced, and relays its CSV rows. Results (with the
 forced-host-device caveat made machine-readable) are also written to
 ``artifacts/bench_distributed.json``.
 """
-import json
 import os
 import sys
 
@@ -73,32 +72,16 @@ CAVEAT = ("8 forced host devices share one CPU: rows track regressions "
           "hardware (ROADMAP)")
 
 
-def _write_json(rows):
-    """Persist the rows WITH the forced-host-device caveat attached, so a
-    consumer of the numbers cannot miss it."""
-    out = _ROOT / "artifacts" / "bench_distributed.json"
-    payload = {
-        "caveat": CAVEAT,
-        "device_config": "forced-host-devices (XLA "
-                         "--xla_force_host_platform_device_count=8)",
-        "rows": [dict(zip(("name", "us_per_call", "derived"),
-                          ln.split(",", 2))) for ln in rows],
-    }
-    try:
-        out.parent.mkdir(exist_ok=True)
-        out.write_text(json.dumps(payload, indent=2) + "\n")
-    except OSError as e:          # benchmark output must never kill the run
-        print(f"bench_distributed: could not write {out}: {e}",
-              file=sys.stderr)
-
-
 def run():
-    """Parent entry (benchmarks/run.py): relay the child's CSV rows."""
-    from benchmarks.xla_env import run_forced_host_child
-    rows = run_forced_host_child(__file__, "dist_md_weak")
-    rows = [f"{ln};caveat=forced-host-devices-shared-cpu" for ln in rows]
+    """Parent entry (benchmarks/run.py): relay the child's CSV rows, with
+    the forced-host-device caveat attached so a consumer of the numbers
+    cannot miss it."""
+    from benchmarks.xla_env import (run_forced_host_child, tag_rows,
+                                    write_artifact)
+    rows = tag_rows(run_forced_host_child(__file__, "dist_md_weak"))
     if rows:
-        _write_json(rows)
+        write_artifact(_ROOT / "artifacts" / "bench_distributed.json",
+                       rows, CAVEAT)
     return rows
 
 

@@ -22,7 +22,6 @@ Same ``--child`` re-exec pattern as bench_distributed (device count locks
 at backend init); rows mirror into ``artifacts/bench_overlap.json`` under
 a repro-fleet-metrics/v1-style schema with the forced-host-device caveat.
 """
-import json
 import os
 import pathlib
 import sys
@@ -137,30 +136,14 @@ CAVEAT = ("8 forced host devices share one CPU: the ratio gate tracks "
           "not measured; re-baseline on real multi-chip hardware")
 
 
-def _write_json(rows):
-    out = _ROOT / "artifacts" / "bench_overlap.json"
-    payload = {
-        "schema": "repro-fleet-metrics/v1",
-        "caveat": CAVEAT,
-        "device_config": "forced-host-devices (XLA "
-                         "--xla_force_host_platform_device_count=8)",
-        "rows": [dict(zip(("name", "us_per_call", "derived"),
-                          ln.split(",", 2))) for ln in rows],
-    }
-    try:
-        out.parent.mkdir(exist_ok=True)
-        out.write_text(json.dumps(payload, indent=2) + "\n")
-    except OSError as e:          # benchmark output must never kill the run
-        print(f"bench_overlap: could not write {out}: {e}", file=sys.stderr)
-
-
 def run():
     """Parent entry (benchmarks/run.py): relay the child's CSV rows."""
-    from benchmarks.xla_env import run_forced_host_child
-    rows = run_forced_host_child(__file__, "overlap_")
-    rows = [f"{ln};caveat=forced-host-devices-shared-cpu" for ln in rows]
+    from benchmarks.xla_env import (run_forced_host_child, tag_rows,
+                                    write_artifact)
+    rows = tag_rows(run_forced_host_child(__file__, "overlap_"))
     if rows:
-        _write_json(rows)
+        write_artifact(_ROOT / "artifacts" / "bench_overlap.json",
+                       rows, CAVEAT)
     return rows
 
 

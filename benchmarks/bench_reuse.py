@@ -1,0 +1,226 @@
+"""Skin-amortized ghost-reuse gates — two-speed cadence vs every-step engine.
+
+The ISSUE-10 tentpole claims ``make_sim_step(..., reuse="skin")`` makes the
+distributed hot loop cheaper by not paying for what didn't move: update
+steps skip ``map()`` and re-binning and refresh only positions + declared
+``update_props`` of the cached ghost slots through the fixed-payload
+``mappings.ghost_update_local``; the pmax'd Verlet tripwire
+(``StepFlags.stale``) drops back to the full map→ghost_get→rebuild path
+before any pair inside ``r_cut`` could be missed. Three gates, all
+hard-asserted in the child, on both the MD and SPH pair workloads:
+
+  * Wire bytes (HLO): ``launch/hlo_analysis.collective_permute_report`` on
+    the compiled reuse step. The report's conditional split prices the
+    always-run update exchange (unconditional collective-permutes) against
+    a rebuild step (unconditional + the full branch's conditional ones):
+    update/rebuild <= WIRE_RATIO_GATE. Counted from compiled HLO, not
+    inferred — the update payload drops ``valid``/``src_slot`` and every
+    undeclared property, so MD (positions only) sits near 12/29 bytes per
+    slot-hop and SPH (x+v+rho) near 20/49.
+  * Equivalence: N_EQUIV reuse steps == N_EQUIV every-step steps to 1e-5
+    with all overflow flags clean, matched by particle id across the
+    different slot layouts; the realized rebuild cadence is logged from
+    ``StepFlags.stale`` (tests/distributed/test_dist_reuse.py carries the
+    skin/2 no-missed-pairs oracle).
+  * Wall time: the amortized loop (rebuilds only when the tripwire fires)
+    <= WALL_RATIO_GATE x the every-step-rebuild engine over N_STEPS, per
+    app and combined. The coarser (r_cut+skin) grid costs more pair work
+    per pass; the win is every skipped map/ghost_get/re-bin on the update
+    steps — real work even on shared-CPU devices (packing, all-to-all,
+    sort/scatter binning), so the ratio is meaningful here, unlike pure
+    network wins.
+
+Same ``--child`` re-exec pattern as bench_overlap (device count locks at
+backend init); rows mirror into ``artifacts/bench_reuse.json`` via the
+shared ``xla_env.write_artifact`` with the forced-host-device caveat.
+"""
+import os
+import pathlib
+import sys
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT / "src"), str(_ROOT)):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from benchmarks.xla_env import ensure_forced_host_devices
+
+NDEV = 8
+# MD: a structure-dominated workload (1000 particles, single-hop even at
+# the widened r_cut+skin band: 0.075+0.0375 < the 0.125 slab). Each grid
+# gets its own tuned cell_cap — full bins at r_cut (13 rows, <=8/cell from
+# the 0.1 lattice), reuse at r_cut+skin (8 rows, <=8/cell) — cell_cap
+# never changes the trajectory, only padding. Reuse deliberately stays out
+# of the huge-N pair-dominated regime (bench_overlap's 13824-particle
+# grid): there the O(cell_cap^2) pass dwarfs the map/ghost/bin work an
+# update step skips and amortization can't win — DESIGN.md §14 records
+# that trade-off.
+MD_N_PER_SIDE = 10
+MD_SIGMA = 0.025
+MD_CELL_CAP_FULL = 12
+MD_CELL_CAP_REUSE = 16
+N_STEPS = 40                  # wall-gate loop length (amortization window)
+N_EQUIV = 12
+WALL_RATIO_GATE = 0.85
+WIRE_RATIO_GATE = 0.5
+EQUIV_TOL = 1e-5
+
+
+def _child_main():
+    ensure_forced_host_devices(os.environ)
+
+    import dataclasses
+    import time
+
+    import jax
+    import numpy as np
+    from benchmarks import dist_common as DC
+    from repro.apps import md, sph
+    from repro.core import simulation as SIM
+    from repro.launch import hlo_analysis as HA
+
+    mesh = DC.make_submesh(NDEV)
+
+    md_cfg = dataclasses.replace(
+        DC.md_config(n_per_side=MD_N_PER_SIDE, sigma=MD_SIGMA),
+        cell_cap=MD_CELL_CAP_FULL)
+    md_cfg_reuse = dataclasses.replace(md_cfg, cell_cap=MD_CELL_CAP_REUSE)
+    md_cap = int(np.ceil(md_cfg.n_particles / NDEV * 3))
+    sph_cfg = DC.sph_config()
+
+    import jax.numpy as jnp
+
+    apps = {}   # name -> (state0, step_full, step_reuse, rstate0, extras)
+    md_state0 = DC.md_distributed_start(mesh, md_cfg, NDEV,
+                                        cap_per_dev=md_cap)
+    apps["md"] = (
+        md_state0,
+        SIM.make_sim_step(md.physics, md_cfg, mesh, axis_name=DC.AXIS),
+        SIM.make_sim_step(md.physics, md_cfg_reuse, mesh,
+                          axis_name=DC.AXIS, reuse="skin"),
+        SIM.reuse_state(md_state0, md.physics, md_cfg_reuse, mesh,
+                        axis_name=DC.AXIS),
+        lambda i: {},
+    )
+    sph_state0, _ = DC.sph_distributed_start(mesh, sph_cfg, NDEV)
+    apps["sph"] = (
+        sph_state0,
+        SIM.make_sim_step(sph.physics, sph_cfg, mesh, axis_name=DC.AXIS),
+        SIM.make_sim_step(sph.physics, sph_cfg, mesh, axis_name=DC.AXIS,
+                          reuse="skin"),
+        SIM.reuse_state(sph_state0, sph.physics, sph_cfg, mesh,
+                        axis_name=DC.AXIS),
+        lambda i: {"euler": jnp.asarray(i % sph_cfg.verlet_reset == 0)},
+    )
+
+    def flat_by_id(ps):
+        val = np.asarray(ps.valid)
+        ids = np.asarray(ps.props["id"])[val]
+        x = np.asarray(ps.x)[val]
+        return x[np.argsort(ids)]
+
+    # --- gate 1: HLO ppermute wire bytes (update vs rebuild step) -------
+    for name, (state0, step_full, step_reuse, rstate0, ex) in apps.items():
+        text = step_reuse.lower(rstate0, ex(1)).compile().as_text()
+        rep = HA.collective_permute_report(text)
+        upd = rep["unconditional_wire_bytes"]
+        rebuild = rep["total_wire_bytes"]
+        assert rep["conditional_wire_bytes"] > 0, (
+            f"{name}: no conditional collective-permutes — the rebuild "
+            "branch lost its ghost_get exchange")
+        ratio = upd / rebuild
+        assert ratio <= WIRE_RATIO_GATE, (
+            f"{name}: update step ships {ratio:.3f}x the rebuild step's "
+            f"ppermute wire bytes (gate {WIRE_RATIO_GATE})")
+        text_full = step_full.lower(state0, ex(1)).compile().as_text()
+        vs_every = upd / max(
+            HA.collective_permute_report(text_full)["total_wire_bytes"], 1.0)
+        print(f"reuse_hlo_wire_{name},0.0,"
+              f"update_vs_rebuild={ratio:.3f};gate={WIRE_RATIO_GATE};"
+              f"update_kb={upd / 1e3:.1f};rebuild_kb={rebuild / 1e3:.1f};"
+              f"update_vs_everystep={vs_every:.3f};pass=1", flush=True)
+
+    # --- gate 2: trajectory equivalence + flags clean + cadence ---------
+    for name, (state0, step_full, step_reuse, rstate0, ex) in apps.items():
+        st = state0
+        for i in range(N_EQUIV):
+            st, flags, _ = step_full(st, ex(i))
+            assert int(flags.any()) == 0, \
+                f"{name} every-step: {jax.tree.map(int, flags)}"
+        rs = rstate0
+        rebuilds = 0
+        for i in range(N_EQUIV):
+            rs, flags, _ = step_reuse(rs, ex(i))
+            assert int(flags.any()) == 0, \
+                f"{name} reuse: {jax.tree.map(int, flags)}"
+            rebuilds += int(flags.stale)
+        err = np.abs(flat_by_id(rs.inner.ps)
+                     - flat_by_id(st.ps)).max()
+        assert err <= EQUIV_TOL, f"{name} reuse vs every-step drift {err}"
+        assert rebuilds < N_EQUIV, (
+            f"{name}: tripwire fired every step ({rebuilds}/{N_EQUIV}) — "
+            "nothing amortized; skin too small for this workload")
+        print(f"reuse_equiv_{name},0.0,max_dx={err:.2e};"
+              f"rebuilds={rebuilds}/{N_EQUIV};pass=1", flush=True)
+
+    # --- gate 3: amortized wall time ------------------------------------
+    us = {}
+    for name, (state0, step_full, step_reuse, rstate0, ex) in apps.items():
+        st, _, _ = step_full(state0, ex(0))       # warmup (compiled above)
+        jax.block_until_ready(st.ps.x)
+        t0 = time.perf_counter()
+        st = state0
+        for i in range(N_STEPS):
+            st, _, _ = step_full(st, ex(i))
+        jax.block_until_ready(st.ps.x)
+        t_full = (time.perf_counter() - t0) / N_STEPS * 1e6
+
+        rs, _, _ = step_reuse(rstate0, ex(0))     # warmup + cache warm
+        jax.block_until_ready(rs.inner.ps.x)
+        t0 = time.perf_counter()
+        rs = rstate0
+        for i in range(N_STEPS):
+            rs, _, _ = step_reuse(rs, ex(i))
+        jax.block_until_ready(rs.inner.ps.x)
+        t_reuse = (time.perf_counter() - t0) / N_STEPS * 1e6
+        us[name] = (t_full, t_reuse)
+        print(f"reuse_step_{name},{t_reuse:.1f},"
+              f"everystep_us={t_full:.1f};steps={N_STEPS}", flush=True)
+
+    tot_full = sum(f for f, _ in us.values())
+    tot_reuse = sum(r for _, r in us.values())
+    ratio = tot_reuse / tot_full
+    per_app = ";".join(f"{n}_ratio={r / f:.3f}" for n, (f, r) in us.items())
+    assert ratio <= WALL_RATIO_GATE, (
+        f"amortized loop is {ratio:.3f}x the every-step engine "
+        f"(gate {WALL_RATIO_GATE}; {per_app})")
+    print(f"reuse_wall_ratio,{tot_reuse:.1f},"
+          f"ratio_vs_everystep={ratio:.3f};gate={WALL_RATIO_GATE};"
+          f"{per_app};pass=1", flush=True)
+
+
+CAVEAT = ("8 forced host devices share one CPU: collectives are memcpys, "
+          "so the wire-byte reduction is structural (HLO-counted), not "
+          "measured, and the wall gate credits only the *work* an update "
+          "step skips (packing, all-to-all, re-binning) — the network-"
+          "latency win ghost_update buys on real multi-chip hardware is "
+          "invisible here; re-baseline there")
+
+
+def run():
+    """Parent entry (benchmarks/run.py): relay the child's CSV rows."""
+    from benchmarks.xla_env import (run_forced_host_child, tag_rows,
+                                    write_artifact)
+    rows = tag_rows(run_forced_host_child(__file__, "reuse_"))
+    if rows:
+        write_artifact(_ROOT / "artifacts" / "bench_reuse.json",
+                       rows, CAVEAT)
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child_main()
+    else:
+        for line in run():
+            print(line)

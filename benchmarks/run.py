@@ -41,6 +41,13 @@ Prints ``name,us_per_call,derived`` CSV.
                     launch/hlo_analysis.all_to_all_report; total bytes
                     honestly higher, logged) + equivalence + wall gates;
                     rows mirror into artifacts/bench_pencil.json
+  bench_reuse    — skin-amortized ghost-reuse gates (MD + SPH, 8 forced
+                    host devices): update steps ship <= 0.5x a rebuild
+                    step's ppermute wire bytes (HLO conditional split via
+                    launch/hlo_analysis.collective_permute_report),
+                    trajectory equivalence <= 1e-5 with clean flags, and
+                    the amortized loop <= 0.85x the every-step engine;
+                    rows mirror into artifacts/bench_reuse.json
 
 Usage: python benchmarks/run.py [--all] [--only NAME[,NAME...]]
   --all  (default) run every module; a module that raises is reported as
@@ -59,7 +66,7 @@ MODULES = (
     "bench_membw", "bench_md", "bench_sph", "bench_stencil", "bench_vortex",
     "bench_interp", "bench_dem", "bench_cmaes", "backend_compare",
     "bench_distributed", "bench_sim_engine", "bench_fleet", "bench_overlap",
-    "bench_pencil", "bench_roofline",
+    "bench_pencil", "bench_reuse", "bench_roofline",
 )
 
 

@@ -31,6 +31,41 @@ def ensure_forced_host_devices(env) -> None:
         env["XLA_FLAGS"] = (flags + " " + FORCE_FLAG).strip()
 
 
+CAVEAT_TAG = "forced-host-devices-shared-cpu"
+
+
+def tag_rows(rows: list) -> list:
+    """Stamp the shared honesty marker onto relayed benchmark CSV rows:
+    every row produced on forced host devices carries the same
+    ``caveat=forced-host-devices-shared-cpu`` suffix, so downstream
+    consumers can't mistake a shared-CPU memcpy 'network' for hardware."""
+    return [f"{ln};caveat={CAVEAT_TAG}" for ln in rows]
+
+
+def write_artifact(path, rows: list, caveat: str) -> None:
+    """Mirror benchmark CSV rows into a repro-fleet-metrics/v1 JSON
+    artifact stamped with both the bench-specific ``caveat`` prose and the
+    shared ``CAVEAT_TAG``. One definition — the schema and the caveat
+    stamping cannot drift between bench_overlap / bench_pencil /
+    bench_reuse. ``path`` is a pathlib.Path; write failures are reported,
+    never raised (benchmark output must never kill the run)."""
+    import json
+    import sys
+    payload = {
+        "schema": "repro-fleet-metrics/v1",
+        "caveat": caveat,
+        "caveat_tag": CAVEAT_TAG,
+        "device_config": f"forced-host-devices (XLA {FORCE_FLAG})",
+        "rows": [dict(zip(("name", "us_per_call", "derived"),
+                          ln.split(",", 2))) for ln in rows],
+    }
+    try:
+        path.parent.mkdir(exist_ok=True)
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+    except OSError as e:
+        print(f"{path.name}: could not write: {e}", file=sys.stderr)
+
+
 def run_forced_host_child(file: str, row_prefix: str, *,
                           timeout: int = 1800) -> list:
     """The shared parent half of the ``--child`` re-exec pattern: device

@@ -249,15 +249,20 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
     the tangential-history pass (id-matched springs), adds walls and
     rotated gravity, and advances the leapfrog.
 
-    Skin-amortized rebuild (serial path): when the caller threads a
-    contact-list cache through ``extras`` (:func:`make_cached_stepper`),
-    the full-list rebuild is skipped while no particle moved more than
-    skin/2 since the cached build — the cached list (built with the skin
-    margin ``r_cut = 2R + skin``) still covers every touching pair, and
-    the id-keyed tangential re-match is position-independent, so forces
-    are identical up to contact ordering. Distributed steps always
-    rebuild: ``map()``/``ghost_get`` reshuffle combo slots every step, so
-    cached slot indices would be stale by construction."""
+    Skin-amortized rebuild: when the caller threads a contact-list cache
+    through ``extras`` (:func:`make_cached_stepper` serially, or the reuse
+    engine's ``cache_keys`` protocol), the full-list rebuild is skipped
+    while no particle moved more than skin/2 since the cached build — the
+    cached list (built with the skin margin ``r_cut = 2R + skin``) still
+    covers every touching pair, and the id-keyed tangential re-match is
+    position-independent, so forces are identical up to contact ordering.
+    Distributed, cached *combo slot* indices are only meaningful while the
+    slot permutation is frozen, which is exactly what the reuse engine's
+    update steps guarantee: the cache carries under
+    ``make_sim_step(..., reuse="skin")`` (the ``"_reuse_slots_stable"``
+    extra), and any full engine step — map() + ghost_get reshuffle —
+    forces a contact rebuild. Distributed steps of the every-step engine
+    still always rebuild."""
     lo = (0.0, 0.0, 0.0)
     hi = tuple(float(b) for b in cfg.box)
 
@@ -266,7 +271,9 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
         ps, combo, cl = ctx.ps, ctx.combo, ctx.cl
         n = ps.capacity
 
-        if "ct_nbr" not in ctx.extras or ctx.red.distributed:
+        slots_stable = ctx.extras.get("_reuse_slots_stable")
+        if "ct_nbr" not in ctx.extras or (ctx.red.distributed
+                                          and slots_stable is None):
             vl = CL.build_verlet(combo, cl, cfg.r_cut, cfg.k_full,
                                  half=False)
             return vl.nbr[:n], vl.overflow, {}
@@ -282,6 +289,14 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
 
         stale = (~ctx.extras["ct_ok"]) | CL.moved_beyond(
             ps.x, ctx.extras["ct_xb"], ps.valid, cfg.skin)
+        if slots_stable is not None:
+            # reuse-engine protocol: a full engine step (map + ghost_get)
+            # reshuffled the combo slot permutation, so slot-indexed
+            # contacts are stale regardless of drift; the global max keeps
+            # the decision — and the replicated ct_ok — device-agreed
+            # (each device's tripwire only sees its locals)
+            stale = ctx.red.max((stale | ~slots_stable)
+                                .astype(jnp.int32)) > 0
         nbr, n_nbr, x_build = jax.lax.cond(stale, build, reuse, None)
         overflow = jnp.maximum(jnp.max(n_nbr) - cfg.k_full, 0)
         cache = {"ct_nbr": nbr, "ct_nn": n_nbr, "ct_xb": x_build,
@@ -321,7 +336,13 @@ def physics(cfg: DEMConfig) -> SIM.PhysicsSpec:
         advance=None, finish=finish,
         backend=cfg.backend, interpret=cfg.interpret,
         precision=cfg.precision,
-        bucket_cap=512, ghost_cap=1024)
+        bucket_cap=512, ghost_cap=1024,
+        # reuse-engine declarations: update steps must refresh ghost
+        # angular velocity too (the tangential pass reads combo "w"), and
+        # the contact cache rides device-resident across steps
+        update_props=("v", "w"),
+        cache_keys=CACHE_KEYS, cache_scalars=("ct_ok",),
+        cache_example=lambda ps: empty_contact_cache(ps, cfg))
 
 
 def dem_step(ps: P.ParticleSet, cfg: DEMConfig):
@@ -339,8 +360,11 @@ def make_cached_stepper(cfg: DEMConfig):
     full combo contact list is carried across engine steps and rebuilt
     (one in-graph ``lax.cond``) only when some particle moved more than
     skin/2 since the cached build — the classic Verlet amortization the
-    per-step rebuild gave up (ROADMAP). Serial only: distributed steps
-    migrate/re-ghost every step, which invalidates cached combo slots.
+    per-step rebuild gave up (ROADMAP). Serial only: distributed steps of
+    *this* stepper migrate/re-ghost every step, which invalidates cached
+    combo slots; the distributed carry lives in the reuse engine
+    (``SIM.make_sim_step(..., reuse="skin")``), whose update steps freeze
+    the slot permutation.
 
     Returns ``step(ps, cache=None) -> (ps, flags, cache)``; thread the
     returned cache into the next call (``None`` starts cold).

@@ -169,8 +169,12 @@ def energies(ps: P.ParticleSet, cfg: MDConfig):
 
 
 def run(cfg: MDConfig, n_steps: int, thermal_v: float = 0.0,
-        seed: int = 0, log_every: int = 0):
-    """Single-process driver (the paper's Listing 4.1 main loop)."""
+        seed: int = 0, log_every: int = 0, reuse=None, skin=None):
+    """Single-process driver (the paper's Listing 4.1 main loop).
+
+    ``reuse``/``skin`` select the skin-amortized engine (DESIGN.md §14):
+    the cell binning is cached across steps and rebuilt only when the
+    Verlet tripwire fires — same trajectory, amortized rebuild cost."""
     ps = init_particles(cfg)
     if thermal_v > 0:
         key = jax.random.PRNGKey(seed)
@@ -183,6 +187,17 @@ def run(cfg: MDConfig, n_steps: int, thermal_v: float = 0.0,
         ps = ps.with_prop("v", jnp.where(vm, v - mean, 0.0))
     ps, _ = compute_forces(ps, cfg)
     log = []
+    if reuse is not None:
+        step = SIM.make_sim_step(physics, cfg, reuse=reuse, skin=skin)
+        rstate = SIM.reuse_state(SIM.serial_state(ps, physics, cfg),
+                                 physics, cfg, skin=skin)
+        for i in range(n_steps):
+            rstate, flags, _ = step(rstate, {})
+            assert int(flags.any()) == 0, f"overflow at step {i}"
+            if log_every and (i % log_every == 0 or i == n_steps - 1):
+                ek, ep = energies(rstate.inner.ps, cfg)
+                log.append((i, float(ek), float(ep)))
+        return rstate.inner.ps, log
     for i in range(n_steps):
         ps, overflow = md_step(ps, cfg)
         if log_every and (i % log_every == 0 or i == n_steps - 1):

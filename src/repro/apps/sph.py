@@ -310,7 +310,8 @@ def run(cfg: SPHConfig, n_steps: int):
 def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
                     cap_factor: float = 3.0, axis_name: str = "shards",
                     use_sar: bool = True, imb_threshold: float = 0.3,
-                    min_rebalance_gap: int = 10, _make_step=None):
+                    min_rebalance_gap: int = 10, _make_step=None,
+                    reuse=None, skin=None):
     """Driver: returns (ps, t, n_rebalances, imbalance trace).
 
     Rebalance trigger = SAR (degrading balance) OR imbalance threshold
@@ -325,19 +326,31 @@ def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
     re-provision contract the vortex driver applies to ``mesh_halo``.
     ``_make_step`` is the step factory ``make_step(interior_rows) ->
     step`` (injectable for testing the control loop without a real DLB
-    skew)."""
+    skew).
+
+    ``reuse``/``skin`` select the skin-amortized two-speed engine
+    (DESIGN.md §14): the state rides as ``SIM.ReuseState`` and a rebalance
+    re-wraps it cold — a moved slab boundary invalidates the cached ghost
+    slot permutation, so the next step takes the full path by
+    construction."""
     import time as _time
     ps0 = init_dam_break(cfg, capacity_factor=1.05)
     state = SIM.distribute(ps0, physics, cfg, mesh, axis_name=axis_name,
                            cap_factor=cap_factor)
     spec = physics(cfg)
-    n_rows = int(SIM._grid_kw(spec, (0,))["grid_shape"][0])
+    use_reuse = reuse is not None
+    skin_v = SIM._resolve_skin(spec, skin) if use_reuse else 0.0
+    n_rows = int(SIM._grid_kw(spec, (0,), skin=skin_v)["grid_shape"][0])
     w_int = min(n_rows, -(-n_rows // ndev) + 4)   # the engine's default
     make_step = _make_step or (lambda w: SIM.make_sim_step(
-        physics, cfg, mesh, axis_name=axis_name, interior_rows=w))
+        physics, cfg, mesh, axis_name=axis_name, interior_rows=w,
+        reuse=reuse, skin=skin))
     step = make_step(w_int)
     rebalance = SIM.make_rebalance(physics, cfg, mesh, axis_name=axis_name)
     sar = dlb.SARController(rebalance_cost=0.02)
+    if use_reuse:
+        state = SIM.reuse_state(state, physics, cfg, mesh,
+                                axis_name=axis_name, skin=skin)
     t = 0.0
     n_reb = 0
     last_reb = -10**9
@@ -367,9 +380,15 @@ def run_distributed(cfg: SPHConfig, n_steps: int, mesh, ndev: int,
         fire_thr = (imb > imb_threshold
                     and i - last_reb >= min_rebalance_gap)
         if fire_sar or fire_thr:
-            state, ovf = rebalance(state)
+            inner = state.inner if use_reuse else state
+            inner, ovf = rebalance(inner)
             assert int(ovf) == 0
+            # re-wrap cold: new bounds invalidate the cached structure
+            state = (SIM.reuse_state(inner, physics, cfg, mesh,
+                                     axis_name=axis_name, skin=skin)
+                     if use_reuse else inner)
             n_reb += 1
             last_reb = i
             sar.reset()
-    return state.ps, t, n_reb, imb_trace
+    ps_out = state.inner.ps if use_reuse else state.ps
+    return ps_out, t, n_reb, imb_trace

@@ -28,11 +28,16 @@ import numpy as np
 from .particles import ParticleSet
 
 
-def grid_shape_for(box_lo, box_hi, r_cut: float) -> Tuple[int, ...]:
-    """Static cell-grid shape: cells no smaller than r_cut per axis."""
+def grid_shape_for(box_lo, box_hi, r_cut: float,
+                   skin: float = 0.0) -> Tuple[int, ...]:
+    """Static cell-grid shape: cells no smaller than ``r_cut + skin`` per
+    axis. A nonzero ``skin`` builds the Verlet-margined grid of the reuse
+    engine (DESIGN.md §14): candidate sets drawn from the 3^dim-hood of a
+    binning built at anchor positions still cover every pair within
+    ``r_cut`` while no particle has moved more than ``skin/2`` since."""
     lo = np.asarray(box_lo, np.float64)
     hi = np.asarray(box_hi, np.float64)
-    n = np.maximum(np.floor((hi - lo) / r_cut).astype(int), 1)
+    n = np.maximum(np.floor((hi - lo) / (r_cut + skin)).astype(int), 1)
     return tuple(int(v) for v in n)
 
 

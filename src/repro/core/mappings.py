@@ -293,6 +293,104 @@ def _sh(v, dtype):
     return jnp.asarray(v, dtype)
 
 
+def _pack_payload(tree, sel: jax.Array, ghost_cap: int):
+    """Pack selected rows of a payload pytree into dense (ghost_cap, ...)
+    buffers using the same deterministic cumsum-rank slot assignment as
+    :func:`_pack_side` — same ``sel`` ⇒ byte-identical slots, no src/valid
+    metadata shipped."""
+    rank = jnp.cumsum(sel) - 1
+    slot = jnp.where(sel & (rank < ghost_cap), rank, ghost_cap)
+
+    def scat(a):
+        buf = jnp.zeros((ghost_cap,) + a.shape[1:], a.dtype)
+        return buf.at[slot].set(a, mode="drop")
+
+    return jax.tree.map(scat, tree)
+
+
+def ghost_update_local(ps: ParticleSet, x_anchor: jax.Array,
+                       bounds: jax.Array, r_ghost: float, axis_name: str,
+                       ghost_cap: int, *, periodic: bool, box_len: float,
+                       slab_axis: int = 0,
+                       prop_names: Tuple[str, ...] = (),
+                       n_hops: int = 1) -> Dict[str, jax.Array]:
+    """Property-subset refresh of an *existing* ghost layer (OpenFPM's
+    ``ghost_get<prop...>(SKIP_LABELLING)``): re-ship only the current
+    positions (and ``prop_names``) of the same particles a prior
+    :func:`ghost_get_local` exchanged — same ppermute pattern, a fraction
+    of the bytes, no re-bucketing.
+
+    The stable-slot contract: the send-side selection is re-derived from
+    ``x_anchor`` — the positions the ghost layer was *built* from — under
+    the same ``bounds``/``r_ghost``/``ghost_cap``. Because :func:`_pack_side`
+    assigns slots by a deterministic cumsum rank over the selection mask,
+    identical selections produce byte-identical slot permutations, so row
+    ``(side, slot)`` here refreshes exactly the ghost that row holds in the
+    cached :class:`GhostLayer`. Valid between two structural exchanges
+    whenever no ``map()`` ran in between (slots unpermuted) and ``bounds``
+    did not move (no rebalance) — exactly the update-step regime of the
+    reuse engine (simulation.make_sim_step(reuse=...), DESIGN.md §14).
+
+    Returns ``{"x": (2K, ghost_cap, dim), name: (2K, ghost_cap, ...)}``
+    row-aligned with the cached layer; ``valid``/``src_slot`` are *not*
+    shipped — the receiver keeps its cached copies (also frozen between
+    structural exchanges)."""
+    ndev = RT.axis_size(axis_name)
+    me = RT.axis_index(axis_name)
+    xa = x_anchor[:, slab_axis]
+
+    payload = {"x": ps.x}
+    payload.update({k: ps.props[k] for k in prop_names})
+
+    def send(perm, tree):
+        return jax.tree.map(lambda a: RT.ppermute(a, axis_name, perm), tree)
+
+    from_left, from_right = [], []
+    for h in range(1, n_hops + 1):
+        # identical hop thresholds to ghost_get_local, evaluated on the
+        # *anchor* coordinates so the selection (and hence the slot
+        # permutation) reproduces the build-time exchange bit-for-bit
+        if h == 1:
+            near_lo = ps.valid & (xa < bounds[me] + r_ghost)
+            near_hi = ps.valid & (xa >= bounds[me + 1] - r_ghost)
+        else:
+            idx_r = me + h
+            wrap_r = idx_r > ndev
+            idx_r = jnp.where(wrap_r, idx_r - ndev, idx_r)
+            thresh_hi = (bounds[idx_r]
+                         + jnp.where(wrap_r, box_len, 0.0) - r_ghost)
+            idx_l = me - h + 1
+            wrap_l = idx_l < 0
+            idx_l = jnp.where(wrap_l, idx_l + ndev, idx_l)
+            thresh_lo = (bounds[idx_l]
+                         - jnp.where(wrap_l, box_len, 0.0) + r_ghost)
+            near_lo = ps.valid & (xa < thresh_lo)
+            near_hi = ps.valid & (xa >= thresh_hi)
+
+        lo_pk = _pack_payload(payload, near_lo, ghost_cap)
+        hi_pk = _pack_payload(payload, near_hi, ghost_cap)
+
+        right, left = RT.shift_perms(ndev, h)
+        fl = send(right, hi_pk)
+        fr = send(left, lo_pk)
+
+        if periodic:
+            shift_l = jnp.where(me - h < 0, -box_len, 0.0)
+            shift_r = jnp.where(me + h >= ndev, box_len, 0.0)
+        else:
+            # non-periodic wrap links carry no physical ghosts; the cached
+            # valid mask (built by ghost_get_local) already zeroes them
+            shift_l = shift_r = 0.0
+
+        fl["x"] = fl["x"].at[:, slab_axis].add(_sh(shift_l, fl["x"].dtype))
+        fr["x"] = fr["x"].at[:, slab_axis].add(_sh(shift_r, fr["x"].dtype))
+        from_left.append(fl)
+        from_right.append(fr)
+
+    sides = from_left + from_right   # row order matches GhostLayer
+    return jax.tree.map(lambda *a: jnp.stack(a), *sides)
+
+
 # --------------------------------------------------------------------------
 # ghost_put(): return ghost contributions to their owners
 # --------------------------------------------------------------------------

@@ -117,8 +117,18 @@ class StepFlags:
         default_factory=lambda: jnp.zeros((), jnp.int32))
     #                            excess (overlap mode): DLB skewed a slab
     #                            past the static interior_rows cap
+    stale: jax.Array = dataclasses.field(   # reuse-engine Verlet tripwire
+        default_factory=lambda: jnp.zeros((), jnp.int32))
+    #                            (DESIGN.md §14): 1 = some particle moved
+    #                            > skin/2 since the cached exchange
+    #                            structure was built, so this step took the
+    #                            full map→ghost_get→rebuild path. Cadence
+    #                            telemetry, not an error — excluded from
+    #                            ``any()``.
 
     def any(self) -> jax.Array:
+        """Max over the *error* flags (``stale`` is cadence telemetry, not
+        a capacity violation, and is deliberately excluded)."""
         return jnp.maximum(
             jnp.maximum(jnp.maximum(self.cell, self.neighbor),
                         jnp.maximum(self.bucket, self.ghost)),
@@ -221,6 +231,20 @@ class PhysicsSpec:
     rows); it lives and communicates alongside the particle fields —
     sharded on a distributed run, whole serially — and reaches ``finish``
     as ``ctx.fields`` + ``ctx.grid`` (ghost_get/ghost_put).
+
+    The reuse-engine declarations (DESIGN.md §14, all optional):
+    ``update_props`` are the ghost props an update step refreshes alongside
+    positions (OpenFPM's ``ghost_get<prop...>(SKIP_LABELLING)``; default =
+    ``pair_props``; DEM needs ``("v", "w")`` because its ``finish`` reads
+    ghost angular velocity). ``cache_keys`` names ``finish`` scalars the
+    engine lifts out of the scalar dict and carries device-resident across
+    steps as physics cache (re-injected into ``extras`` next step, with the
+    replicated ``"_reuse_slots_stable"`` flag: True while the combo slot
+    permutation is unchanged since the last full rebuild, so slot-indexed
+    caches like the DEM contact list stay valid). ``cache_scalars`` marks
+    which of those are replicated scalars (the rest shard their leading
+    dim); ``cache_example`` builds the zero-valued cache pytree from a
+    particle set, seeding the cold cache.
     """
 
     name: str
@@ -242,22 +266,35 @@ class PhysicsSpec:
     bucket_cap: int = 512                    # map() per-destination bucket
     ghost_cap: int = 1024                    # ghost_get per-side capacity
     mesh_props: Tuple[str, ...] = ()         # mesh fields in state.fields
+    update_props: Optional[Tuple[str, ...]] = None  # ghost props refreshed
+    #                                          on reuse update steps
+    #                                          (None → pair_props)
+    cache_keys: Tuple[str, ...] = ()         # finish scalars carried as
+    #                                          reuse-engine physics cache
+    cache_scalars: Tuple[str, ...] = ()      # cache_keys that are replicated
+    #                                          scalars (rest shard dim 0)
+    cache_example: Optional[Callable] = None  # ps -> zero cache pytree
 
 
-def _grid_kw(spec: PhysicsSpec, padded_axes: Tuple[int, ...]):
+def _grid_kw(spec: PhysicsSpec, padded_axes: Tuple[int, ...],
+             skin: float = 0.0):
     """Cell grid: the declared domain, or (distributed) the ghost-padded box
     — every decomposed space axis in ``padded_axes`` extended by r_cut and
     non-periodic, because ghost images arrive pre-shifted across the seam
     (mappings.ghost_get_local). Serial passes ``()``; a slab run pads its
-    one slab axis; a pencil run pads both decomposed axes."""
+    one slab axis; a pencil run pads both decomposed axes. A nonzero
+    ``skin`` builds the Verlet-margined geometry of the reuse engine
+    (DESIGN.md §14): cells and the ghost pad widen to ``r_cut + skin``, so
+    a binning built at anchor positions stays pair-complete while no
+    particle has moved more than ``skin/2``."""
     lo = list(float(v) for v in spec.box_lo)
     hi = list(float(v) for v in spec.box_hi)
     per = list(bool(v) for v in spec.periodic)
     for ax in padded_axes:
-        lo[ax] -= spec.r_cut
-        hi[ax] += spec.r_cut
+        lo[ax] -= spec.r_cut + skin
+        hi[ax] += spec.r_cut + skin
         per[ax] = False
-    gs = CL.grid_shape_for(lo, hi, spec.r_cut)
+    gs = CL.grid_shape_for(lo, hi, spec.r_cut, skin)
     return dict(box_lo=tuple(lo), box_hi=tuple(hi), grid_shape=gs,
                 periodic=tuple(per), cell_cap=spec.cell_cap)
 
@@ -328,12 +365,56 @@ def _auto_hops(rc: float, box_len: float, ndev: int) -> int:
     return max(1, min(ndev - 1, need))
 
 
+def _slab_geom(cl_kw, slab_axis: int, ndev: int,
+               interior_rows: Optional[int]):
+    """Static split-phase window geometry over a slab-decomposed cell grid
+    (shared by the every-step and reuse engines so their row math cannot
+    drift): slab-axis row count, flat-cell strides, the binning-exact
+    ``row_of`` coordinate→row map, and whole-row → flat-cell-id expansion.
+    """
+    gs = cl_kw["grid_shape"]
+    n_rows = int(gs[slab_axis])
+    n_cells = int(np.prod(gs))
+    strides = np.concatenate(
+        [np.cumprod(np.asarray(gs)[::-1])[::-1][1:], [1]]).astype(np.int32)
+    row_stride = int(strides[slab_axis])
+    oshape = list(gs)
+    oshape[slab_axis] = 1
+    oix = np.indices(oshape).reshape(len(gs), -1)
+    # flat cell ids of the slab-row cross-section (row index 0)
+    other_offs = jnp.asarray(
+        np.sort((oix * strides[:, None]).sum(axis=0)).astype(np.int32))
+    lo_s = float(cl_kw["box_lo"][slab_axis])
+    hi_s = float(cl_kw["box_hi"][slab_axis])
+    w_int = int(interior_rows if interior_rows is not None
+                else min(n_rows, -(-n_rows // ndev) + 4))
+
+    def row_of(t):
+        """Slab-axis cell row of coordinate t — the exact binning expression
+        of cell_list._flat_cell_of, so window edges agree with particle
+        homes bit-for-bit (monotone in t)."""
+        frac = (t - lo_s) / (hi_s - lo_s)
+        return jnp.clip(jnp.floor(frac * n_rows).astype(jnp.int32), 0,
+                        n_rows - 1)
+
+    def rows_to_cells(rows, ok):
+        """Flat home-cell selection of whole slab rows; masked-out rows
+        become inactive sentinels (n_cells)."""
+        flat = rows[:, None] * row_stride + other_offs[None, :]
+        return jnp.where(ok[:, None], flat, n_cells).reshape(-1)
+
+    return dict(n_rows=n_rows, n_cells=n_cells, w_int=w_int, row_of=row_of,
+                rows_to_cells=rows_to_cells)
+
+
 @functools.lru_cache(maxsize=None)
 def make_sim_step(physics, cfg, mesh=None, *, axis_name="shards",
                   slab_axis: int = 0, bucket_cap: Optional[int] = None,
                   ghost_cap: Optional[int] = None, overlap: bool = True,
                   interior_rows: Optional[int] = None,
-                  n_hops: Optional[int] = None):
+                  n_hops: Optional[int] = None,
+                  reuse: Optional[str] = None,
+                  skin: Optional[float] = None):
     """Build the jitted simulation step for ``physics(cfg)``.
 
     Returns ``step(state, extras) -> (state, flags, scalars)`` over a
@@ -375,11 +456,43 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name="shards",
     uniform share + margin); a DLB-skewed slab exceeding it raises
     ``StepFlags.window``, never drops interactions silently.
 
+    ``reuse`` selects the two-speed skin-amortized cadence (DESIGN.md §14)
+    and changes the step's state type to :class:`ReuseState` (build one
+    with :func:`reuse_state`, mirroring these kwargs):
+
+      * ``"skin"`` — the ghost band widens to ``r_cut + skin``, the
+        exchange structure (ghost slot permutation + combo cell list) is
+        cached, and each step an in-graph pmax'd Verlet tripwire
+        (``cell_list.moved_beyond`` against the cached anchors, surfaced as
+        ``StepFlags.stale``) drives a ``lax.cond``: fresh cache → the cheap
+        update path (no map(), no re-binning; the fixed-payload
+        ``mappings.ghost_update_local`` refreshes positions +
+        ``update_props`` of the *same* ghost slots); tripped → the full
+        map → ghost_get → rebuild path. Correctness is the standard skin/2
+        guarantee — no pair within ``r_cut`` is ever missed.
+      * ``"update"`` — the pure update path with no rebuild cond (the first
+        step after a cold cache still takes the full path to warm it).
+        Unsafe beyond skin/2 drift — exists for HLO accounting (the wire
+        bytes of an update step in isolation) and cadence experiments.
+
+    ``skin`` is the Verlet margin (default ``0.5 * r_cut``; must be in
+    ``(0, r_cut]``). Update steps compose with ``overlap=True``: the
+    interior pass runs on the *cached* locals-only binning while the
+    (smaller) update ppermute is in flight. On a true 2-D pencil mesh the
+    reuse engine degrades gracefully: every step runs the full 2-D path
+    (``stale`` = 1 throughout), the state type is still ReuseState.
+
     ``physics`` must be a module-level callable ``physics(cfg) ->``
     :class:`PhysicsSpec` and ``cfg`` hashable (a frozen config dataclass):
     the engine is cached on ``(physics, cfg, mesh, ...)``.
     """
+    if reuse is not None and reuse not in ("skin", "update"):
+        raise ValueError(
+            f"reuse must be None, 'skin' or 'update'; got {reuse!r}")
     if mesh is None:
+        if reuse is not None:
+            return jax.jit(_make_reuse_serial_fn(physics, cfg, slab_axis,
+                                                 reuse, skin))
         return jax.jit(make_serial_step_fn(physics, cfg,
                                            slab_axis=slab_axis))
 
@@ -405,11 +518,27 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name="shards",
     k_row = int(n_hops) if n_hops is not None else _auto_hops(rc, box_len,
                                                               ndev)
     if ndev_c > 1:
-        return _make_sim_step_2d(
+        inner2d = _make_sim_step_2d(
             spec, body, pair_kw, mesh, row_axis, col_axis, slab_axis,
             b_cap, g_cap, k_row, n_hops)
+        if reuse is not None:
+            return _wrap_reuse_fallback(inner2d)
+        return inner2d
 
     axis_name = row_axis
+    if reuse is not None:
+        if two_d_state:
+            # pencil-typed state (col_bounds riding, even at ncols=1): run
+            # the every-step composition under the inert-cache wrapper
+            inner = make_sim_step(
+                physics, cfg, mesh, axis_name=(row_axis, col_axis),
+                slab_axis=slab_axis, bucket_cap=bucket_cap,
+                ghost_cap=ghost_cap, overlap=overlap,
+                interior_rows=interior_rows, n_hops=n_hops)
+            return _wrap_reuse_fallback(inner)
+        return _make_reuse_step_1d(
+            spec, body, pair_kw, mesh, axis_name, slab_axis, b_cap, g_cap,
+            overlap, interior_rows, n_hops, reuse, skin)
     cl_kw = _grid_kw(spec, (slab_axis,))
     # The split-phase window geometry assumes the single-hop regime
     # (boundary bands one r_cut wide); multi-hop thin slabs fall back to
@@ -417,39 +546,12 @@ def make_sim_step(physics, cfg, mesh=None, *, axis_name="shards",
     overlap = overlap and k_row == 1
 
     # --- static split-phase geometry (overlap mode) -----------------------
-    gs = cl_kw["grid_shape"]
-    n_rows = int(gs[slab_axis])
-    n_cells = int(np.prod(gs))
-    strides = np.concatenate(
-        [np.cumprod(np.asarray(gs)[::-1])[::-1][1:], [1]]).astype(np.int32)
-    row_stride = int(strides[slab_axis])
-    oshape = list(gs)
-    oshape[slab_axis] = 1
-    oix = np.indices(oshape).reshape(len(gs), -1)
-    # flat cell ids of the slab-row cross-section (row index 0)
-    other_offs = jnp.asarray(
-        np.sort((oix * strides[:, None]).sum(axis=0)).astype(np.int32))
-    lo_s = float(cl_kw["box_lo"][slab_axis])
-    hi_s = float(cl_kw["box_hi"][slab_axis])
-    w_int = int(interior_rows if interior_rows is not None
-                else min(n_rows, -(-n_rows // ndev) + 4))
+    geom = _slab_geom(cl_kw, slab_axis, ndev, interior_rows)
+    n_rows, w_int = geom["n_rows"], geom["w_int"]
+    _row_of, _rows_to_cells = geom["row_of"], geom["rows_to_cells"]
     W_B = 5   # boundary rows per side: <= 3 needed (cell width >= r_cut,
     #           so [face - r_cut, face + r_cut] spans <= 3 rows) + 1 margin
     #           each way for fp32 seam-shift rounding
-
-    def _row_of(t):
-        """Slab-axis cell row of coordinate t — the exact binning expression
-        of cell_list._flat_cell_of, so window edges agree with particle
-        homes bit-for-bit (monotone in t)."""
-        frac = (t - lo_s) / (hi_s - lo_s)
-        return jnp.clip(jnp.floor(frac * n_rows).astype(jnp.int32), 0,
-                        n_rows - 1)
-
-    def _rows_to_cells(rows, ok):
-        """Flat home-cell selection of whole slab rows; masked-out rows
-        become inactive sentinels (n_cells)."""
-        flat = rows[:, None] * row_stride + other_offs[None, :]
-        return jnp.where(ok[:, None], flat, n_cells).reshape(-1)
 
     def local_step(state: DistributedParticles, extras):
         red = Reduce(axis_name)
@@ -655,6 +757,437 @@ def _make_sim_step_2d(spec: PhysicsSpec, body, pair_kw, mesh, row_axis: str,
     return jax.jit(stepped)
 
 
+# --------------------------------------------------------------------------
+# The reuse engine: skin-amortized two-speed cadence (DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReuseCache:
+    """The cached exchange *structure* the reuse engine carries across steps
+    (OpenFPM's ghost layer as a cache, paper §4.1): the anchor positions the
+    structure was built from, the combo cell-list binning, the ghost layer
+    (slot permutation + static props; its positions are the build-time
+    anchors), the locals-only binning of the split-phase schedule, and any
+    physics cache the spec declared (``cache_keys``, e.g. the DEM contact
+    list). ``ok=False`` marks a cold cache — the next step takes the full
+    rebuild path unconditionally."""
+
+    ok: jax.Array                      # () bool: cache warm?
+    x_anchor: jax.Array                # (cap, dim) positions at build
+    cl: CL.CellList                    # combo binning at build
+    ghosts: Optional[M.GhostLayer] = None   # cached layer (None serially)
+    cl_loc: Optional[CL.CellList] = None    # locals-only binning (overlap)
+    phys: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReuseState:
+    """A :class:`DistributedParticles` riding with its reuse cache — the
+    state type of ``make_sim_step(..., reuse=...)`` steps. Build with
+    :func:`reuse_state`; read results from ``.inner``."""
+
+    inner: DistributedParticles
+    cache: ReuseCache
+
+
+def _resolve_skin(spec: PhysicsSpec, skin: Optional[float]) -> float:
+    rc = float(spec.r_cut)
+    skin_v = float(skin) if skin is not None else 0.5 * rc
+    if not 0.0 < skin_v <= rc:
+        raise ValueError(
+            f"reuse skin must be in (0, r_cut]; got {skin_v} (r_cut={rc})")
+    return skin_v
+
+
+def _combo_of(ps: ParticleSet, ghosts: M.GhostLayer,
+              prop_names) -> ParticleSet:
+    gp = ghosts.as_particles()
+    return ParticleSet(
+        x=jnp.concatenate([ps.x, gp.x]),
+        props={k: jnp.concatenate([ps.props[k], gp.props[k]])
+               for k in prop_names},
+        valid=jnp.concatenate([ps.valid, gp.valid]))
+
+
+@functools.lru_cache(maxsize=None)
+def _make_reuse_serial_fn(physics, cfg, slab_axis, reuse, skin):
+    """Serial reuse step: the cadence degenerates to cached-binning reuse
+    (no exchange to amortize), driven by the same tripwire — the 1-slab
+    special case of the same two-speed composition, so serial ≡ 1-device
+    holds for the reuse engine too."""
+    spec = physics(cfg)
+    body = spec.make_body()
+    skin_v = _resolve_skin(spec, skin)
+    pair_kw = dict(out=spec.pair_out, r_cut=float(spec.r_cut),
+                   prop_names=spec.pair_props, backend=spec.backend,
+                   interpret=spec.interpret, precision=spec.precision)
+    mesh_periodic = bool(spec.periodic[slab_axis])
+    cl_kw = _grid_kw(spec, (), skin=skin_v)
+
+    def step(rstate: ReuseState, extras):
+        state, cache = rstate.inner, rstate.cache
+        red = Reduce(None)
+        grid = G.GridOps(None, periodic=mesh_periodic)
+        ps = state.ps
+        if spec.advance is not None:
+            ps = spec.advance(ps, red, extras)
+        moved = CL.moved_beyond(ps.x, cache.x_anchor, ps.valid, skin_v)
+        stale = ((~cache.ok) | moved).astype(jnp.int32)
+        take_full = (stale > 0) if reuse == "skin" else ~cache.ok
+        cl = jax.lax.cond(take_full,
+                          lambda _: CL.build_cell_list(ps, **cl_kw),
+                          lambda _: cache.cl, None)
+        pair = I.apply_pair_kernel(ps, cl, body, **pair_kw)
+        extras_f = extras
+        if spec.cache_keys:
+            # serial slots never permute (no map), so slot-indexed physics
+            # caches stay valid across rebuilds too
+            extras_f = {**extras, **cache.phys,
+                        "_reuse_slots_stable": jnp.ones((), bool)}
+        ps2, scalars, nb_ovf, fields = _finish(
+            spec, StepCtx(ps=ps, combo=ps, cl=cl, pair=pair, red=red,
+                          extras=extras_f, fields=state.fields, grid=grid))
+        phys_new = cache.phys
+        if spec.cache_keys:
+            scalars = dict(scalars)
+            phys_new = {k: scalars.pop(k) for k in spec.cache_keys}
+        new_cache = ReuseCache(
+            ok=jnp.ones((), bool),
+            x_anchor=jnp.where(take_full, ps.x, cache.x_anchor),
+            cl=cl, ghosts=None, cl_loc=None, phys=phys_new)
+        flags = StepFlags(cell=jnp.asarray(cl.overflow, jnp.int32),
+                          neighbor=nb_ovf, bucket=_Z32(), ghost=_Z32(),
+                          ghost_contract=_Z32(), stale=stale)
+        inner = dataclasses.replace(state, ps=ps2, fields=fields)
+        return ReuseState(inner=inner, cache=new_cache), flags, scalars
+
+    return step
+
+
+def _make_reuse_step_1d(spec: PhysicsSpec, body, pair_kw, mesh, axis_name,
+                        slab_axis: int, b_cap: int, g_cap: int,
+                        overlap: bool, interior_rows: Optional[int],
+                        n_hops: Optional[int], reuse: str,
+                        skin: Optional[float]):
+    """The two-speed 1-D slab step (DESIGN.md §14).
+
+    Every step issues the fixed-payload ``mappings.ghost_update_local``
+    (positions + ``update_props`` of the cached ghost slots, re-derived
+    from the cached anchors so the slot permutation is byte-identical) and
+    evaluates the pmax'd Verlet tripwire on locals-vs-anchors. A
+    ``lax.cond`` then runs either the cheap update path — cached combo
+    binning, merged refreshed ghosts, and (overlap mode) the interior pair
+    pass on the cached locals-only binning while the update ppermute is in
+    flight — or the full map → ghost_get(r_cut+skin) → rebuild path.
+    Correctness is the standard skin/2 guarantee: cells and ghost band are
+    ``r_cut + skin`` wide, so the cached structure is pair-complete for
+    ``r_cut`` until some particle drifts past skin/2 — exactly when the
+    tripwire forces the rebuild."""
+    rc = float(spec.r_cut)
+    skin_v = _resolve_skin(spec, skin)
+    r_g = rc + skin_v
+    box_len = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
+    per_slab = bool(spec.periodic[slab_axis])
+    ndev = int(mesh.shape[axis_name])
+    k_row = (int(n_hops) if n_hops is not None
+             else _auto_hops(r_g, box_len, ndev))
+    overlap = bool(overlap) and k_row == 1
+    cl_kw = _grid_kw(spec, (slab_axis,), skin=skin_v)
+    upd_props = (spec.update_props if spec.update_props is not None
+                 else spec.pair_props)
+    geom = _slab_geom(cl_kw, slab_axis, ndev, interior_rows)
+    n_rows, w_int = geom["n_rows"], geom["w_int"]
+    row_of, rows_to_cells = geom["row_of"], geom["rows_to_cells"]
+    W_B = 5   # boundary rows per side: the combine band is r_cut+skin wide
+    #           and cached anchors lag current positions by <= skin/2, so
+    #           the band's build rows span <= 2 + (skin/2)/(r_cut+skin)
+    #           <= 2.25 cell widths -> <= 4 rows, +1 low margin
+
+    def local_step(rstate: ReuseState, extras):
+        state, cache = rstate.inner, rstate.cache
+        red = Reduce(axis_name)
+        grid = G.GridOps(axis_name, periodic=per_slab)
+        ps, bounds = state.ps, state.bounds
+        if spec.advance is not None:
+            ps = spec.advance(ps, red, extras)
+
+        # Fixed-payload refresh of the cached ghost slots — always issued,
+        # before the cadence decision: the update path consumes it (its
+        # interior pair pass hides the in-flight ppermute), the full path
+        # discards it. Slot selection re-derives from the cached anchors,
+        # so the slots are byte-identical to the cached layer's.
+        upd = M.ghost_update_local(
+            ps, cache.x_anchor, bounds, r_g, axis_name, g_cap,
+            periodic=per_slab, box_len=box_len, slab_axis=slab_axis,
+            prop_names=upd_props, n_hops=k_row)
+
+        # Verlet tripwire (StepFlags.stale): locals against their build
+        # anchors, pmax'd. Every ghost is some device's local with the same
+        # anchor (seam shifts are constant between rebuilds), so the global
+        # max covers the ghost band too — and by not reading the in-flight
+        # update payload, the cadence decision doesn't serialize on it.
+        moved = CL.moved_beyond(ps.x, cache.x_anchor, ps.valid, skin_v)
+        stale = RT.pmax(((~cache.ok) | moved).astype(jnp.int32), axis_name)
+        if reuse == "update":
+            take_full = RT.pmax((~cache.ok).astype(jnp.int32),
+                                axis_name) > 0
+        else:
+            take_full = stale > 0
+
+        contract = _hop_excess(bounds, r_g, k_row)
+        me = RT.axis_index(axis_name)
+        my_lo, my_hi = bounds[me], bounds[me + 1]
+        win_ovf = _Z32()
+        if overlap:
+            r0 = row_of(my_lo)
+            r_last = row_of(my_hi)
+            int_rows = r0 + jnp.arange(w_int, dtype=jnp.int32)
+            int_cells = rows_to_cells(int_rows, int_rows < n_rows)
+            win_ovf = jnp.maximum(r_last + 1 - (r0 + w_int), 0)
+            lo_rows = (row_of(my_lo - r_g) - 1
+                       + jnp.arange(W_B, dtype=jnp.int32))
+            hi_rows = (row_of(my_hi - r_g) - 1
+                       + jnp.arange(W_B, dtype=jnp.int32))
+            lo_ok = (lo_rows >= 0) & (lo_rows < n_rows)
+            hi_ok = ((hi_rows >= 0) & (hi_rows < n_rows)
+                     & (hi_rows > lo_rows[-1]))
+            bnd_cells = jnp.concatenate([rows_to_cells(lo_rows, lo_ok),
+                                         rows_to_cells(hi_rows, hi_ok)])
+
+        def full_branch(ps):
+            ps2, ovf_b = M.map_particles_local(ps, bounds, axis_name,
+                                               b_cap, slab_axis)
+            ghosts, ovf_g = M.ghost_get_local(
+                ps2, bounds, r_g, axis_name, g_cap, periodic=per_slab,
+                box_len=box_len, slab_axis=slab_axis,
+                prop_names=spec.ghost_props, n_hops=k_row)
+            combo = _combo_of(ps2, ghosts, spec.ghost_props)
+            cl = CL.build_cell_list(combo, **cl_kw)
+            pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+            cl_loc = CL.build_cell_list(ps2, **cl_kw) if overlap else None
+            return (ps2, ghosts, combo, cl, cl_loc, pair,
+                    jnp.asarray(ovf_b, jnp.int32),
+                    jnp.asarray(ovf_g, jnp.int32))
+
+        def update_branch(ps):
+            # SKIP_LABELLING: same slots, refreshed positions + update
+            # props; everything else (valid mask, src slots, static props,
+            # both binnings) comes from the cache.
+            gprops = dict(cache.ghosts.props)
+            for k in upd_props:
+                gprops[k] = upd[k]
+            ghosts = M.GhostLayer(x=upd["x"], props=gprops,
+                                  valid=cache.ghosts.valid,
+                                  src_slot=cache.ghosts.src_slot)
+            combo = _combo_of(ps, ghosts, spec.ghost_props)
+            cl = cache.cl
+            if overlap:
+                pair_int = I.apply_pair_kernel(ps, cache.cl_loc, body,
+                                               cells=int_cells, **pair_kw)
+                pair_bnd = I.apply_pair_kernel(combo, cl, body,
+                                               cells=bnd_cells, **pair_kw)
+                # the combine band widens by the skin: cached ghosts can
+                # have drifted up to skin/2 INTO the slab since build, so
+                # a particle needs the ghost-aware result within
+                # r_cut + skin of a face
+                xs = ps.x[:, slab_axis]
+                bnd = (xs < my_lo + r_g) | (xs >= my_hi - r_g)
+                n_loc = ps.capacity
+                pair = {k: jnp.concatenate(
+                    [jnp.where(I._bmask(bnd, pair_bnd[k][:n_loc]),
+                               pair_bnd[k][:n_loc], pair_int[k]),
+                     pair_bnd[k][n_loc:]])
+                    for k in pair_bnd}
+            else:
+                pair = I.apply_pair_kernel(combo, cl, body, **pair_kw)
+            return (ps, ghosts, combo, cl, cache.cl_loc, pair, _Z32(),
+                    _Z32())
+
+        (ps2, ghosts, combo, cl, cl_loc, pair, ovf_bucket,
+         ovf_ghost) = jax.lax.cond(take_full, full_branch, update_branch,
+                                   ps)
+
+        extras_f = extras
+        if spec.cache_keys:
+            extras_f = {**extras, **cache.phys,
+                        "_reuse_slots_stable": jnp.logical_not(take_full)}
+        ps3, scalars, nb_ovf, fields = _finish(
+            spec, StepCtx(ps=ps2, combo=combo, cl=cl, pair=pair, red=red,
+                          extras=extras_f, fields=state.fields, grid=grid))
+        phys_new = cache.phys
+        if spec.cache_keys:
+            scalars = dict(scalars)
+            phys_new = {k: scalars.pop(k) for k in spec.cache_keys}
+
+        # cached scalars must be replicated (out_specs P()): pmax the
+        # per-device overflow counters before storing
+        cl_ovf = RT.pmax(jnp.asarray(cl.overflow, jnp.int32), axis_name)
+        cl_store = dataclasses.replace(cl, overflow=cl_ovf)
+        cell_flag = cl_ovf
+        cl_loc_store = None
+        if overlap:
+            clo_ovf = RT.pmax(jnp.asarray(cl_loc.overflow, jnp.int32),
+                              axis_name)
+            cl_loc_store = dataclasses.replace(cl_loc, overflow=clo_ovf)
+            cell_flag = jnp.maximum(cell_flag, clo_ovf)
+
+        def sel(new, old):
+            return jnp.where(take_full, new, old)
+
+        new_cache = ReuseCache(
+            ok=jnp.ones((), bool),
+            x_anchor=sel(ps2.x, cache.x_anchor),
+            cl=cl_store,
+            # on an update step keep the cached layer (anchor positions),
+            # not the refreshed one — the slot metadata is identical
+            ghosts=jax.tree.map(sel, ghosts, cache.ghosts),
+            cl_loc=cl_loc_store,
+            phys=phys_new)
+        flags = StepFlags(
+            cell=cell_flag,
+            neighbor=RT.pmax(nb_ovf, axis_name),
+            bucket=jnp.asarray(ovf_bucket, jnp.int32),
+            ghost=jnp.asarray(ovf_ghost, jnp.int32),
+            ghost_contract=contract,
+            window=RT.pmax(jnp.asarray(win_ovf, jnp.int32), axis_name),
+            stale=stale)
+        inner = dataclasses.replace(state, ps=ps3, fields=fields)
+        return ReuseState(inner=inner, cache=new_cache), flags, scalars
+
+    rspec = _reuse_state_spec(spec, axis_name, cl_kw, overlap)
+    stepped = RT.shard_map(local_step, mesh, in_specs=(rspec, P()),
+                           out_specs=(rspec, P(), P()), check_vma=False)
+    return jax.jit(stepped)
+
+
+def _wrap_reuse_fallback(inner_step):
+    """Graceful reuse degradation (true 2-D pencil meshes / pencil-typed
+    states): the cache rides inert and every step runs the full inner
+    composition — same ``ReuseState`` signature, ``StepFlags.stale`` = 1
+    throughout, no amortization (pencil reuse is a ROADMAP follow-on)."""
+    def step(rstate: ReuseState, extras):
+        inner, flags, scalars = inner_step(rstate.inner, extras)
+        flags = dataclasses.replace(flags, stale=jnp.ones((), jnp.int32))
+        return ReuseState(inner=inner, cache=rstate.cache), flags, scalars
+    return step
+
+
+def _reuse_state_spec(spec: PhysicsSpec, axis_name, cl_kw,
+                      overlap: bool) -> ReuseState:
+    """shard_map specs for :class:`ReuseState`: cache arrays shard their
+    leading dim alongside the particles; the warm flag, cell-list overflow
+    counters and declared ``cache_scalars`` replicate."""
+    part, rep = P(axis_name), P()
+    cl_spec = CL.CellList(
+        cells=part, counts=part, cell_id=part, overflow=rep,
+        grid_shape=tuple(cl_kw["grid_shape"]),
+        periodic=tuple(cl_kw["periodic"]),
+        box_lo=tuple(cl_kw["box_lo"]), box_hi=tuple(cl_kw["box_hi"]))
+    cache_spec = ReuseCache(
+        ok=rep, x_anchor=part, cl=cl_spec,
+        ghosts=M.GhostLayer(x=part,
+                            props={k: part for k in spec.ghost_props},
+                            valid=part, src_slot=part),
+        cl_loc=cl_spec if overlap else None,
+        phys={k: (rep if k in spec.cache_scalars else part)
+              for k in spec.cache_keys})
+    return ReuseState(inner=_state_spec(spec, axis_name), cache=cache_spec)
+
+
+def _cold_cell_list(cl_kw, rows_lead: int, id_lead: int,
+                    sentinel: int) -> CL.CellList:
+    """An all-empty cell list with the right static geometry and (global)
+    leading dims — the cold-cache placeholder ``reuse_state`` installs; its
+    contents are never read (``ok=False`` forces the full path first)."""
+    n_cells = int(np.prod(cl_kw["grid_shape"]))
+    return CL.CellList(
+        cells=jnp.full((rows_lead, int(cl_kw["cell_cap"])), sentinel,
+                       jnp.int32),
+        counts=jnp.zeros((rows_lead,), jnp.int32),
+        cell_id=jnp.full((id_lead,), n_cells, jnp.int32),
+        overflow=jnp.zeros((), jnp.int32),
+        grid_shape=tuple(cl_kw["grid_shape"]),
+        periodic=tuple(cl_kw["periodic"]),
+        box_lo=tuple(cl_kw["box_lo"]), box_hi=tuple(cl_kw["box_hi"]))
+
+
+def reuse_state(state: DistributedParticles, physics, cfg, mesh=None, *,
+                axis_name="shards", slab_axis: int = 0,
+                ghost_cap: Optional[int] = None, overlap: bool = True,
+                n_hops: Optional[int] = None,
+                skin: Optional[float] = None) -> ReuseState:
+    """Wrap a container for the reuse engine with a COLD cache: the first
+    step takes the full map → ghost_get → rebuild path unconditionally and
+    warms it. Mirror the kwargs you pass ``make_sim_step`` — they shape the
+    cached structure (grid geometry, hop count, overlap binning). Call it
+    again after any out-of-step re-decomposition (``make_rebalance``): a
+    moved slab boundary invalidates the cached slot permutation."""
+    spec = physics(cfg)
+    skin_v = _resolve_skin(spec, skin)
+    phys = {}
+    if spec.cache_keys:
+        if spec.cache_example is None:
+            raise ValueError(
+                "PhysicsSpec.cache_keys needs cache_example to seed the "
+                "cold reuse cache")
+        ex = spec.cache_example(state.ps)
+        phys = {k: ex[k] for k in spec.cache_keys}
+    if mesh is None or isinstance(axis_name, tuple):
+        # serial, or the pencil/pencil-typed fallback (cache rides inert)
+        cl_kw = _grid_kw(spec, (), skin=skin_v)
+        cap = state.ps.capacity
+        cache = ReuseCache(
+            ok=jnp.zeros((), bool), x_anchor=state.ps.x,
+            cl=_cold_cell_list(cl_kw,
+                               int(np.prod(cl_kw["grid_shape"])) + 1,
+                               cap, cap),
+            ghosts=None, cl_loc=None, phys=phys)
+        return ReuseState(inner=state, cache=cache)
+
+    rc = float(spec.r_cut)
+    g_cap = int(ghost_cap or spec.ghost_cap)
+    box_len = float(spec.box_hi[slab_axis]) - float(spec.box_lo[slab_axis])
+    ndev = int(mesh.shape[axis_name])
+    k_row = (int(n_hops) if n_hops is not None
+             else _auto_hops(rc + skin_v, box_len, ndev))
+    overlap = bool(overlap) and k_row == 1
+    cl_kw = _grid_kw(spec, (slab_axis,), skin=skin_v)
+    ps = state.ps
+    cap = ps.capacity
+    if cap % ndev:
+        raise ValueError(f"capacity {cap} not divisible by {ndev} shards")
+    cap_loc = cap // ndev
+    n_cells = int(np.prod(cl_kw["grid_shape"]))
+    K2 = 2 * k_row
+    combo_loc = cap_loc + K2 * g_cap
+    ghosts = M.GhostLayer(
+        x=jnp.zeros((ndev * K2, g_cap, ps.x.shape[1]), ps.x.dtype),
+        props={k: jnp.zeros((ndev * K2, g_cap) + ps.props[k].shape[1:],
+                            ps.props[k].dtype) for k in spec.ghost_props},
+        valid=jnp.zeros((ndev * K2, g_cap), bool),
+        src_slot=jnp.full((ndev * K2, g_cap), cap_loc, jnp.int32))
+    cache = ReuseCache(
+        ok=jnp.zeros((), bool), x_anchor=ps.x,
+        cl=_cold_cell_list(cl_kw, ndev * (n_cells + 1), ndev * combo_loc,
+                           combo_loc),
+        ghosts=ghosts,
+        cl_loc=(_cold_cell_list(cl_kw, ndev * (n_cells + 1), cap, cap_loc)
+                if overlap else None),
+        phys=phys)
+    rstate = ReuseState(inner=state, cache=cache)
+    # lay the cache out per the step's specs (prefix-expanded per subtree)
+    rspec = _reuse_state_spec(spec, axis_name, cl_kw, overlap)
+    is_p = lambda v: isinstance(v, P)
+    spec_def = jax.tree.structure(rspec, is_leaf=is_p)
+    specs = jax.tree.leaves(rspec, is_leaf=is_p)
+    parts = spec_def.flatten_up_to(rstate)
+    placed = [jax.device_put(sub, NamedSharding(mesh, p))
+              for p, sub in zip(specs, parts)]
+    return jax.tree.unflatten(spec_def, placed)
+
+
 @functools.lru_cache(maxsize=None)
 def make_rebalance(physics, cfg, mesh, *, axis_name="shards",
                    slab_axis: int = 0, bucket_cap: Optional[int] = None,
@@ -787,8 +1320,10 @@ def distribute(ps0: ParticleSet, physics, cfg, mesh, *,
         ndev_c = int(mesh.shape[col_axis])
         if fields:
             raise NotImplementedError(
-                "mesh fields on a 2-D device mesh need the pencil GridOps "
-                "(ROADMAP follow-on)")
+                "mesh fields on a true 2-D device mesh need the pencil "
+                "GridOps (ROADMAP follow-on); decompose field-carrying "
+                "physics as (ndev, 1) slabs or use apps/vortex.py's "
+                "pencil VIC step")
     else:
         ndev_r, ndev_c = int(mesh.shape[axis_name]), 1
     ndev = ndev_r * ndev_c

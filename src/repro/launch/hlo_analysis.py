@@ -50,7 +50,8 @@ _SKIP_BYTES_OPS = {
     "after-all", "partition-id", "replica-id", "add-dependency",
     "opt-barrier",
 }
-_CALLED = re.compile(r"(?:body|condition|to_apply|calls|branch_computations)="
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls|branch_computations"
+                     r"|true_computation|false_computation)="
                      r"(\{[^}]*\}|%?[\w\.\-]+)")
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _DOT_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
@@ -398,6 +399,76 @@ def all_to_all_report(text: str) -> Dict[str, object]:
         "ops": out,
         "n_all_to_all": sum(int(o["count"]) for o in out),
         "total_wire_bytes": sum(o["wire_bytes"] for o in out),
+        "max_wire_bytes": max((o["wire_bytes"] / o["count"]
+                               for o in out if o["count"]), default=0.0),
+    }
+
+
+def collective_permute_report(text: str) -> Dict[str, object]:
+    """Enumerate every ``collective-permute`` in the module, trip-scaled,
+    with the *wire* bytes each one moves per device.
+
+    Unlike all-to-all, a ring permute keeps nothing at home — every device
+    ships its full buffer to a peer — so wire = count · result_bytes with
+    no ``(g-1)/g`` factor. Each entry also carries ``conditional``: whether
+    the op is reached through a ``conditional`` computation. The walk is a
+    static path-sum (every branch of a cond counts once), so the split lets
+    callers price a guarded slow path — e.g. the reuse engine's rebuild
+    branch — separately from its always-run property-update exchange:
+    an update step pays only the unconditional bytes, a rebuild step pays
+    unconditional + conditional. Returns per-op entries
+    ``{name, count, result_bytes, wire_bytes, conditional}``, their
+    ``total_wire_bytes``, the ``unconditional_wire_bytes`` /
+    ``conditional_wire_bytes`` split, and ``max_wire_bytes``."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n].ops)) if comps else ""
+    out: List[Dict[str, object]] = []
+
+    def walk(name: str, mult: float, stack: frozenset, in_cond: bool):
+        comp = comps.get(name)
+        if comp is None or name in stack:
+            return
+        sub = stack | {name}
+        for op in comp.ops:
+            base = op.opname.replace("-start", "")
+            if base == "collective-permute" and not op.opname.endswith("-done"):
+                rb = float(_nbytes(op.result_shapes))
+                out.append({"name": op.name, "count": mult,
+                            "result_bytes": rb, "wire_bytes": mult * rb,
+                            "conditional": in_cond})
+            called = _CALLED.findall(op.rhs)
+            names: List[str] = []
+            for c in called:
+                if c.startswith("{"):
+                    names.extend(x.strip().lstrip("%")
+                                 for x in c[1:-1].split(",") if x.strip())
+                else:
+                    names.append(c.lstrip("%"))
+            if not names:
+                continue
+            if op.opname == "while":
+                tm = _TRIP.search(op.rhs)
+                m2 = mult * (float(tm.group(1)) if tm else 1.0)
+            elif op.opname in ("call", "conditional", "async-start",
+                               "custom-call", "fusion"):
+                m2 = mult
+            else:
+                continue
+            child_cond = in_cond or op.opname == "conditional"
+            for nm in names:
+                walk(nm, m2, sub, child_cond)
+
+    walk(entry, 1.0, frozenset(), False)
+    uncond = sum(o["wire_bytes"] for o in out if not o["conditional"])
+    cond = sum(o["wire_bytes"] for o in out if o["conditional"])
+    return {
+        "entry": entry,
+        "ops": out,
+        "n_collective_permute": sum(int(o["count"]) for o in out),
+        "total_wire_bytes": uncond + cond,
+        "unconditional_wire_bytes": uncond,
+        "conditional_wire_bytes": cond,
         "max_wire_bytes": max((o["wire_bytes"] / o["count"]
                                for o in out if o["count"]), default=0.0),
     }

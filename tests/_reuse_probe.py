@@ -1,0 +1,124 @@
+"""No-missed-pairs oracle fixture for the reuse engine (ISSUE 10).
+
+One probe physics shared by the tier-1 serial oracle
+(tests/test_simulation.py) and the 8-device suite
+(tests/distributed/test_dist_reuse.py): constant-velocity particles whose
+pair pass counts neighbors strictly inside ``r_cut`` into an ``nc`` prop,
+so "is the pair present?" is directly observable per step. Every number is
+an fp32-exact power-of-two sum, so the skin/2 boundary is hit *exactly* —
+``moved_beyond``'s strict ``>`` must not fire at displacement == skin/2
+and must fire one step later.
+
+Two scenarios (separate systems — the tripwire is a global pmax, so a fast
+pair would wreck the slow pair's cadence):
+
+* ``"boundary"`` — pair A-B straddling the x=2.0 slab boundary (device 3|4
+  on 8 slabs) at separation ``rc + skin - 2^-7``, closing at 2^-6 per
+  particle per step. After the cold rebuild anchors them, 4 update steps
+  put the displacement at exactly skin/2 (no trip) while the pair enters
+  ``r_cut`` at step 4 — served from the *cached* structure — and step 6 is
+  the first legal trip. Expected stale cadence over 6 steps:
+  [1, 0, 0, 0, 0, 1].
+* ``"fast"`` — pair C-D starting 1.0 apart (≥2 anchor cells), closing at
+  2^-4 per particle per step, in contact at steps {7, 8, 9}. Under
+  ``reuse="skin"`` the tripwire rebuilds before every contact step, so no
+  contact is missed; under ``reuse="update"`` (tripwire ignored — the HLO
+  accounting mode) the anchored cells never become neighbors and every
+  contact is MISSED. The miss is what the tripwire prevents.
+
+8 stationary background particles (one per slab, on a lane > r_cut from
+both pair lanes) keep every device populated without touching ``nc``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import particles as P
+from repro.core import simulation as SIM
+
+RC = 0.25
+SKIN = 0.125
+BOX = 4.0                 # 8 slabs of 0.5; r_g = rc + skin = 0.375 < 0.5
+STEP_AB = 0.015625        # 2^-6: 4 update steps == skin/2 == 0.0625 exactly
+SEP_AB = 0.3671875        # rc + skin - 2^-7
+STEP_CD = 0.0625          # 2^-4 (== skin/2 per step)
+SEP_CD = 1.0
+DY_CD = 0.0625            # lane offset so the crossing never hits r2 == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeCfg:
+    cell_cap: int = 8
+
+
+def physics(cfg: ProbeCfg) -> SIM.PhysicsSpec:
+    """Contact-counting probe: advance drifts x by the constant ``u`` prop,
+    the pair body emits 1 per candidate (the engine's cutoff mask keeps
+    only ``1e-12 < r2 < rc^2``), finish stores the per-particle sum as the
+    ``nc`` prop."""
+    def advance(ps, red, extras):
+        return ps.replace(x=jnp.where(ps.valid[:, None],
+                                      ps.x + ps.props["u"], ps.x))
+
+    def finish(ctx):
+        ps = ctx.ps
+        nc = ctx.pair["nc"][: ps.capacity]
+        return ps.with_prop("nc", jnp.where(ps.valid, nc, 0.0)), {}, 0
+
+    return SIM.PhysicsSpec(
+        name="reuse_probe", box_lo=(0.0, 0.0), box_hi=(BOX, BOX),
+        periodic=(True, True), r_cut=RC, cell_cap=cfg.cell_cap,
+        pair_out={"nc": "scalar"},
+        make_body=lambda: lambda dx, r2, ok, wi, wj:
+            {"nc": jnp.ones_like(r2)},
+        pair_props=(), ghost_props=(),
+        advance=advance, finish=finish,
+        bucket_cap=16, ghost_cap=16)
+
+
+def make_ps(scenario: str, capacity: int = 64) -> P.ParticleSet:
+    """Probe pair (slots 0, 1) + 8 stationary background (slots 2..9)."""
+    if scenario == "boundary":
+        pair = [(2.0 - SEP_AB / 2, 2.0), (2.0 + SEP_AB / 2, 2.0)]
+        u = [(STEP_AB, 0.0), (-STEP_AB, 0.0)]
+    elif scenario == "fast":
+        pair = [(1.5, 1.0), (1.5 + SEP_CD, 1.0 + DY_CD)]
+        u = [(STEP_CD, 0.0), (-STEP_CD, 0.0)]
+    else:
+        raise ValueError(scenario)
+    bg = [(0.25 + 0.5 * k, 3.0) for k in range(8)]
+    x = np.asarray(pair + bg, np.float32)
+    uu = np.asarray(u + [(0.0, 0.0)] * 8, np.float32)
+    return P.from_positions(
+        jnp.asarray(x), capacity=capacity,
+        props={"u": jnp.asarray(uu)},
+        prop_specs={"nc": ((), jnp.float32)})
+
+
+def pair_sep(scenario: str, k: int) -> float:
+    """Exact fp32 pair distance after ``k`` steps."""
+    if scenario == "boundary":
+        return abs(SEP_AB - 2.0 * k * STEP_AB)
+    dx = SEP_CD - 2.0 * k * STEP_CD
+    return float(np.sqrt(np.float32(dx) ** 2 + np.float32(DY_CD) ** 2))
+
+
+def true_nc(scenario: str, k: int) -> float:
+    """Ground-truth ``nc`` of each probe-pair member after ``k`` steps."""
+    return 1.0 if pair_sep(scenario, k) < RC else 0.0
+
+
+def boundary_cadence(n_steps: int):
+    """Expected ``StepFlags.stale`` sequence for the boundary scenario:
+    cold rebuild, then a trip exactly when displacement exceeds skin/2 —
+    first at 5 update steps (4 sit at exactly skin/2)."""
+    out, anchor = [], None
+    for k in range(1, n_steps + 1):
+        trip = anchor is None or (k - anchor) * STEP_AB > SKIN / 2
+        out.append(1 if trip else 0)
+        if trip:
+            anchor = k
+    return out

@@ -1,0 +1,283 @@
+"""Skin-amortized ghost reuse on 8 devices (ISSUE 10, DESIGN.md §14).
+
+Four layers of the two-speed cadence, each pinned against an oracle:
+
+  * trajectory equivalence — ``reuse="skin"`` reproduces the every-step
+    engine on the MD and SPH workloads through mixed rebuild/update
+    cadence (matched by particle id: rebuilds re-permute slots);
+  * the no-missed-pairs oracle — fp32-exact constant-velocity probes
+    (tests/_reuse_probe.py) drive displacement to exactly skin/2: the
+    strict tripwire must NOT fire there, the pair entering ``r_cut``
+    must be served from the *cached* structure, and one step later the
+    rebuild must fire — serial and 8-device cadences identical. The
+    ``"fast"`` scenario proves the tripwire is load-bearing: with it
+    (``reuse="skin"``) no contact is ever missed; with it disabled
+    (``reuse="update"``) every contact step is missed.
+  * DEM contact-cache carry — the serial-only PR 5 contact cache now
+    rides distributed update steps (stable slots) and re-pins its build
+    anchor after a rebuild;
+  * frozen boundaries — 2-D pencil meshes fall back to the every-step
+    path under an inert cache (``stale`` = 1 throughout), and the
+    ``mesh_props``/``fields`` NotImplementedError contracts name the
+    slab workaround.
+"""
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import _reuse_probe as RP
+from benchmarks import dist_common as DC
+from repro.apps import dem, md, sph
+from repro.core import runtime as RT
+from repro.core import simulation as SIM
+
+NDEV = 8
+TOL = 1e-5
+AXES = ("rows", "cols")
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return DC.make_submesh(NDEV)
+
+
+@pytest.fixture(scope="module")
+def mesh24():
+    return RT.make_mesh((2, 4), AXES)
+
+
+def _by_id(ps, prop=None):
+    val = np.asarray(ps.valid)
+    ids = np.asarray(ps.props["id"])[val]
+    order = np.argsort(ids)
+    arr = np.asarray(ps.x if prop is None else ps.props[prop])[val]
+    return arr[order]
+
+
+# --------------------------------------------------------------------------
+# Trajectory equivalence vs the every-step engine (MD + SPH)
+# --------------------------------------------------------------------------
+
+def test_md_reuse_matches_everystep(mesh8):
+    cfg = dataclasses.replace(DC.md_config(n_per_side=6, sigma=0.06),
+                              cell_cap=64)
+    state0 = DC.md_distributed_start(mesh8, cfg, NDEV, cap_per_dev=64)
+    step_full = SIM.make_sim_step(md.physics, cfg, mesh8, axis_name=DC.AXIS)
+    st = state0
+    for _ in range(12):
+        st, flags, _ = step_full(st, {})
+        assert int(flags.any()) == 0
+    x_ref = _by_id(st.ps)
+
+    for mode, overlap in (("skin", True), ("skin", False)):
+        step_r = SIM.make_sim_step(md.physics, cfg, mesh8,
+                                   axis_name=DC.AXIS, reuse=mode,
+                                   overlap=overlap)
+        rs = SIM.reuse_state(state0, md.physics, cfg, mesh8,
+                             axis_name=DC.AXIS, overlap=overlap)
+        stales = []
+        for _ in range(12):
+            rs, flags, _ = step_r(rs, {})
+            assert int(flags.any()) == 0, jax.tree.map(int, flags)
+            stales.append(int(flags.stale))
+        err = np.abs(_by_id(rs.inner.ps) - x_ref).max()
+        assert err <= TOL, (mode, overlap, err)
+        assert stales[0] == 1, "cold cache must force the full path"
+        assert 0 in stales, "no update step ever ran — nothing amortized"
+
+
+def test_sph_reuse_matches_everystep(mesh8):
+    cfg = DC.sph_config()
+    state0, _ = DC.sph_distributed_start(mesh8, cfg, NDEV)
+    ex = lambda i: {"euler": jnp.asarray(i % cfg.verlet_reset == 0)}
+    step_full = SIM.make_sim_step(sph.physics, cfg, mesh8, axis_name=DC.AXIS)
+    st = state0
+    for i in range(8):
+        st, flags, _ = step_full(st, ex(i))
+        assert int(flags.any()) == 0
+
+    step_r = SIM.make_sim_step(sph.physics, cfg, mesh8, axis_name=DC.AXIS,
+                               reuse="skin")
+    rs = SIM.reuse_state(state0, sph.physics, cfg, mesh8, axis_name=DC.AXIS)
+    stales = []
+    for i in range(8):
+        rs, flags, _ = step_r(rs, ex(i))
+        assert int(flags.any()) == 0, jax.tree.map(int, flags)
+        stales.append(int(flags.stale))
+    err = np.abs(_by_id(rs.inner.ps) - _by_id(st.ps)).max()
+    assert err <= TOL, err
+    assert 0 in stales, "no update step ever ran — nothing amortized"
+
+
+# --------------------------------------------------------------------------
+# No-missed-pairs oracle (the acceptance criterion): serial ≡ 8-device
+# --------------------------------------------------------------------------
+
+def _run_probe(scenario, n_steps, reuse, mesh=None):
+    """Run the probe under the reuse engine; returns (stales, nc_pair)
+    where nc_pair[k] is the probe pair's nc after step k+1 (by id on a
+    mesh, by slot serially — the probe pair is slots/ids 0 and 1)."""
+    cfg = RP.ProbeCfg()
+    ps0 = RP.make_ps(scenario)
+    if mesh is None:
+        state0 = SIM.serial_state(ps0, RP.physics, cfg)
+        step = SIM.make_sim_step(RP.physics, cfg, reuse=reuse, skin=RP.SKIN)
+        rs = SIM.reuse_state(state0, RP.physics, cfg, skin=RP.SKIN)
+        grab = lambda ps: np.asarray(ps.props["nc"])[:2]
+    else:
+        state0 = SIM.distribute(ps0, RP.physics, cfg, mesh,
+                                axis_name=DC.AXIS, cap_per_dev=8)
+        step = SIM.make_sim_step(RP.physics, cfg, mesh, axis_name=DC.AXIS,
+                                 reuse=reuse, skin=RP.SKIN)
+        rs = SIM.reuse_state(state0, RP.physics, cfg, mesh,
+                             axis_name=DC.AXIS, skin=RP.SKIN)
+        grab = lambda ps: _by_id(ps, "nc")[:2]
+    stales, nc = [], []
+    for _ in range(n_steps):
+        rs, flags, _ = step(rs, {})
+        assert int(flags.any()) == 0, jax.tree.map(int, flags)
+        stales.append(int(flags.stale))
+        pair = grab(rs.inner.ps)
+        assert pair[0] == pair[1]       # symmetric contact
+        nc.append(float(pair[0]))
+    return stales, nc
+
+
+@pytest.mark.parametrize("where", ["serial", "dist"])
+def test_skin_boundary_oracle(where, mesh8):
+    """Drive the probe pair to exactly skin/2 displacement: the pair is
+    inside r_cut at steps 4-5 and MUST be found from the cached structure
+    (stale == 0 there); the rebuild fires at step 6, not earlier."""
+    n = 6
+    stales, nc = _run_probe("boundary", n, "skin",
+                            mesh8 if where == "dist" else None)
+    assert stales == RP.boundary_cadence(n) == [1, 0, 0, 0, 0, 1]
+    want = [RP.true_nc("boundary", k) for k in range(1, n + 1)]
+    assert nc == want, (nc, want)
+    # the load-bearing claim: contact exists before the first re-trip
+    assert want[3] == 1.0 and stales[3] == 0
+
+
+@pytest.mark.parametrize("where", ["serial", "dist"])
+def test_fast_pair_tripwire_prevents_miss(where, mesh8):
+    """Fast approach (2 anchor cells per contact window): with the
+    tripwire, every contact step is served; with it disabled
+    (reuse="update"), the stale binning misses every contact — the miss
+    the stale flag exists to prevent."""
+    n = 10
+    mesh = mesh8 if where == "dist" else None
+    want = [RP.true_nc("fast", k) for k in range(1, n + 1)]
+    assert 1.0 in want
+
+    stales, nc = _run_probe("fast", n, "skin", mesh)
+    assert nc == want, (nc, want)
+    assert sum(stales) > 1, "fast movers must re-trip the tripwire"
+
+    _, nc_u = _run_probe("fast", n, "update", mesh)
+    missed = [k for k in range(n) if want[k] == 1.0 and nc_u[k] == 0.0]
+    assert missed, "tripwire-off control failed to demonstrate the miss"
+
+
+# --------------------------------------------------------------------------
+# DEM distributed contact cache (satellite 1)
+# --------------------------------------------------------------------------
+
+def test_dem_contact_cache_carried_and_repinned(mesh8):
+    cfg = DC.dem_config()
+    ps0 = DC.dem_settled_start(cfg)
+    state0 = DC.dem_distributed_start(mesh8, cfg, ps0)
+    step_full = SIM.make_sim_step(dem.physics, cfg, mesh8, axis_name=DC.AXIS)
+    st = state0
+    n = 20
+    for _ in range(n):
+        st, flags, _ = step_full(st, {})
+        assert int(flags.any()) == 0
+
+    step_r = SIM.make_sim_step(dem.physics, cfg, mesh8, axis_name=DC.AXIS,
+                               reuse="skin", skin=cfg.skin)
+    rs = SIM.reuse_state(state0, dem.physics, cfg, mesh8, axis_name=DC.AXIS,
+                         skin=cfg.skin)
+    stales, xb_trace = [], []
+    for _ in range(n):
+        rs, flags, _ = step_r(rs, {})
+        assert int(flags.any()) == 0, jax.tree.map(int, flags)
+        stales.append(int(flags.stale))
+        xb_trace.append(np.asarray(rs.cache.phys["ct_xb"]))
+        assert bool(np.asarray(rs.cache.phys["ct_ok"]).all()), \
+            "contact cache went cold mid-run"
+    # equivalence through carried contacts (tangential springs included)
+    err = np.abs(_by_id(rs.inner.ps) - _by_id(st.ps)).max()
+    assert err <= TOL, err
+    assert 0 in stales, "no update step — contact cache never carried"
+    # re-pin after rebuild: the first engine rebuild after an update run
+    # re-anchors the contact build positions
+    upd = stales.index(0)
+    rebuilds = [k for k in range(upd + 1, n) if stales[k] == 1]
+    if rebuilds:  # settled grains may coast the whole window without a trip
+        k = rebuilds[0]
+        assert not np.array_equal(xb_trace[k], xb_trace[k - 1]), \
+            "rebuild did not re-pin ct_xb"
+    # contact slots pinned while stable: between consecutive update steps
+    # the cached build anchor is bitwise unchanged unless the DEM's own
+    # skin criterion re-pinned it — never scrambled by slot churn
+    for k in range(1, n):
+        if stales[k] == 0 and stales[k - 1] == 0:
+            same = np.array_equal(xb_trace[k], xb_trace[k - 1])
+            moved = np.abs(xb_trace[k] - xb_trace[k - 1]).max()
+            assert same or moved < cfg.skin, "anchor scrambled, not re-pinned"
+
+
+# --------------------------------------------------------------------------
+# Frozen boundaries (satellite 2): 2-D fallback + NotImplementedError
+# --------------------------------------------------------------------------
+
+def test_reuse_2d_mesh_falls_back_inert(mesh24):
+    """reuse on a true 2-D pencil mesh degrades to the every-step path:
+    same trajectory, stale == 1 on every step (nothing cached)."""
+    cfg = dataclasses.replace(DC.md_config(n_per_side=6, sigma=0.06),
+                              cell_cap=64)
+    ps0, _ = DC.md_serial_start(cfg)
+    kw = dict(axis_name=AXES, cap_per_dev=128)
+    state0 = SIM.distribute(ps0, md.physics, cfg, mesh24, **kw)
+    step2d = SIM.make_sim_step(md.physics, cfg, mesh24, axis_name=AXES)
+    step_r = SIM.make_sim_step(md.physics, cfg, mesh24, axis_name=AXES,
+                               reuse="skin")
+    rs = SIM.reuse_state(state0, md.physics, cfg, mesh24, axis_name=AXES)
+    st = state0
+    for _ in range(4):
+        st, flags, _ = step2d(st, {})
+        assert int(flags.any()) == 0
+        rs, rflags, _ = step_r(rs, {})
+        assert int(rflags.any()) == 0
+        assert int(rflags.stale) == 1, "inert fallback must report stale"
+    assert np.abs(_by_id(rs.inner.ps) - _by_id(st.ps)).max() <= TOL
+
+
+def _md_physics_with_mesh(cfg):
+    return dataclasses.replace(md.physics(cfg), mesh_props=("rho",))
+
+
+def test_mesh_props_2d_contract(mesh24):
+    cfg = DC.md_config(n_per_side=6, sigma=0.06)
+    with pytest.raises(NotImplementedError,
+                       match=r"decompose mesh-carrying physics as "
+                             r"\(ndev, 1\)"):
+        SIM.make_sim_step(_md_physics_with_mesh, cfg, mesh24,
+                          axis_name=AXES)
+
+
+def test_fields_2d_contract(mesh24):
+    cfg = DC.md_config(n_per_side=6, sigma=0.06)
+    ps0, _ = DC.md_serial_start(cfg)
+    with pytest.raises(NotImplementedError,
+                       match=r"decompose field-carrying physics as "
+                             r"\(ndev, 1\) slabs"):
+        SIM.distribute(ps0, md.physics, cfg, mesh24, axis_name=AXES,
+                       fields={"rho": jnp.zeros((32, 8, 8))})

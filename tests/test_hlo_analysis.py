@@ -127,3 +127,57 @@ ENTRY %main (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
     a = HA.analyze(text)
     assert a["flops"] == 2 * 8 * 32 * 16
     assert a["collectives"]["all-to-all"] == 2 * 8 * 16 * 4
+
+
+def test_collective_permute_report_matches_analyze(hlo_overlap,
+                                                   hlo_blocking):
+    """On the conditional-free distributed-step fixtures the per-op report
+    must reconcile exactly with analyze()'s aggregate, with every byte
+    unconditional (no reuse branch in these captures)."""
+    for text in (hlo_overlap, hlo_blocking):
+        rep = HA.collective_permute_report(text)
+        assert rep["total_wire_bytes"] == 26624.0
+        assert rep["unconditional_wire_bytes"] == 26624.0
+        assert rep["conditional_wire_bytes"] == 0.0
+        assert rep["n_collective_permute"] == 4       # 2x x + 2x valid
+        assert all(not o["conditional"] for o in rep["ops"])
+
+
+def test_collective_permute_report_conditional_split():
+    """Synthetic reuse-shaped module: one always-run exchange in the entry
+    (the ghost_update payload), a conditional whose false branch (update)
+    ships one more buffer and whose true branch (rebuild) ships two. The
+    report must attribute branch bytes as conditional — the bench_reuse
+    gate prices update steps (unconditional) against rebuild steps
+    (unconditional + conditional)."""
+    text = """\
+HloModule synthcond
+
+%update (u0: f32[4,3]) -> f32[4,3] {
+  %u0 = f32[4,3]{1,0} parameter(0)
+  ROOT %cp.u = f32[4,3]{1,0} collective-permute(f32[4,3]{1,0} %u0), source_target_pairs={{0,1},{1,0}}
+}
+
+%rebuild (r0: f32[4,3]) -> f32[4,3] {
+  %r0 = f32[4,3]{1,0} parameter(0)
+  %cp.r1 = f32[4,3]{1,0} collective-permute(f32[4,3]{1,0} %r0), source_target_pairs={{0,1},{1,0}}
+  ROOT %cp.r2 = f32[4,3]{1,0} collective-permute(f32[4,3]{1,0} %cp.r1), source_target_pairs={{0,1},{1,0}}
+}
+
+ENTRY %main (p: pred[], x: f32[4,3]) -> f32[4,3] {
+  %p = pred[] parameter(0)
+  %x = f32[4,3]{1,0} parameter(1)
+  %cp.main = f32[4,3]{1,0} collective-permute(f32[4,3]{1,0} %x), source_target_pairs={{0,1},{1,0}}
+  ROOT %cond = f32[4,3]{1,0} conditional(pred[] %p, f32[4,3]{1,0} %cp.main, f32[4,3]{1,0} %cp.main), true_computation=%rebuild, false_computation=%update
+}
+"""
+    rep = HA.collective_permute_report(text)
+    buf = 4 * 3 * 4                                    # f32[4,3]
+    assert rep["unconditional_wire_bytes"] == buf      # cp.main
+    assert rep["conditional_wire_bytes"] == 3 * buf    # update + 2x rebuild
+    assert rep["total_wire_bytes"] == 4 * buf
+    assert rep["n_collective_permute"] == 4
+    assert rep["max_wire_bytes"] == buf
+    by_cond = {o["name"]: o["conditional"] for o in rep["ops"]}
+    assert by_cond == {"cp.main": False, "cp.u": True,
+                       "cp.r1": True, "cp.r2": True}

@@ -180,3 +180,16 @@ def test_distributed_sph_with_dlb():
     rebalances and the fluid stays consistent (no overflow, finite)."""
     run_distributed_pytest("tests/distributed/test_dist_sph_dlb.py",
                            timeout=1200)
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_distributed_reuse_engine():
+    """Skin-amortized ghost reuse (DESIGN.md §14): reuse="skin" trajectory
+    equivalence for MD (overlap on/off) and SPH, the skin/2 no-missed-pairs
+    oracle (serial ≡ 8-device, with reuse="update" as the tripwire-off
+    negative control), DEM contact-cache carry/re-pin across update steps,
+    the inert 2-D fallback, and the pinned 2-D NotImplementedError
+    contracts."""
+    run_distributed_pytest("tests/distributed/test_dist_reuse.py",
+                           timeout=1500, min_passed=9)

@@ -230,3 +230,97 @@ def test_dem_cached_stepper_rebuilds_after_skin_crossing():
         ps, flags, cache = cached(ps, cache)
     assert not np.array_equal(xb0, np.asarray(cache["ct_xb"])), \
         "build positions never re-pinned despite large motion"
+
+
+# --------------------------------------------------------------------------
+# Skin-amortized reuse engine — serial path (ISSUE 10, DESIGN.md §14)
+# --------------------------------------------------------------------------
+
+import _reuse_probe as RP
+
+
+def test_reuse_serial_matches_everystep_md():
+    """Serial ``reuse="skin"`` reproduces the every-step engine through a
+    hot mixed rebuild/update cadence (thermal velocities re-trip the
+    tripwire mid-run)."""
+    cfg = md.MDConfig(n_per_side=5, sigma=0.1, dt=0.002, cell_cap=64)
+    ps0 = md.init_particles(cfg)
+    key = jax.random.PRNGKey(2)
+    v = 0.5 * jax.random.normal(key, ps0.x.shape)
+    ps0 = ps0.with_prop("v", jnp.where(ps0.valid[:, None],
+                                       v - jnp.mean(v, 0, keepdims=True),
+                                       0.0))
+    ps0, _ = md.compute_forces(ps0, cfg)
+
+    step0 = SIM.make_sim_step(md.physics, cfg)
+    st = SIM.serial_state(ps0, md.physics, cfg)
+    for _ in range(10):
+        st, flags, _ = step0(st, {})
+        assert int(flags.any()) == 0
+
+    step_r = SIM.make_sim_step(md.physics, cfg, reuse="skin")
+    rs = SIM.reuse_state(SIM.serial_state(ps0, md.physics, cfg),
+                         md.physics, cfg)
+    stales = []
+    for _ in range(10):
+        rs, flags, _ = step_r(rs, {})
+        assert int(flags.any()) == 0
+        stales.append(int(flags.stale))
+    err = np.abs(np.asarray(rs.inner.ps.x) - np.asarray(st.ps.x))[
+        np.asarray(st.ps.valid)].max()
+    assert err <= 1e-5, err
+    assert stales[0] == 1 and 0 in stales
+
+
+def test_reuse_skin_validation():
+    cfg = md.MDConfig(n_per_side=3)
+    with pytest.raises(ValueError, match="skin"):
+        SIM.make_sim_step(md.physics, cfg, reuse="skin",
+                          skin=2.0 * cfg.r_cut)
+    with pytest.raises(ValueError, match="reuse"):
+        SIM.make_sim_step(md.physics, cfg, reuse="verlet")
+
+
+def _run_reuse_probe_serial(scenario, n_steps, reuse):
+    cfg = RP.ProbeCfg()
+    step = SIM.make_sim_step(RP.physics, cfg, reuse=reuse, skin=RP.SKIN)
+    rs = SIM.reuse_state(SIM.serial_state(RP.make_ps(scenario),
+                                          RP.physics, cfg),
+                         RP.physics, cfg, skin=RP.SKIN)
+    stales, nc = [], []
+    for _ in range(n_steps):
+        rs, flags, _ = step(rs, {})
+        assert int(flags.any()) == 0
+        stales.append(int(flags.stale))
+        pair = np.asarray(rs.inner.ps.props["nc"])[:2]
+        assert pair[0] == pair[1]
+        nc.append(float(pair[0]))
+    return stales, nc
+
+
+def test_reuse_serial_skin_boundary_oracle():
+    """The acceptance oracle, serial leg (the 8-device leg lives in
+    tests/distributed/test_dist_reuse.py): displacement driven to exactly
+    skin/2 — the strict tripwire must not fire there, the pair entering
+    r_cut at step 4 must be served from the cached binning, and the
+    rebuild must fire at step 6."""
+    n = 6
+    stales, nc = _run_reuse_probe_serial("boundary", n, "skin")
+    assert stales == RP.boundary_cadence(n) == [1, 0, 0, 0, 0, 1]
+    want = [RP.true_nc("boundary", k) for k in range(1, n + 1)]
+    assert nc == want, (nc, want)
+    assert want[3] == 1.0 and stales[3] == 0   # contact BEFORE the re-trip
+
+
+def test_reuse_serial_fast_pair_tripwire_prevents_miss():
+    """Negative control: with the tripwire disabled (reuse="update") the
+    fast pair's contacts are missed by the stale binning — the miss
+    reuse="skin" provably prevents."""
+    n = 10
+    want = [RP.true_nc("fast", k) for k in range(1, n + 1)]
+    stales, nc = _run_reuse_probe_serial("fast", n, "skin")
+    assert nc == want, (nc, want)
+    assert sum(stales) > 1
+    _, nc_u = _run_reuse_probe_serial("fast", n, "update")
+    assert [k for k in range(n) if want[k] == 1.0 and nc_u[k] == 0.0], \
+        "tripwire-off control failed to demonstrate the miss"

@@ -45,6 +45,19 @@ REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
     tests/distributed/test_dist_pencil.py::test_pencil_poisson_slab_degenerate_bitwise \
     "tests/test_precision.py::test_sph_density_only_bf16x[jnp]" \
     > /dev/null
+# skin-amortized reuse oracles (PR 10): the skin/2 no-missed-pairs oracle
+# (serial + 8-device legs), the tripwire-off negative control, DEM contact
+# carry/re-pin, the inert 2-D fallback + pinned contracts, and the HLO
+# conditional wire-byte split the bench gate counts with
+REPRO_DISTRIBUTED=1 python -m pytest -q -p no:cacheprovider --collect-only \
+    "tests/distributed/test_dist_reuse.py::test_skin_boundary_oracle[dist]" \
+    "tests/distributed/test_dist_reuse.py::test_fast_pair_tripwire_prevents_miss[dist]" \
+    tests/distributed/test_dist_reuse.py::test_dem_contact_cache_carried_and_repinned \
+    tests/distributed/test_dist_reuse.py::test_reuse_2d_mesh_falls_back_inert \
+    tests/distributed/test_dist_reuse.py::test_mesh_props_2d_contract \
+    tests/test_simulation.py::test_reuse_serial_skin_boundary_oracle \
+    tests/test_hlo_analysis.py::test_collective_permute_report_conditional_split \
+    > /dev/null
 
 echo "== examples/vortex_ring.py (1 step) =="
 python examples/vortex_ring.py --steps 1
@@ -66,5 +79,8 @@ python benchmarks/bench_overlap.py
 
 echo "== pencil transpose gates (HLO wire bytes + equivalence + wall) =="
 python benchmarks/bench_pencil.py
+
+echo "== skin-amortized reuse gates (HLO wire split + equivalence + wall) =="
+python benchmarks/bench_reuse.py
 
 echo "smoke OK"
